@@ -1,0 +1,46 @@
+"""Paper Figure 3: SL vs SP x {LP, LPP, PJ(BFS-slot)} vs default.
+
+Reports per approach: mean relative runtime (vs default), mean modularity,
+mean fraction of disconnected communities — the table the paper uses to pick
+SP-BFS (here SP-PJ) as GSP-Louvain.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import dataset, row, timeit
+from repro.core import (
+    LouvainConfig, louvain, modularity, disconnected_communities,
+)
+
+APPROACHES = ["none", "sl-lp", "sl-lpp", "sl-pj", "sp-lp", "sp-lpp", "sp-pj"]
+
+
+def main():
+    graphs = dataset()
+    base_times = {}
+    agg = {a: dict(rel=[], q=[], frac=[], t=[]) for a in APPROACHES}
+    for gname, g in graphs.items():
+        for approach in APPROACHES:
+            cfg = LouvainConfig(split=approach)
+            t = timeit(lambda: louvain(g, cfg)[0])
+            C, _ = louvain(g, cfg)
+            q = float(modularity(g.src, g.dst, g.w, C))
+            det = disconnected_communities(g.src, g.dst, g.w, C, g.n_nodes)
+            if approach == "none":
+                base_times[gname] = t
+            rel = t / base_times[gname]
+            agg[approach]["rel"].append(rel)
+            agg[approach]["q"].append(q)
+            agg[approach]["frac"].append(float(det["fraction"]))
+            agg[approach]["t"].append(t)
+            row(f"fig3/{gname}/{approach}", t,
+                f"Q={q:.4f};disc_frac={float(det['fraction']):.4f};rel={rel:.2f}")
+    for a in APPROACHES:
+        row(f"fig3/mean/{a}", float(np.mean(agg[a]["t"])),
+            f"rel={np.mean(agg[a]['rel']):.3f};Q={np.mean(agg[a]['q']):.4f};"
+            f"disc_frac={np.mean(agg[a]['frac']):.5f}")
+
+
+if __name__ == "__main__":
+    main()

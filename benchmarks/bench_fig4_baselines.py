@@ -1,0 +1,73 @@
+"""Paper Figure 4: GSP-Louvain vs Leiden-style baselines.
+
+Offline stand-ins for the paper's comparators (documented substitution):
+  original/igraph Leiden -> our 'refine' driver (Leiden refinement slot,
+                            same modularity objective, JAX);
+  NetworKit Leiden       -> networkx.louvain_communities (sequential C/Py
+                            reference implementation);
+plus GVE-Louvain ('none') for the appendix A.3 comparison.
+Reports runtime, speedup of GSP-Louvain, modularity, disconnected fraction.
+"""
+from __future__ import annotations
+
+import time
+
+import networkx as nx
+import numpy as np
+
+from benchmarks.common import dataset, row, timeit
+from repro.core import (
+    LouvainConfig, louvain, modularity, disconnected_communities,
+)
+
+
+def _disc_frac_nx(nxg, comms):
+    disc = sum(
+        0 if nx.is_connected(nxg.subgraph(c)) else 1
+        for c in comms if len(c) > 0
+    )
+    return disc / max(len(comms), 1)
+
+
+def main():
+    graphs = dataset()
+    for gname, g in graphs.items():
+        nxg = g.to_networkx()
+        times = {}
+        # GSP-Louvain (ours)
+        for name, split in [("gsp-louvain", "sp-pj"),
+                            ("gve-louvain", "none"),
+                            ("leiden-refine", "refine")]:
+            cfg = LouvainConfig(split=split)
+            t = timeit(lambda: louvain(g, cfg)[0])
+            C, _ = louvain(g, cfg)
+            q = float(modularity(g.src, g.dst, g.w, C))
+            det = disconnected_communities(g.src, g.dst, g.w, C, g.n_nodes)
+            times[name] = t
+            row(f"fig4/{gname}/{name}", t,
+                f"Q={q:.4f};disc_frac={float(det['fraction']):.4f}")
+        # LPA baseline (paper §2: Raghavan et al.; known lower quality)
+        from repro.core.lpa import lpa_run
+
+        t = timeit(lambda: lpa_run(g)[0])
+        L, _ = lpa_run(g)
+        q = float(modularity(g.src, g.dst, g.w, L))
+        det = disconnected_communities(g.src, g.dst, g.w, L, g.n_nodes)
+        times["lpa"] = t
+        row(f"fig4/{gname}/lpa", t,
+            f"Q={q:.4f};disc_frac={float(det['fraction']):.4f}")
+        # sequential reference (networkx louvain)
+        t0 = time.perf_counter()
+        comms = nx.algorithms.community.louvain_communities(nxg, seed=0)
+        t_nx = time.perf_counter() - t0
+        q_nx = nx.algorithms.community.modularity(nxg, comms)
+        row(f"fig4/{gname}/networkx-louvain", t_nx,
+            f"Q={q_nx:.4f};disc_frac={_disc_frac_nx(nxg, comms):.4f}")
+        times["networkx-louvain"] = t_nx
+        for other in ["gve-louvain", "leiden-refine", "networkx-louvain"]:
+            row(f"fig4/{gname}/speedup_vs_{other}", times["gsp-louvain"],
+                f"x{times[other] / times['gsp-louvain']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

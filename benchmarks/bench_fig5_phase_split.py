@@ -1,0 +1,26 @@
+"""Paper Figure 5: phase split (local-move / split / aggregate / other) and
+pass split of GSP-Louvain per graph family."""
+from __future__ import annotations
+
+from benchmarks.common import dataset, row
+from repro.core import LouvainConfig, louvain_staged
+
+
+def main():
+    for gname, g in dataset().items():
+        C, stats = louvain_staged(g, LouvainConfig(split="sp-pj"))
+        ph = stats["phase_seconds"]
+        total = sum(ph.values()) or 1.0
+        fr = {k: v / total for k, v in ph.items()}
+        row(f"fig5/{gname}/phases", total,
+            f"local_move={fr['local_move']:.2f};split={fr['split']:.2f};"
+            f"aggregate={fr['aggregate']:.2f};other={fr['other']:.2f}")
+        ps = stats["pass_seconds"]
+        tot = sum(ps) or 1.0
+        first = ps[0] / tot
+        row(f"fig5/{gname}/passes", tot,
+            f"n_passes={stats['passes']};first_pass_frac={first:.2f}")
+
+
+if __name__ == "__main__":
+    main()

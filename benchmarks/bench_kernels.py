@@ -1,0 +1,47 @@
+"""Kernel microbenchmarks: Pallas (interpret) correctness-at-size + the XLA
+production path timing for the segment-reduce regime the paper lives in."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def main():
+    # sorted segment-sum (the local-move/aggregation workhorse)
+    for m, nseg, d in [(1 << 16, 4096, 1), (1 << 18, 1 << 14, 1),
+                       (1 << 16, 4096, 32)]:
+        ids = jnp.asarray(np.sort(RNG.integers(0, nseg, m)).astype(np.int32))
+        shape = (m,) if d == 1 else (m, d)
+        x = jnp.asarray(RNG.normal(size=shape).astype(np.float32))
+        fn = jax.jit(lambda x, ids: ref.segsum_sorted_ref(x, ids, nseg))
+        t = timeit(fn, x, ids)
+        row(f"kernels/segsum_sorted/m{m}_s{nseg}_d{d}", t,
+            f"GB_s={(m * d * 4) / t / 1e9:.2f}")
+
+    # unsorted segment-sum (Sigma recompute)
+    for n, nseg in [(1 << 16, 4096), (1 << 18, 1 << 12)]:
+        ids = jnp.asarray(RNG.integers(0, nseg, n).astype(np.int32))
+        x = jnp.asarray(RNG.normal(size=(n,)).astype(np.float32))
+        fn = jax.jit(lambda x, ids: ref.onehot_segsum_ref(x[:, None], ids, nseg))
+        t = timeit(fn, x, ids)
+        row(f"kernels/segsum_unsorted/n{n}_s{nseg}", t,
+            f"GB_s={(n * 4) / t / 1e9:.2f}")
+
+    # two-key sort (the local-move scan backbone)
+    for m in [1 << 16, 1 << 18]:
+        k1 = jnp.asarray(RNG.integers(0, 1 << 20, m).astype(np.int32))
+        k2 = jnp.asarray(RNG.integers(0, 1 << 20, m).astype(np.int32))
+        w = jnp.asarray(RNG.normal(size=m).astype(np.float32))
+        fn = jax.jit(lambda a, b, c: jax.lax.sort((a, b, c), num_keys=2))
+        t = timeit(fn, k1, k2, w)
+        row(f"kernels/sort2key/m{m}", t, f"Melem_s={m / t / 1e6:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Paper Table 1: dataset statistics + communities found by GSP-Louvain."""
+from __future__ import annotations
+
+from benchmarks.common import dataset, row, timeit
+from repro.core import LouvainConfig, louvain
+
+
+def main():
+    for gname, g in dataset().items():
+        n = int(g.n_nodes)
+        m = int(g.num_edges())
+        t = timeit(lambda: louvain(g, LouvainConfig())[0])
+        C, stats = louvain(g, LouvainConfig())
+        rate = m / t
+        row(f"table1/{gname}", t,
+            f"V={n};E={m};d_avg={m / n:.1f};comms={int(stats['n_communities'])};"
+            f"edges_per_s={rate:.3e}")
+
+
+if __name__ == "__main__":
+    main()

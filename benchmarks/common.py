@@ -1,0 +1,45 @@
+"""Shared benchmark fixtures: the laptop-scale analogue of paper Table 1.
+
+The paper's graphs (SuiteSparse, 25M-3.8B edges) are offline-unavailable;
+the suite mirrors the four families at a scale this container executes:
+
+  web-like     -> R-MAT power-law (LAW web crawls)
+  social       -> dense SBM (SNAP social networks)
+  road-like    -> 2-D grid (DIMACS road networks: deg ~2-4, huge diameter)
+  k-mer-like   -> ring of cliques chained sparsely (GenBank: deg ~2)
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows (run.py).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.graph import rmat_graph, sbm_graph, grid_graph, ring_of_cliques
+
+
+def dataset():
+    return {
+        "web_rmat": rmat_graph(scale=12, edge_factor=8, seed=1),
+        "soc_sbm": sbm_graph(n_nodes=2048, n_blocks=24, p_in=0.12,
+                             p_out=0.002, seed=2)[0],
+        "road_grid": grid_graph(64, 64),
+        "kmer_ring": ring_of_cliques(128, 6),
+    }
+
+
+def timeit(fn, *args, repeats=3, **kw):
+    fn(*args, **kw)  # compile
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def row(name: str, seconds: float, derived: str = ""):
+    print(f"{name},{seconds * 1e6:.1f},{derived}")

@@ -1,0 +1,45 @@
+"""Quickstart: GSP-Louvain end to end on a web-like graph.
+
+Runs plain parallel Louvain and GSP-Louvain on the same graph, shows the
+internally-disconnected communities the default leaves behind and that the
+Split-Pass approach removes them at equal quality — the paper's result in
+30 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+from repro.core import (
+    LouvainConfig, louvain, modularity, disconnected_communities,
+)
+from repro.graph import rmat_graph
+
+
+def main():
+    print("generating web-like R-MAT graph (2^13 vertices, ~65k edges)...")
+    g = rmat_graph(scale=13, edge_factor=8, seed=2)
+    print(f"  |V|={int(g.n_nodes)} |E|={int(g.num_edges())}\n")
+
+    for name, split in [("parallel Louvain (default)", "none"),
+                        ("GSP-Louvain (split-pass)", "sp-pj")]:
+        cfg = LouvainConfig(split=split)
+        louvain(g, cfg)  # compile
+        t0 = time.perf_counter()
+        C, stats = louvain(g, cfg)
+        C.block_until_ready()
+        dt = time.perf_counter() - t0
+        q = float(modularity(g.src, g.dst, g.w, C))
+        det = disconnected_communities(g.src, g.dst, g.w, C, g.n_nodes)
+        rate = int(g.num_edges()) / dt
+        print(f"{name}:")
+        print(f"  runtime          {dt * 1e3:8.1f} ms   "
+              f"({rate / 1e6:.1f} M edges/s)")
+        print(f"  modularity       {q:8.4f}")
+        print(f"  communities      {int(stats['n_communities']):8d}")
+        print(f"  disconnected     {int(det['n_disconnected']):8d}  "
+              f"(fraction {float(det['fraction']):.4f})")
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Scenario: batched LM serving with a rolling KV cache.
+
+Generates continuations for a batch of prompts through the same
+``decode_step`` that the decode_32k / long_500k dry-run cells lower at
+production scale (SWA rolling cache => O(window) memory at any context).
+
+  PYTHONPATH=src python examples/serve_lm.py --batch 4 --new-tokens 48
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Scenario: train a language model end to end with the full substrate
+(config registry -> data stream -> AdamW -> checkpoint/restore).
+
+Default is a CPU-friendly ~1M-param TinyLlama-family model for 300 steps on
+the Markov token stream; loss falls from ~ln(vocab) toward the ~ln(8)
+entropy floor.  ``--preset 100m`` selects a ~100M-param config (same code
+path; sized for a real accelerator).
+
+  PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+import argparse
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_spec
+from repro.launch.train import train_lm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--preset", choices=["smoke", "100m"], default="smoke")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    base = get_spec("tinyllama-1.1b").smoke
+    if args.preset == "100m":
+        cfg = dataclasses.replace(
+            base, n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+            d_head=64, d_ff=2048, vocab=32000, remat=True,
+            compute_dtype=jnp.bfloat16,
+        )
+    else:
+        cfg = dataclasses.replace(base, vocab=256)
+    ckpt = CheckpointManager(args.ckpt_dir, keep=2)
+    losses = train_lm(cfg, args.steps, args.batch, args.seq_len, ckpt,
+                      resume=True)
+    print(f"\nloss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"(entropy floor ~{2.08:.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Sharding-agnostic checkpointing with elastic restore."""
+from repro.checkpoint.store import (
+    save_checkpoint, restore_checkpoint, latest_step, CheckpointManager,
+)
+
+__all__ = [
+    "save_checkpoint", "restore_checkpoint", "latest_step", "CheckpointManager",
+]

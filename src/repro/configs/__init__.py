@@ -1,0 +1,4 @@
+"""Architecture configs (one module per assigned architecture)."""
+from repro.configs.base import ARCH_IDS, ArchSpec, get_spec, all_cells
+
+__all__ = ["ARCH_IDS", "ArchSpec", "get_spec", "all_cells"]

@@ -1,0 +1,75 @@
+"""Run-detection and renumbering primitives shared by all Louvain phases.
+
+The paper's per-thread hashtables (scanCommunities, Alg. 4) become
+sort + run-length segment reductions here: after sorting edge records by a
+composite key, equal keys form contiguous *runs*; a run is one hashtable
+entry.  Everything stays fixed-shape: runs are indexed by their position in
+``[0, m_cap)`` and unused run slots are masked.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+def sort_by_key2(k1, k2, *values):
+    """Stable sort of values by the composite key (k1, k2) via lax.sort."""
+    out = jax.lax.sort((k1, k2) + tuple(values), num_keys=2, is_stable=True)
+    return out
+
+
+def run_starts(*sorted_keys):
+    """Boolean flags marking the first element of each (k1, k2, ...) run."""
+    flags = jnp.zeros(sorted_keys[0].shape, dtype=bool).at[0].set(True)
+    neq = jnp.zeros(sorted_keys[0].shape[0] - 1, dtype=bool)
+    for k in sorted_keys:
+        neq = neq | (k[1:] != k[:-1])
+    return flags.at[1:].set(neq)
+
+
+def run_ids(starts):
+    """Run index per element, int32[m]; monotone, starts at 0."""
+    return jnp.cumsum(starts.astype(jnp.int32)) - 1
+
+
+def runs_reduce(sorted_w, rid, m_cap):
+    """Sum of values within each run -> float[m_cap] indexed by run id."""
+    return jax.ops.segment_sum(sorted_w, rid, num_segments=m_cap)
+
+
+def run_field(sorted_x, starts, rid, m_cap, fill):
+    """First element of each run for a sorted field; `fill` elsewhere."""
+    vals = jnp.where(starts, sorted_x, 0)
+    out = jax.ops.segment_sum(vals, rid, num_segments=m_cap)
+    n_runs = rid[-1] + 1
+    valid = jnp.arange(m_cap) < n_runs
+    return jnp.where(valid, out, fill), valid
+
+
+def renumber(labels, node_valid, nv):
+    """Dense renumbering of labels in [0, nv) (labels ARE vertex ids).
+
+    Labels of invalid vertices are collapsed into the ghost group (value
+    nv - 1); valid labels are always < nv - 1.  Presence-bitmap + exclusive
+    prefix-sum assigns ranks in label order — identical ids to the previous
+    full-sort formulation at ~8x fewer HBM passes (sort is ~25 passes over
+    [nv]; this is a scatter + cumsum + gather — §Perf C1).
+
+    Returns ``(dense int32[nv], n_communities int32)``: valid communities
+    get [0, n_communities); the ghost group maps to n_communities.
+    """
+    ghost = nv - 1
+    lab = jnp.where(node_valid, labels, ghost).astype(jnp.int32)
+    present = jnp.zeros(nv, jnp.int32).at[lab].set(1, mode="drop")
+    rank = jnp.cumsum(present) - present        # exclusive prefix
+    dense = rank[lab].astype(jnp.int32)
+    n_comms = rank[ghost]                       # #distinct valid labels
+    return dense, n_comms
+
+
+def count_communities(C, node_valid, nv):
+    """Number of distinct community ids among valid vertices."""
+    _, n = renumber(C, node_valid, nv)
+    return n

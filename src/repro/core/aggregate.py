@@ -1,0 +1,59 @@
+"""Aggregation phase (paper Algorithm 5), fixed-shape formulation.
+
+The OpenMP original builds two CSRs with atomics (community->vertices, then
+super-vertex adjacency via per-thread hashtables).  Here relabeled edges are
+sorted by ``(C[src], C[dst])``; each run of equal pairs is one super-edge
+whose weight is the run sum.  The output reuses the input's static edge
+capacity: run r's super-edge is written at slot r, ghost-padded beyond the
+last run, which preserves both the sort invariant and the ghost convention
+of :mod:`repro.graph.container`.
+
+Self-runs ``(c, c)`` become super-vertex self-loops carrying the community's
+total internal (directed) weight — exactly the invariant that keeps
+``sum_i K_i = 2m`` across passes (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import _segments as seg
+
+
+@partial(jax.jit, static_argnames=())
+def aggregate(src, dst, w, C_dense):
+    """Build the super-vertex graph.
+
+    Args:
+      src, dst, w: padded directed COO of the current graph.
+      C_dense: int32[nv] dense community ids in [0, n_comms); ghost and
+        padding vertices must already map to the ghost community (nv - 1 is
+        fine — anything >= n_comms that sorts last; callers use
+        ``_segments.renumber`` which guarantees this).
+
+    Returns:
+      (src', dst', w'): the super-vertex graph in the same capacities.
+    """
+    nv = C_dense.shape[0]
+    ghost = nv - 1
+    m_cap = src.shape[0]
+
+    valid = (src < ghost) & (w != 0.0)
+    e_src = jnp.where(valid, C_dense[src], ghost).astype(jnp.int32)
+    e_dst = jnp.where(valid, C_dense[dst], ghost).astype(jnp.int32)
+    e_w = jnp.where(valid, w, 0.0)
+
+    s_src, s_dst, s_w = seg.sort_by_key2(e_src, e_dst, e_w)
+    starts = seg.run_starts(s_src, s_dst)
+    rid = seg.run_ids(starts)
+    w_run = seg.runs_reduce(s_w, rid, m_cap)
+    src_run, run_valid = seg.run_field(s_src, starts, rid, m_cap, ghost)
+    dst_run, _ = seg.run_field(s_dst, starts, rid, m_cap, ghost)
+
+    keep = run_valid & (src_run < ghost)
+    out_src = jnp.where(keep, src_run, ghost).astype(jnp.int32)
+    out_dst = jnp.where(keep, dst_run, ghost).astype(jnp.int32)
+    out_w = jnp.where(keep, w_run, 0.0)
+    return out_src, out_dst, out_w

@@ -1,0 +1,52 @@
+"""Disconnected-community detection (paper Algorithm 6, adapted).
+
+The paper's detector BFS-explores each community from a representative and
+flags the community if unreached vertices remain.  Our adaptation reuses the
+split fixpoint: run component labeling restricted to communities
+(:func:`repro.core.split.split_labels`) and flag every community containing
+more than one distinct label.  Both formulations are deterministic and agree
+exactly — this is also the free-detection observation exploited by the SP
+driver (a pass's split already *is* the detector; see DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import _segments as seg
+from repro.core.split import split_labels
+
+
+@partial(jax.jit, static_argnames=("axis",))
+def disconnected_communities(src, dst, w, C, n_nodes, *, axis=None):
+    """Flags + counts of internally-disconnected communities.
+
+    Returns a dict with:
+      disconnected: bool[nv] per community id (dense ids not required),
+      n_disconnected: int32, n_communities: int32, fraction: f32.
+    """
+    nv = C.shape[0]
+    ghost = nv - 1
+    node_valid = jnp.arange(nv) < n_nodes
+
+    L, _ = split_labels(src, dst, w, C, mode="pj", axis=axis)
+    # count distinct (C, L) pairs per community: sort pairs, count run starts
+    c_key = jnp.where(node_valid, C, ghost).astype(jnp.int32)
+    l_key = jnp.where(node_valid, L, ghost).astype(jnp.int32)
+    s_c, s_l = jax.lax.sort((c_key, l_key), num_keys=2)
+    starts = seg.run_starts(s_c, s_l)
+    pieces = jax.ops.segment_sum(
+        jnp.where(starts & (s_c < ghost), 1, 0), s_c, num_segments=nv
+    )
+    disconnected = pieces > 1
+    n_disc = jnp.sum(disconnected.astype(jnp.int32))
+    n_comms = seg.count_communities(C, node_valid, nv)
+    frac = n_disc / jnp.maximum(n_comms, 1)
+    return dict(
+        disconnected=disconnected,
+        n_disconnected=n_disc,
+        n_communities=n_comms,
+        fraction=frac.astype(jnp.float32),
+    )

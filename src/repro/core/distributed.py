@@ -1,0 +1,162 @@
+"""Distributed GSP-Louvain: one full pass over vertex-aligned edge shards.
+
+The production layout (DESIGN.md §4):
+  * edges are partitioned by **source vertex** (graph/partition.py) into
+    ``n_devices`` shards of static size ``m_shard`` — every per-vertex
+    reduction (community scan, label-min, Sigma) is exact shard-locally;
+  * vertex state (C, K, Sigma, labels) is replicated; each half-sweep
+    merges owned updates with one int32 ``psum`` over [nv], each split
+    round with one ``pmin`` — these are the collectives the roofline
+    counts (grep collectives.py call sites);
+  * aggregation is shard-local: cross-shard duplicate super-edges are NOT
+    deduplicated — parallel edges are semantically identical to summed
+    weights for every downstream consumer (scan, Sigma, modularity), so a
+    global dedup collective is unnecessary.  This is load-bearing: it keeps
+    the pass all-to-all-free.
+
+``build_community_step`` returns the shard_map'd step plus abstract args /
+shardings for the dry-run and for real multi-device execution (tested on a
+host mesh in tests/test_distributed.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import _segments as seg
+from repro.core.aggregate import aggregate
+from repro.core.local_move import local_move
+from repro.core.split import split_labels
+
+SDS = jax.ShapeDtypeStruct
+
+
+def community_pass(src, dst, w, v_lo, v_hi, two_m, n_nodes, *,
+                   nv: int, axis, move_iters: int, split_iters: int,
+                   tau: float = 1e-2, split_mode: str = "pj",
+                   prune: bool = True):
+    """One GSP-Louvain pass on this shard's edges (runs under shard_map).
+
+    Returns (C_dense replicated, n_comms, new shard-local edges).
+    """
+    ids = jnp.arange(nv, dtype=jnp.int32)
+    owned = (ids >= v_lo) & (ids < v_hi)
+    node_valid = ids < n_nodes
+
+    from repro.distributed import collectives as col
+
+    K = col.psum(jax.ops.segment_sum(w, src, num_segments=nv), axis)
+    C0 = ids
+    C, _, li = local_move(
+        src, dst, w, C0, K, K, two_m,
+        tau=tau, max_iters=move_iters, axis=axis, owned=owned,
+        prune=prune,
+    )
+    labels, _ = split_labels(
+        src, dst, w, C, mode=split_mode, max_iters=split_iters, axis=axis,
+    )
+    C_dense, n_comms = seg.renumber(labels, node_valid, nv)
+    nsrc, ndst, nw = aggregate(src, dst, w, C_dense)
+    return C_dense, n_comms, li, nsrc, ndst, nw
+
+
+def build_community_step(mesh, *, n_cap: int, m_shard: int,
+                         move_iters: int = 4, split_iters: int = 8,
+                         split_mode: str = "pj", prune: bool = True):
+    """Build the jit-able distributed pass for a mesh.
+
+    Args are stacked shard arrays: src/dst [S, m_shard] int32, w [S, m_shard]
+    f32, v_lo/v_hi [S] int32 (owned vertex ranges), plus replicated scalars
+    two_m, n_nodes.  S = total device count of the mesh.
+    """
+    axes = tuple(mesh.axis_names)
+    S = int(np.prod([mesh.shape[a] for a in axes]))
+    nv = n_cap + 1
+
+    def shard_fn(src, dst, w, v_lo, v_hi, two_m, n_nodes):
+        out = community_pass(
+            src[0], dst[0], w[0], v_lo[0], v_hi[0], two_m, n_nodes,
+            nv=nv, axis=axes, move_iters=move_iters,
+            split_iters=split_iters, split_mode=split_mode, prune=prune,
+        )
+        C_dense, n_comms, li, nsrc, ndst, nw = out
+        return C_dense, n_comms, li, nsrc[None], ndst[None], nw[None]
+
+    edge_spec = P(axes, None)
+    scal_spec = P(axes)
+    step = jax.shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(edge_spec, edge_spec, edge_spec, scal_spec, scal_spec,
+                  P(), P()),
+        out_specs=(P(), P(), P(), edge_spec, edge_spec, edge_spec),
+        check_vma=False,
+    )
+
+    args = (
+        SDS((S, m_shard), jnp.int32),
+        SDS((S, m_shard), jnp.int32),
+        SDS((S, m_shard), jnp.float32),
+        SDS((S,), jnp.int32),
+        SDS((S,), jnp.int32),
+        SDS((), jnp.float32),
+        SDS((), jnp.int32),
+    )
+    e_sh = NamedSharding(mesh, edge_spec)
+    s_sh = NamedSharding(mesh, scal_spec)
+    r_sh = NamedSharding(mesh, P())
+    in_shardings = (e_sh, e_sh, e_sh, s_sh, s_sh, r_sh, r_sh)
+    out_shardings = (r_sh, r_sh, r_sh, e_sh, e_sh, e_sh)
+    return dict(fn=step, args=args, in_shardings=in_shardings,
+                out_shardings=out_shardings, nv=nv, n_shards=S)
+
+
+def run_louvain_multidevice(g, mesh, cfg=None):
+    """Full multi-pass GSP-Louvain on a real mesh (host-scale validation).
+
+    Pass 1 runs sharded via :func:`build_community_step`; the aggregated
+    graph (whose per-shard deduped edges fit one shard comfortably after
+    the first pass) is gathered and the remaining passes run replicated
+    through the single-device driver — the capacity switch described in
+    DESIGN.md §4.
+    """
+    from repro.core.louvain import LouvainConfig, louvain
+    from repro.graph.container import Graph
+    from repro.graph.partition import partition_edges_by_src
+
+    cfg = cfg or LouvainConfig()
+    axes = tuple(mesh.axis_names)
+    S = int(np.prod([mesh.shape[a] for a in axes]))
+    parts = partition_edges_by_src(g, S)
+    m_shard = parts["src"].shape[1]
+    plan = build_community_step(
+        mesh, n_cap=g.n_cap, m_shard=m_shard,
+        move_iters=cfg.max_iters, split_iters=0,
+        split_mode=cfg.split.split("-")[1] if "-" in cfg.split else "pj",
+    )
+    fn = jax.jit(plan["fn"], in_shardings=plan["in_shardings"],
+                 out_shardings=plan["out_shardings"])
+    two_m = jnp.float32(g.total_weight_2m())
+    C1, n1, li, nsrc, ndst, nw = fn(
+        jnp.asarray(parts["src"]), jnp.asarray(parts["dst"]),
+        jnp.asarray(parts["w"]), jnp.asarray(parts["v_lo"]),
+        jnp.asarray(parts["v_hi"]), two_m, g.n_nodes.astype(jnp.int32),
+    )
+    # gather the super graph (cross-shard duplicates are fine: they act as
+    # parallel edges == summed weights for all downstream ops)
+    flat_src = nsrc.reshape(-1)
+    flat_dst = ndst.reshape(-1)
+    flat_w = nw.reshape(-1)
+    order = jnp.argsort(flat_src, stable=True)
+    g2 = Graph(
+        src=flat_src[order], dst=flat_dst[order], w=flat_w[order],
+        n_nodes=n1.astype(jnp.int32), n_cap=g.n_cap, m_cap=flat_src.shape[0],
+    )
+    C2, stats = louvain(g2, cfg)
+    Cfinal = C2[C1]
+    stats = dict(stats, first_pass_li=li, first_pass_comms=n1)
+    return Cfinal, stats

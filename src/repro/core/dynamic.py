@@ -1,0 +1,162 @@
+"""Incremental community updates for dynamic graphs (delta-screening).
+
+Production graphs change; recomputing Louvain from scratch per batch of
+edge updates wastes the previous solution.  Following the Delta-Screening
+idea (Zarayeneh & Kalyanaraman 2021 — the paper's citation [47]), an edge
+batch only perturbs communities *near* the endpoints:
+
+  1. apply the edge deltas to the padded COO (capacity permitting),
+  2. mark affected vertices: endpoints of changed edges, their same- and
+     adjacent-community neighbors,
+  3. warm-start the local-moving phase from the previous membership with
+     ONLY affected vertices active (the pruning mask doubles as the
+     screening set — the paper's own pruning machinery, reused),
+  4. run the SP split + renumber as usual (the guarantee survives updates).
+
+The warm-started pass converges in a handful of sweeps when the update
+touches a small region, versus full passes from singletons.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import _segments as seg
+from repro.core.local_move import MoveState, _half_sweep, _hash_parity, \
+    realized_modularity
+from repro.core.split import split_labels
+from repro.graph.container import Graph
+
+
+def apply_edge_updates(g: Graph, new_src, new_dst, new_w):
+    """Append directed edges into the padded capacity (host-side numpy).
+
+    Returns a new Graph; raises if capacity is exhausted.  Deletions are
+    modeled as weight-0 updates of existing entries (standard for padded
+    dynamic formats).
+    """
+    import numpy as np
+
+    src = np.asarray(g.src).copy()
+    dst = np.asarray(g.dst).copy()
+    w = np.asarray(g.w).copy()
+    free = np.where(src >= g.n_cap)[0]
+    need = len(new_src)
+    if need > len(free):
+        raise ValueError(f"edge capacity exhausted ({need} > {len(free)})")
+    src[free[:need]] = np.asarray(new_src, np.int32)
+    dst[free[:need]] = np.asarray(new_dst, np.int32)
+    w[free[:need]] = np.asarray(new_w, np.float32)
+    order = np.lexsort((dst, src))
+    return Graph(
+        src=jnp.asarray(src[order]), dst=jnp.asarray(dst[order]),
+        w=jnp.asarray(w[order]), n_nodes=g.n_nodes,
+        n_cap=g.n_cap, m_cap=g.m_cap,
+    )
+
+
+def affected_vertices(g: Graph, C, touched):
+    """Screening set: touched vertices, plus neighbors sharing or adjacent
+    to their communities (one segment_max over edges)."""
+    nv = g.nv
+    t = jnp.zeros((nv,), bool).at[touched].set(True)
+    # neighbors of touched vertices
+    nbr = jax.ops.segment_max(
+        t[g.src].astype(jnp.int32), g.dst, num_segments=nv) > 0
+    # members of communities containing touched vertices
+    comm_touched = jax.ops.segment_max(
+        jnp.where(t, 1, 0), C, num_segments=nv) > 0
+    member = comm_touched[C]
+    return t | nbr | member
+
+
+@partial(jax.jit, static_argnames=("max_iters", "sync"))
+def warm_local_move(src, dst, w, C_prev, two_m, active0, *, tau=1e-3,
+                    max_iters: int = 10, sync: str = "handshake"):
+    """Local-moving warm-started from C_prev with a restricted active set.
+
+    Mirrors local_move but (a) starts from the previous membership instead
+    of singletons and (b) seeds the pruning mask with the screening set.
+    Returns (C, Sigma, iterations).
+    """
+    nv = C_prev.shape[0]
+    ghost = nv - 1
+    ids = jnp.arange(nv, dtype=jnp.int32)
+    owned = jnp.ones((nv,), bool)
+    K = jax.ops.segment_sum(w, src, num_segments=nv)
+    C0 = C_prev.astype(jnp.int32).at[ghost].set(ghost)
+    Sigma0 = jax.ops.segment_sum(K, C0, num_segments=nv)
+
+    def body(state: MoveState) -> MoveState:
+        (C, Sigma, active, q_prev, dq_it, _, it, n_prod,
+         C_best, Sigma_best, q_best) = state
+        moved_any = jnp.zeros((nv,), bool)
+        pbit = _hash_parity(ids, it)
+        for ph, tp in ((0, 1), (1, 0)):
+            movable = active & (pbit == ph)
+            target_ok = pbit == tp
+            C, Sigma, moved, _, want = _half_sweep(
+                src, dst, w, C, K, Sigma, two_m, owned, movable, None,
+                target_ok=target_ok, anchored=True,
+            )
+            moved_any = moved_any | moved
+        q_now = realized_modularity(src, dst, w, C, Sigma, two_m, owned, None)
+        nbr_moved = jax.ops.segment_max(
+            moved_any[src].astype(jnp.int32), dst, num_segments=nv) > 0
+        active = nbr_moved | (want & active)
+        better = q_now > q_best
+        C_best = jnp.where(better, C, C_best)
+        Sigma_best = jnp.where(better, Sigma, Sigma_best)
+        q_best = jnp.maximum(q_now, q_best)
+        gain = q_now - q_prev
+        return MoveState(C, Sigma, active, q_now, gain, dq_it, it + 1,
+                         n_prod + (gain > tau).astype(jnp.int32),
+                         C_best, Sigma_best, q_best)
+
+    def cond(state: MoveState):
+        warmup = state.it < 2
+        progress = (state.dQ_iter > tau) | (state.dQ_prev > tau)
+        return (warmup | progress) & (state.it < max_iters)
+
+    q0 = realized_modularity(src, dst, w, C0, Sigma0, two_m, owned, None)
+    init = MoveState(C0, Sigma0, active0, q0, jnp.float32(jnp.inf),
+                     jnp.float32(jnp.inf), jnp.int32(0), jnp.int32(0),
+                     C0, Sigma0, q0)
+    out = jax.lax.while_loop(cond, body, init)
+    return out.C_best, out.Sigma_best, out.it
+
+
+def update_communities(g_old: Graph, C_prev, updates, *, tau=1e-3,
+                       max_iters: int = 10):
+    """Incrementally update a partition after an edge batch.
+
+    updates: (u int32[], v int32[], w f32[]) undirected additions (each pair
+    is inserted in both directions).  Returns (g_new, C_new dense, stats).
+    """
+    import numpy as np
+
+    u, v, wts = (np.asarray(x) for x in updates)
+    keep = u != v
+    u, v, wts = u[keep], v[keep], wts[keep]
+    src = np.concatenate([u, v]).astype(np.int32)
+    dst = np.concatenate([v, u]).astype(np.int32)
+    ww = np.concatenate([wts, wts]).astype(np.float32)
+    g = apply_edge_updates(g_old, src, dst, ww)
+
+    touched = jnp.asarray(np.unique(np.concatenate([u, v])).astype(np.int32))
+    active0 = affected_vertices(g, C_prev, touched)
+    two_m = g.total_weight_2m()
+    C, _, it = warm_local_move(
+        g.src, g.dst, g.w, C_prev, two_m, active0,
+        tau=tau, max_iters=max_iters,
+    )
+    labels, _ = split_labels(g.src, g.dst, g.w, C)
+    C_new, n_comms = seg.renumber(labels, g.node_mask(), g.nv)
+    stats = dict(
+        iterations=it,
+        n_communities=n_comms,
+        n_affected=jnp.sum(active0.astype(jnp.int32)),
+    )
+    return g, C_new, stats

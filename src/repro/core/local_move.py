@@ -1,0 +1,280 @@
+"""Local-moving phase of GSP-Louvain (paper Algorithm 4), TPU formulation.
+
+The OpenMP original scans each vertex's neighborhood into a per-thread
+hashtable keyed by neighbor community.  Here the whole edge set is sorted by
+``(src, C[dst])`` once per sweep; equal keys form runs and a segment-sum
+yields every ``K_{i->c}`` simultaneously (one "hashtable" for the entire
+graph).  Delta-modularity (paper Eq. 2) is evaluated per run, and a
+segment-argmax per source vertex picks the best destination community.
+
+Synchronization policy (the one real semantic divergence from the OpenMP
+original, which updates asynchronously — DESIGN.md §2):
+
+* ``sync='handshake'`` (default): each iteration runs two half-sweeps; in
+  half-sweep p, vertices of id-parity p may move, and only **into
+  communities of parity 1-p**.  Both endpoints of any would-be label cycle
+  are therefore separated: targets are frozen (no chain collapse — a
+  community cannot lose its identity while receiving members) and
+  symmetric swaps are impossible inside a half-sweep.  Parities re-roll
+  every pass via dense renumbering, so no merge is blocked permanently.
+* ``sync='parity'``: movers alternate by parity, targets unrestricted
+  (ablation: admits same-parity pairwise swaps).
+* ``sync='all'``: plain synchronous Jacobi (ablation: oscillates).
+
+Convergence uses the **realized** modularity delta per iteration, not the
+sum of per-move estimates: simultaneous moves make estimates additive-only,
+and oscillating swap pairs report forever-positive estimated gains.
+Realized Q is two cheap reductions (internal edge weight, sum of Sigma^2).
+
+Vertex pruning (paper line 6 / line 14 of Alg. 4) is kept as an activity
+mask: inactive vertices propose no move; any vertex adjacent to a moved
+vertex is reactivated.  On TPU masking costs nothing extra per lane but
+faithfully reproduces the pruned algorithm's work-skipping.
+
+Distribution: edges arrive vertex-aligned (all out-edges of a vertex on one
+shard — graph/partition.py), so every per-vertex reduction here is exact
+shard-locally.  Per-vertex state (C, Sigma, active) is replicated and merged
+with one ``psum``/``pmax`` per half-sweep (collectives.py wrappers; identity
+when ``axis=None``).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import _segments as seg
+from repro.distributed import collectives as col
+
+NEG = jnp.float32(-jnp.inf)
+
+
+class MoveState(NamedTuple):
+    C: jax.Array          # int32[nv]  community of each vertex (replicated)
+    Sigma: jax.Array      # f32[nv]    total edge weight per community
+    active: jax.Array     # bool[nv]   pruning mask
+    q_prev: jax.Array     # f32[]      realized modularity after last sweep
+    dQ_iter: jax.Array    # f32[]      realized gain in the last full sweep
+    dQ_prev: jax.Array    # f32[]      realized gain one sweep earlier
+    it: jax.Array         # int32[]    completed iterations
+    n_prod: jax.Array     # int32[]    iterations with realized gain > tau
+    C_best: jax.Array     # int32[nv]  best-realized-Q membership so far
+    Sigma_best: jax.Array
+    q_best: jax.Array     # f32[]
+
+
+def _hash_parity(ids, it):
+    """Iteration-salted pseudo-random parity bit per id.
+
+    A fixed id-parity handshake deadlocks: two communities whose ids share a
+    parity can never merge directly.  Salting with the iteration index
+    re-rolls the bipartition every sweep, so every pair is mover/target-
+    compatible within ~2 sweeps in expectation, while each individual sweep
+    keeps the frozen-target guarantee.
+    """
+    h = ids.astype(jnp.uint32) * jnp.uint32(0x9E3779B1) + (
+        it.astype(jnp.uint32) * jnp.uint32(0x85EBCA77)
+    )
+    h = (h ^ (h >> 16)) * jnp.uint32(0x45D9F3B)
+    return ((h >> 13) & 1).astype(jnp.int32)
+
+
+def realized_modularity(src, dst, w, C, Sigma, two_m, owned, axis):
+    """Q of the current partition (directed-COO convention)."""
+    internal = col.psum(jnp.sum(jnp.where(C[src] == C[dst], w, 0.0)), axis)
+    # Sigma is replicated; sum of squares is collective-free
+    sig2 = jnp.sum(Sigma * Sigma)
+    return internal / two_m - sig2 / (two_m * two_m)
+
+
+def _half_sweep(src, dst, w, C, K, Sigma, two_m, owned, movable, axis,
+                target_ok=None, anchored=True):
+    """One synchronous half-sweep. Returns (C_new, Sigma_new, moved, gain).
+
+    ``target_ok``: bool[nv] — if given, moves are only allowed into
+    communities flagged True (the handshake schedule).
+    ``anchored``: join-attraction counts only frozen neighbors (see below);
+    disabled for the 'all' ablation where nothing is frozen.
+    """
+    nv = C.shape[0]
+    m_cap = src.shape[0]
+    ghost = nv - 1
+
+    # --- scanCommunities: sort by (src, C[dst]) and reduce runs ----------
+    cd = C[dst]
+    not_self = src != dst  # exclude self-loops from scan (paper Alg. 4)
+    w_all = jnp.where(not_self, w, 0.0)
+    # Anchored joins: attraction toward a *target* community only counts
+    # neighbors frozen this half-sweep.  A synchronous join is thereby
+    # always anchored to a member that provably stays, which suppresses the
+    # join-while-anchor-leaves races that mass-produce internally
+    # disconnected communities under Jacobi dynamics (DESIGN.md §2).
+    w_frozen = jnp.where(not_self & ~movable[dst], w, 0.0) if anchored else w_all
+    s_src, s_cd, s_wf, s_wa = seg.sort_by_key2(src, cd, w_frozen, w_all)
+    starts = seg.run_starts(s_src, s_cd)
+    rid = seg.run_ids(starts)
+    W_ic = seg.runs_reduce(s_wf, rid, m_cap)       # anchored K_{i->c} per run
+    W_ic_all = seg.runs_reduce(s_wa, rid, m_cap)   # true K_{i->c} per run
+    i_run, run_valid = seg.run_field(s_src, starts, rid, m_cap, ghost)
+    c_run, _ = seg.run_field(s_cd, starts, rid, m_cap, ghost)
+
+    # --- K_{i->d}: true weight to own community (excluding self) ---------
+    own = (c_run == C[i_run]) & run_valid
+    K_own = jax.ops.segment_sum(
+        jnp.where(own, W_ic_all, 0.0), i_run, num_segments=nv
+    )
+
+    # --- delta-modularity per candidate run (paper Eq. 2) ----------------
+    # Score with the true attraction W_ic_all; *gate* on having at least one
+    # frozen anchor in the target (W_ic frozen-filtered > 0), so the join
+    # stays connected even if every movable member departs simultaneously.
+    Ki = K[i_run]
+    d_of_i = C[i_run]
+    dq = (
+        2.0 * (W_ic_all - K_own[i_run]) / two_m
+        - 2.0 * Ki * (Ki + Sigma[c_run] - Sigma[d_of_i]) / (two_m * two_m)
+    )
+    cand = (
+        run_valid
+        & (i_run < ghost)
+        & (c_run < ghost)
+        & (c_run != d_of_i)
+        & (W_ic > 0.0)
+        & movable[i_run]
+        & owned[i_run]
+    )
+    if target_ok is not None:
+        cand = cand & target_ok[c_run]
+    # 'want': the vertex has a positive move ignoring schedule gates — used
+    # to keep schedule-blocked vertices awake under pruning (a pruned vertex
+    # whose merge was blocked by an unlucky parity roll must retry, or the
+    # move is lost forever once its neighborhood goes quiet).
+    base = run_valid & (i_run < ghost) & (c_run < ghost) & (c_run != d_of_i)
+    dq_all = jnp.where(base, dq, NEG)
+    want = jax.ops.segment_max(dq_all, i_run, num_segments=nv) > 0.0
+    dq = jnp.where(cand, dq, NEG)
+
+    # --- argmax per source vertex (min community id breaks ties) ---------
+    best = jax.ops.segment_max(dq, i_run, num_segments=nv)
+    is_best = cand & (dq >= best[i_run] - 0.0)
+    c_star = jax.ops.segment_min(
+        jnp.where(is_best, c_run, seg.INT_MAX), i_run, num_segments=nv
+    )
+    move = (best > 0.0) & (c_star < ghost)
+    C_local = jnp.where(move, c_star.astype(jnp.int32), C)
+
+    # --- merge shard-local decisions (each vertex owned by one shard) ----
+    C_new = col.psum(jnp.where(owned, C_local, 0), axis)
+    C_new = C_new.at[ghost].set(ghost)
+    moved = col.psum(jnp.where(owned & move, 1, 0).astype(jnp.int32), axis) > 0
+
+    # --- exact Sigma recompute (synchronous) ------------------------------
+    Sigma_new = col.psum(
+        jax.ops.segment_sum(jnp.where(owned, K, 0.0), C_new, num_segments=nv),
+        axis,
+    )
+    gain = col.psum(jnp.sum(jnp.where(owned & move, best, 0.0)), axis)
+    want = col.pmax((want & owned).astype(jnp.int32), axis) > 0
+    return C_new, Sigma_new, moved, gain, want
+
+
+@partial(jax.jit, static_argnames=("max_iters", "sync", "prune", "axis"))
+def local_move(
+    src,
+    dst,
+    w,
+    C0,
+    K,
+    Sigma0,
+    two_m,
+    *,
+    tau,
+    max_iters: int = 20,
+    sync: str = "handshake",
+    prune: bool = True,
+    axis=None,
+    owned=None,
+):
+    """Run the local-moving phase to convergence.
+
+    Returns ``(C, Sigma, l_i)`` — final membership, community weights, and
+    the number of iterations performed (paper's ``l_i``; drives the global
+    convergence check ``l_i <= 1``).
+    """
+    nv = C0.shape[0]
+    ghost = nv - 1
+    if owned is None:
+        owned = jnp.ones((nv,), bool)
+    ids = jnp.arange(nv, dtype=jnp.int32)
+
+    def body(state: MoveState) -> MoveState:
+        (C, Sigma, active, q_prev, dq_it, _, it, n_prod,
+         C_best, Sigma_best, q_best) = state
+        moved_any = jnp.zeros((nv,), bool)
+        pbit = _hash_parity(ids, it)        # re-rolled bipartition per sweep
+        if sync == "handshake":
+            phases = ((0, 1), (1, 0))       # (mover parity, target parity)
+        elif sync == "parity":
+            phases = ((0, None), (1, None))
+        else:  # 'all': plain synchronous Jacobi (ablation)
+            phases = ((None, None),)
+        for ph, tp in phases:
+            parity_ok = jnp.ones((nv,), bool) if ph is None else (pbit == ph)
+            movable = active & parity_ok
+            target_ok = None if tp is None else (pbit == tp)
+            C, Sigma, moved, _, want = _half_sweep(
+                src, dst, w, C, K, Sigma, two_m, owned, movable, axis,
+                target_ok=target_ok, anchored=(ph is not None),
+            )
+            moved_any = moved_any | moved
+        q_now = realized_modularity(src, dst, w, C, Sigma, two_m, owned, axis)
+        if prune:
+            # neighbors of moved vertices wake up; everyone else sleeps
+            nbr_moved = jax.ops.segment_max(
+                moved_any[src].astype(jnp.int32), dst, num_segments=nv
+            )
+            nbr_moved = col.pmax(nbr_moved, axis) > 0
+            active = nbr_moved | want  # schedule-blocked desire stays awake
+        else:
+            active = jnp.ones((nv,), bool)
+        better = q_now > q_best
+        C_best = jnp.where(better, C, C_best)
+        Sigma_best = jnp.where(better, Sigma, Sigma_best)
+        q_best = jnp.maximum(q_now, q_best)
+        gain = q_now - q_prev
+        return MoveState(
+            C, Sigma, active, q_now, gain, dq_it, it + 1,
+            n_prod + (gain > tau).astype(jnp.int32),
+            C_best, Sigma_best, q_best,
+        )
+
+    def cond(state: MoveState):
+        # converge only after two consecutive no-gain sweeps: a single sweep
+        # can stall purely because of an unlucky parity roll
+        warmup = state.it < 2
+        progress = (state.dQ_iter > tau) | (state.dQ_prev > tau)
+        return (warmup | progress) & (state.it < max_iters)
+
+    C_init = C0.astype(jnp.int32).at[ghost].set(ghost)
+    q0 = realized_modularity(src, dst, w, C_init, Sigma0, two_m, owned, axis)
+    init = MoveState(
+        C=C_init,
+        Sigma=Sigma0,
+        active=jnp.ones((nv,), bool),
+        q_prev=q0,
+        dQ_iter=jnp.float32(jnp.inf),
+        dQ_prev=jnp.float32(jnp.inf),
+        it=jnp.int32(0),
+        n_prod=jnp.int32(0),
+        C_best=C_init,
+        Sigma_best=Sigma0,
+        q_best=q0,
+    )
+    out = jax.lax.while_loop(cond, body, init)
+    # Return the best realized state: local_move is monotone in true Q.
+    # li keeps the paper's semantics: li == 1 <=> no productive iteration
+    # (global convergence signal for the pass driver).
+    li = jnp.minimum(out.n_prod + 1, out.it)
+    return out.C_best, out.Sigma_best, jnp.maximum(li, 1)

@@ -1,0 +1,255 @@
+"""GSP-Louvain multi-pass driver (paper Algorithm 3).
+
+One fully-jitted ``lax.while_loop`` over passes; each pass is
+local-moving -> splitting (SP variants) -> convergence checks -> renumber ->
+dendrogram lookup -> aggregation -> threshold scaling, exactly the paper's
+ordering (split happens *before* the ``l_i <= 1`` global-convergence break,
+so the returned partition is always split-clean for every ``sp-*`` mode).
+
+Split policies (``LouvainConfig.split``):
+  'none'   — plain parallel Louvain (GVE-Louvain baseline).
+  'sp-lp' / 'sp-lpp' / 'sp-pj' — Split Pass with LP / LPP / pointer-jumping
+             (the paper's SP approach; 'sp-pj' ~ the paper's SP-BFS slot =
+             **GSP-Louvain**, our default).
+  'sl-lp' / 'sl-lpp' / 'sl-pj' — Split Last (post-processing, prior work).
+  'refine' — Leiden-style refinement in the same slot (Traag et al. 2019):
+             a constrained local-move from singletons over the community-
+             masked graph; the greedy theta->0 variant (our Figure-4
+             comparison baseline, "GVE-Leiden"-like).
+
+The staged driver (:func:`louvain_staged`) runs the same phases as separate
+jitted calls with host-side timing, reproducing the paper's Figure 5
+phase/pass split measurements.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import _segments as seg
+from repro.core.aggregate import aggregate
+from repro.core.local_move import local_move
+from repro.core.split import split_labels
+from repro.graph.container import Graph
+
+
+@dataclasses.dataclass(frozen=True)
+class LouvainConfig:
+    max_passes: int = 10
+    max_iters: int = 20
+    tolerance: float = 1e-2
+    tolerance_drop: float = 10.0
+    aggregation_tolerance: float = 0.8
+    split: str = "sp-pj"          # none | {sp,sl}-{lp,lpp,pj} | refine
+    sync: str = "handshake"       # handshake | parity | all
+    prune: bool = True
+    split_max_iters: int = 0      # 0 = graph-size bound
+
+
+class PassState(NamedTuple):
+    esrc: jax.Array
+    edst: jax.Array
+    ew: jax.Array
+    Ctop: jax.Array       # int32[nv] original vertex -> current community
+    n_cur: jax.Array      # int32[] vertices in current graph
+    tau: jax.Array
+    lp: jax.Array         # passes completed
+    li_last: jax.Array
+    done: jax.Array
+
+
+def _split_mode(split: str) -> str:
+    return split.split("-")[1] if "-" in split else "pj"
+
+
+def refine_labels(src, dst, w, C, two_m, *, tau, max_iters=10, axis=None,
+                  owned=None):
+    """Leiden refinement: local-move from singletons restricted to each
+    community's bound — implemented as local_move over the community-masked
+    edge set (cross-community weights zeroed), scored against the full-graph
+    2m.  Returns a refinement of C whose parts are connected (moves require
+    a positive in-community edge)."""
+    nv = C.shape[0]
+    w_in = jnp.where(C[src] == C[dst], w, 0.0)
+    K_in = jax.ops.segment_sum(w_in, src, num_segments=nv)
+    if axis is not None:
+        from repro.distributed import collectives as col
+        K_in = col.psum(K_in, axis)
+    C0 = jnp.arange(nv, dtype=jnp.int32)
+    R, _, _ = local_move(
+        src, dst, w_in, C0, K_in, K_in, two_m,
+        tau=tau, max_iters=max_iters, axis=axis, owned=owned,
+    )
+    return R
+
+
+@partial(jax.jit, static_argnames=("cfg", "axis"))
+def louvain(g: Graph, cfg: LouvainConfig = LouvainConfig(), *, axis=None, owned=None):
+    """Run GSP-Louvain. Returns (C int32[nv] dense top-level membership,
+    stats dict). Ghost/padding vertices map to the trailing community ids;
+    mask with ``g.node_mask()`` downstream."""
+    nv = g.nv
+    two_m = g.total_weight_2m()
+    do_sp = cfg.split.startswith("sp")
+    mode = _split_mode(cfg.split)
+
+    def body(st: PassState) -> PassState:
+        node_valid = jnp.arange(nv) < st.n_cur
+        K = jax.ops.segment_sum(st.ew, st.esrc, num_segments=nv)
+        C0 = jnp.arange(nv, dtype=jnp.int32)
+        C, _, li = local_move(
+            st.esrc, st.edst, st.ew, C0, K, K, two_m,
+            tau=st.tau, max_iters=cfg.max_iters, sync=cfg.sync,
+            prune=cfg.prune, axis=axis, owned=owned,
+        )
+        if cfg.split == "refine":
+            labels = refine_labels(
+                st.esrc, st.edst, st.ew, C, two_m,
+                tau=st.tau, max_iters=cfg.max_iters, axis=axis, owned=owned,
+            )
+        elif do_sp:
+            labels, _ = split_labels(
+                st.esrc, st.edst, st.ew, C,
+                mode=mode, max_iters=cfg.split_max_iters, axis=axis,
+            )
+        else:
+            labels = C
+        C_dense, n_comms = seg.renumber(labels, node_valid, nv)
+        Ctop = C_dense[st.Ctop]
+
+        converged = li <= 1
+        low_shrink = n_comms.astype(jnp.float32) > (
+            cfg.aggregation_tolerance * st.n_cur.astype(jnp.float32)
+        )
+        done = converged | low_shrink
+
+        nsrc, ndst, nw = aggregate(st.esrc, st.edst, st.ew, C_dense)
+        # freeze the graph if we're done (avoids dead aggregation writes)
+        esrc = jnp.where(done, st.esrc, nsrc)
+        edst = jnp.where(done, st.edst, ndst)
+        ew = jnp.where(done, st.ew, nw)
+        return PassState(
+            esrc=esrc, edst=edst, ew=ew, Ctop=Ctop,
+            n_cur=jnp.where(done, st.n_cur, n_comms),
+            tau=st.tau / cfg.tolerance_drop,
+            lp=st.lp + 1, li_last=li, done=done,
+        )
+
+    def cond(st: PassState):
+        return (~st.done) & (st.lp < cfg.max_passes)
+
+    init = PassState(
+        esrc=g.src, edst=g.dst, ew=g.w,
+        Ctop=jnp.arange(nv, dtype=jnp.int32),
+        n_cur=g.n_nodes.astype(jnp.int32),
+        tau=jnp.float32(cfg.tolerance),
+        lp=jnp.int32(0), li_last=jnp.int32(0),
+        done=jnp.bool_(False),
+    )
+    out = jax.lax.while_loop(cond, body, init)
+
+    Ctop = out.Ctop
+    if cfg.split.startswith("sl"):
+        labels, _ = split_labels(
+            g.src, g.dst, g.w, Ctop, mode=mode,
+            max_iters=cfg.split_max_iters, axis=axis,
+        )
+        Ctop, _ = seg.renumber(labels, g.node_mask(), nv)
+    n_final = seg.count_communities(Ctop, g.node_mask(), nv)
+    stats = dict(passes=out.lp, li_last=out.li_last, n_communities=n_final)
+    return Ctop, stats
+
+
+# --------------------------------------------------------------------------
+# Staged driver: same algorithm as a host loop over separately-jitted phases,
+# with wall-clock per phase — reproduces paper Figure 5 measurements.
+# --------------------------------------------------------------------------
+
+def _timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return out, time.perf_counter() - t0
+
+
+def louvain_staged(g: Graph, cfg: LouvainConfig = LouvainConfig()):
+    """Host-staged GSP-Louvain with per-phase / per-pass wall times.
+
+    Returns (C, stats) where stats carries ``phase_seconds`` =
+    {local_move, split, aggregate, other} and ``pass_seconds`` list.
+    """
+    nv = g.nv
+    two_m = g.total_weight_2m()
+    do_sp = cfg.split.startswith("sp")
+    mode = _split_mode(cfg.split)
+
+    esrc, edst, ew = g.src, g.dst, g.w
+    Ctop = jnp.arange(nv, dtype=jnp.int32)
+    n_cur = int(g.n_nodes)
+    tau = float(cfg.tolerance)
+    phase = dict(local_move=0.0, split=0.0, aggregate=0.0, other=0.0)
+    pass_seconds = []
+    passes = 0
+    li = 0
+
+    for _ in range(cfg.max_passes):
+        t_pass = time.perf_counter()
+        node_valid = jnp.arange(nv) < n_cur
+        (K,), t_o = _timed(
+            lambda: (jax.ops.segment_sum(ew, esrc, num_segments=nv),)
+        )
+        phase["other"] += t_o
+        C0 = jnp.arange(nv, dtype=jnp.int32)
+        (C, _, li_a), t_lm = _timed(
+            local_move, esrc, edst, ew, C0, K, K, two_m,
+            tau=tau, max_iters=cfg.max_iters, sync=cfg.sync, prune=cfg.prune,
+        )
+        phase["local_move"] += t_lm
+        li = int(li_a)
+        if cfg.split == "refine":
+            (labels), t_sp = _timed(
+                refine_labels, esrc, edst, ew, C, two_m,
+                tau=tau, max_iters=cfg.max_iters,
+            )
+            phase["split"] += t_sp
+        elif do_sp:
+            (labels, _), t_sp = _timed(
+                split_labels, esrc, edst, ew, C,
+                mode=mode, max_iters=cfg.split_max_iters,
+            )
+            phase["split"] += t_sp
+        else:
+            labels = C
+        (res, t_o) = _timed(seg.renumber, labels, node_valid, nv)
+        C_dense, n_comms = res
+        phase["other"] += t_o
+        Ctop = C_dense[Ctop]
+        passes += 1
+        n_comms = int(n_comms)
+        pass_seconds.append(time.perf_counter() - t_pass)
+        if li <= 1 or n_comms > cfg.aggregation_tolerance * n_cur:
+            break
+        (agg, t_ag) = _timed(aggregate, esrc, edst, ew, C_dense)
+        esrc, edst, ew = agg
+        phase["aggregate"] += t_ag
+        n_cur = n_comms
+        tau /= cfg.tolerance_drop
+
+    if cfg.split.startswith("sl"):
+        (labels, _), t_sp = _timed(
+            split_labels, g.src, g.dst, g.w, Ctop,
+            mode=mode, max_iters=cfg.split_max_iters,
+        )
+        phase["split"] += t_sp
+        Ctop, _ = seg.renumber(labels, g.node_mask(), nv)
+    n_final = int(seg.count_communities(Ctop, g.node_mask(), nv))
+    stats = dict(
+        passes=passes, li_last=li, n_communities=n_final,
+        phase_seconds=phase, pass_seconds=pass_seconds,
+    )
+    return Ctop, stats

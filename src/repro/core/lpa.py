@@ -1,0 +1,84 @@
+"""Label Propagation community detection (Raghavan et al. 2007; fast
+variant per Traag & Subelj 2023) — the paper's §2 LPA reference, as a cheap
+baseline comparator.
+
+Synchronous max-weight label propagation with the same hash-rolled parity
+handshake as local_move (plain synchronous LPA bi-oscillates on bipartite
+structure).  Note LPA is exactly the family for which Raghavan et al.
+proposed post-hoc BFS splitting — so composing ``lpa_run`` with
+``split_labels`` reproduces their pipeline (tested in tests/test_lpa.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import _segments as seg
+from repro.core.local_move import _hash_parity
+
+
+class LPAState(NamedTuple):
+    C: jax.Array
+    changed: jax.Array       # any label changed in the last round
+    changed_prev: jax.Array  # ... in the round before (parity alternates)
+    it: jax.Array
+
+
+def lpa_run(g, *, max_iters: int = 50):
+    """Weighted LPA on a :class:`repro.graph.container.Graph`.
+
+    Returns (dense labels int32[nv], iterations int32).
+    """
+    nv = g.nv
+    src, dst, w = g.src, g.dst, g.w
+    m_cap = g.m_cap
+    ids = jnp.arange(nv, dtype=jnp.int32)
+    ghost = nv - 1
+
+    def body(st: LPAState) -> LPAState:
+        C, ch_prev, _, it = st
+        pbit = _hash_parity(ids, it)
+        # per-vertex best label among neighbors by total incident weight:
+        # sort edges by (src, C[dst]); run-reduce weights; argmax per src
+        cd = C[dst]
+        s_src, s_cd, s_w = seg.sort_by_key2(src, cd, w)
+        starts = seg.run_starts(s_src, s_cd)
+        rid = seg.run_ids(starts)
+        W = seg.runs_reduce(s_w, rid, m_cap)
+        i_run, valid = seg.run_field(s_src, starts, rid, m_cap, ghost)
+        c_run, _ = seg.run_field(s_cd, starts, rid, m_cap, ghost)
+        cand = valid & (i_run < ghost) & (c_run < ghost)
+        score = jnp.where(cand, W, -jnp.inf)
+        best = jax.ops.segment_max(score, i_run, num_segments=nv)
+        is_best = cand & (score >= best[i_run])
+        # random-equivalent tie-break (iteration-salted hash): min-id ties
+        # snowball one label across the whole graph (the LPA "monster
+        # community" epidemic; Raghavan et al. break ties randomly)
+        h = (c_run.astype(jnp.uint32) * jnp.uint32(0x9E3779B1)
+             + it.astype(jnp.uint32) * jnp.uint32(0xB5297A4D))
+        h = ((h ^ (h >> 15)) * jnp.uint32(0x45D9F3B)).astype(jnp.uint32)
+        hkey = jnp.where(is_best, h, jnp.uint32(0xFFFFFFFF))
+        hmin = jax.ops.segment_min(hkey, i_run, num_segments=nv)
+        pick = is_best & (hkey == hmin[i_run])
+        c_star = jax.ops.segment_min(
+            jnp.where(pick, c_run, seg.INT_MAX), i_run, num_segments=nv)
+        # handshake: parity-p vertices adopt labels of parity-(1-p) groups
+        p = it % 2
+        movable = pbit == p
+        target_ok = pbit[jnp.clip(c_star, 0, ghost)] != p
+        ok = (best > 0) & (c_star < ghost) & movable & target_ok
+        C_new = jnp.where(ok, c_star.astype(jnp.int32), C)
+        changed = jnp.any(C_new != C)
+        return LPAState(C_new, changed, ch_prev, it + 1)
+
+    def cond(st: LPAState):
+        # stop only after both parity rounds go quiet
+        return (st.changed | st.changed_prev | (st.it < 2)) & (
+            st.it < max_iters)
+
+    init = LPAState(ids, jnp.bool_(True), jnp.bool_(True), jnp.int32(0))
+    out = jax.lax.while_loop(cond, body, init)
+    labels, _ = seg.renumber(out.C, g.node_mask(), nv)
+    return labels, out.it

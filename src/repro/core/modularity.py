@@ -1,0 +1,26 @@
+"""Modularity (paper Eq. 1) and related quality metrics."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def modularity(src, dst, w, C, nv=None):
+    """Q = sum_c [ sigma_c / 2m - (Sigma_c / 2m)^2 ].
+
+    Uses the framework's directed-COO convention (both directions stored,
+    self-loops once): ``sigma_c`` sums directed edge weights with both ends
+    in c (self-loops contribute once), ``Sigma_c`` sums weighted degrees.
+    Padding contributes w == 0 everywhere, so no masking is needed beyond
+    the ghost community being harmless (its sigma and Sigma are 0).
+    """
+    if nv is None:
+        nv = C.shape[0]
+    two_m = jnp.sum(w)
+    K = jax.ops.segment_sum(w, src, num_segments=nv)
+    Sigma = jax.ops.segment_sum(K, C, num_segments=nv)
+    internal = jnp.where(C[src] == C[dst], w, 0.0)
+    sigma = jax.ops.segment_sum(internal, src, num_segments=nv)
+    sigma_c = jax.ops.segment_sum(sigma, C, num_segments=nv)
+    q = sigma_c / two_m - (Sigma / two_m) ** 2
+    return jnp.sum(q)

@@ -1,0 +1,108 @@
+"""Splitting phase: partition internally-disconnected communities.
+
+Implements the paper's §4.1 techniques on TPU:
+
+* ``lp``  — minimum-label Label Propagation (paper Alg. 1, LP): every vertex
+  repeatedly takes the minimum label over same-community neighbors.
+* ``lpp`` — LP with Pruning (paper Alg. 1, LPP): vertices sleep once
+  processed and wake when a same-community neighbor's label changes.
+* ``pj``  — **pointer-jumping** (ours, the TPU-native filler for the paper's
+  per-thread BFS): min-label propagation plus label shortcutting
+  ``L <- L[L]`` each round.  Labels are vertex ids of same-component
+  representatives, so shortcutting is sound (Shiloach–Vishkin style) and
+  convergence drops from O(component diameter) rounds to O(log diameter) —
+  the road-network case (paper §5.3: splitting dominates there) is exactly
+  where this matters.  Frontier BFS has no efficient TPU analogue
+  (data-dependent queues); DESIGN.md §2 records the adaptation.
+
+All variants return the same fixpoint: ``L[i]`` = min vertex id within
+(community of i) ∩ (connected component of i restricted to that community).
+Communities composed of several components therefore receive several labels
+— splitting them.  This runs after every local-moving phase (SP) or once at
+the end (SL).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import collectives as col
+
+
+class SplitState(NamedTuple):
+    L: jax.Array        # int32[nv] current labels (vertex ids)
+    active: jax.Array   # bool[nv]  LPP pruning mask
+    changed: jax.Array  # bool[]    any label changed in last round
+    it: jax.Array       # int32[]
+
+
+@partial(jax.jit, static_argnames=("mode", "max_iters", "axis"))
+def split_labels(
+    src,
+    dst,
+    w,
+    C,
+    *,
+    mode: str = "pj",
+    max_iters: int = 0,
+    axis=None,
+):
+    """Label every vertex with its (component ∩ community) representative.
+
+    Args:
+      src, dst, w: padded directed COO (w only used to detect padding).
+      C: int32[nv] community membership.
+      mode: 'lp' | 'lpp' | 'pj'.
+      max_iters: 0 = run to fixpoint bound nv (safe upper bound).
+
+    Returns:
+      (labels int32[nv], iterations int32).  ``labels`` refines ``C``.
+    """
+    nv = C.shape[0]
+    ghost = nv - 1
+    limit = max_iters if max_iters > 0 else nv
+    same = (C[src] == C[dst]) & (src < ghost) & (dst < ghost)
+    INT_MAX = jnp.iinfo(jnp.int32).max
+
+    def body(st: SplitState) -> SplitState:
+        L, active, _, it = st
+        # candidate: min label over same-community neighbors
+        cand_val = jnp.where(same, L[dst], INT_MAX)
+        cand = jax.ops.segment_min(cand_val, src, num_segments=nv)
+        cand = col.pmin(cand, axis)
+        L_upd = jnp.minimum(L, cand).astype(jnp.int32)
+        if mode == "lpp":
+            # pruned vertices are not recomputed this round (paper line 8)
+            L_new = jnp.where(active, L_upd, L)
+        else:
+            L_new = L_upd
+        if mode == "pj":
+            L_new = L_new[L_new]  # pointer jumping (label shortcutting)
+            L_new = L_new[L_new]
+        moved = L_new != L
+        if mode == "lpp":
+            # wake same-community neighbors of changed vertices, sleep rest
+            nbr = jax.ops.segment_max(
+                (moved[src] & same).astype(jnp.int32), dst, num_segments=nv
+            )
+            nbr = col.pmax(nbr, axis) > 0
+            active = nbr | moved
+        else:
+            active = jnp.ones((nv,), bool)
+        changed = col.pmax(jnp.any(moved).astype(jnp.int32), axis) > 0
+        return SplitState(L_new, active, changed, it + 1)
+
+    def cond(st: SplitState):
+        return st.changed & (st.it < limit)
+
+    init = SplitState(
+        L=jnp.arange(nv, dtype=jnp.int32),
+        active=jnp.ones((nv,), bool),
+        changed=jnp.bool_(True),
+        it=jnp.int32(0),
+    )
+    out = jax.lax.while_loop(cond, body, init)
+    return out.L, out.it

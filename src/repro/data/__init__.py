@@ -1,0 +1,6 @@
+"""Deterministic synthetic data pipelines (tokens, graphs, recsys)."""
+from repro.data.streams import (
+    token_stream, recsys_stream, graph_dataset, gnn_node_labels,
+)
+
+__all__ = ["token_stream", "recsys_stream", "graph_dataset", "gnn_node_labels"]

@@ -1,0 +1,93 @@
+"""Synthetic but *structured* data streams.
+
+Offline-container substitute for real corpora, with enough structure for a
+loss to visibly fall: tokens come from a deterministic order-2 Markov chain
+(so next-token prediction is learnable), recsys labels correlate with
+(user, item) embedding hashes, and GNN node labels come from planted SBM
+blocks.  Everything is pure-PRNG + step index -> reproducible, shardable by
+slicing the batch dim, and infinite.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph import sbm_graph, rmat_graph, grid_graph, ring_of_cliques
+
+
+def token_stream(vocab: int, batch: int, seq_len: int, *, seed: int = 0):
+    """Infinite iterator of (tokens, targets) int32[batch, seq_len].
+
+    Order-1 Markov chain with a sparse random transition table: each token
+    has 8 plausible successors, so a model can reduce loss well below
+    log(vocab).
+    """
+    rng = np.random.default_rng(seed)
+    succ = rng.integers(0, vocab, size=(vocab, 8)).astype(np.int32)
+    key = jax.random.PRNGKey(seed)
+    succ_j = jnp.asarray(succ)
+
+    def batch_at(step):
+        k = jax.random.fold_in(key, step)
+        ks = jax.random.split(k, seq_len + 1)
+        x0 = jax.random.randint(ks[0], (batch,), 0, vocab, dtype=jnp.int32)
+        toks = [x0]
+        for t in range(seq_len):
+            choice = jax.random.randint(ks[t + 1], (batch,), 0, 8)
+            toks.append(succ_j[toks[-1], choice])
+        seq = jnp.stack(toks, axis=1)          # [B, S+1]
+        return seq[:, :-1], seq[:, 1:]
+
+    step = 0
+    while True:
+        yield batch_at(step)
+        step += 1
+
+
+def recsys_stream(cfg, batch: int, *, seed: int = 0, hot: int = 3):
+    """Infinite iterator of BST batches with learnable CTR structure."""
+    key = jax.random.PRNGKey(seed)
+
+    def batch_at(step):
+        k = jax.random.fold_in(key, step)
+        k1, k2, k3, k4 = jax.random.split(k, 4)
+        user = jax.random.randint(k1, (batch,), 0, cfg.user_vocab, dtype=jnp.int32)
+        behavior = jax.random.randint(
+            k2, (batch, cfg.seq_len), 0, cfg.item_vocab, dtype=jnp.int32)
+        target = jax.random.randint(k3, (batch,), 0, cfg.item_vocab, dtype=jnp.int32)
+        fields = jax.random.randint(
+            k4, (batch, cfg.n_user_fields, hot), -1, cfg.user_field_vocab,
+            dtype=jnp.int32)
+        # structured label: hash-parity of (user, target) + behavior overlap
+        h = (user.astype(jnp.uint32) * jnp.uint32(2654435761)
+             + target.astype(jnp.uint32) * jnp.uint32(97))
+        label = ((h % 7) < 3).astype(jnp.int32)
+        return dict(user=user, behavior=behavior, target=target,
+                    fields=fields, label=label)
+
+    step = 0
+    while True:
+        yield batch_at(step)
+        step += 1
+
+
+def graph_dataset(name: str, **kw):
+    """Named graph fixtures used across benchmarks/examples."""
+    if name == "sbm":
+        return sbm_graph(**kw)[0]
+    if name == "rmat":
+        return rmat_graph(**kw)
+    if name == "grid":
+        return grid_graph(**kw)
+    if name == "ring":
+        return ring_of_cliques(**kw)
+    raise KeyError(name)
+
+
+def gnn_node_labels(g, n_classes: int, *, seed: int = 0):
+    """Planted labels: community-correlated, so GNN training can learn."""
+    from repro.core import LouvainConfig, louvain
+
+    C, _ = louvain(g, LouvainConfig(max_passes=3))
+    return (np.asarray(C) % n_classes).astype(np.int32)

@@ -1,0 +1,5 @@
+"""Distribution layer: mesh-axis conventions, collective wrappers, sharding rules."""
+from repro.distributed.collectives import psum, pmin, pmax, axis_size
+from repro.distributed.sharding import ShardingRules
+
+__all__ = ["psum", "pmin", "pmax", "axis_size", "ShardingRules"]

@@ -1,0 +1,41 @@
+"""Axis-name-optional collective wrappers.
+
+Core algorithms are written once and run both single-device (``axis=None`` —
+collectives are identity) and under ``shard_map`` (``axis`` = mesh axis name
+or tuple of names).  This is the single seam through which all graph-side
+communication flows, which keeps the collective-bytes accounting in the
+roofline honest: grep for these call sites.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def axis_size(axis=None) -> int:
+    if axis is None:
+        return 1
+    return jax.lax.axis_size(axis)
+
+
+def psum(x, axis=None):
+    if axis is None:
+        return x
+    return jax.lax.psum(x, axis)
+
+
+def pmin(x, axis=None):
+    if axis is None:
+        return x
+    return jax.lax.pmin(x, axis)
+
+
+def pmax(x, axis=None):
+    if axis is None:
+        return x
+    return jax.lax.pmax(x, axis)
+
+
+def all_gather(x, axis=None, *, axis_index=0, tiled=True):
+    if axis is None:
+        return x
+    return jax.lax.all_gather(x, axis, axis=axis_index, tiled=tiled)

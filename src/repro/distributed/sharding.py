@@ -1,0 +1,87 @@
+"""Sharding rules: logical-axis -> mesh-axis mapping per workload family.
+
+Rather than hand-writing a PartitionSpec for every array of every
+architecture, arrays carry *logical axes* (strings) and each workload family
+declares one rule table.  ``spec(...)`` resolves logical axes to mesh axes,
+dropping mesh axes that do not exist on the current mesh (so the same rules
+drive the single-pod ``(data, model)`` mesh and the multi-pod
+``(pod, data, model)`` mesh).
+
+Conventions (DESIGN.md §4):
+  * ``batch``   -> ('pod', 'data')  : data parallelism (outer pod axis).
+  * ``embed``/'mlp'/'heads'/'experts'/'vocab' -> 'model' : tensor parallel.
+  * ``fsdp``    -> ('pod', 'data')  : parameter sharding over the data axis
+                   (FSDP); used for LM parameter/optimizer-state storage.
+  * ``edges``   -> ('pod', 'data', 'model') flattened: graph edge shards.
+  * ``rows``    -> 'model' : embedding-table row sharding (recsys).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "fsdp": ("pod", "data"),
+    "seq": (),
+    "embed": (),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": ("model",),
+    "kv_len": ("model",),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "vocab": ("model",),
+    "rows": ("model",),
+    "edges": ("pod", "data", "model"),
+    "nodes": (),
+    "feat": ("model",),
+    "stack": (),
+    None: (),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: dict = dataclasses.field(default_factory=lambda: dict(DEFAULT_RULES))
+
+    def with_overrides(self, **over) -> "ShardingRules":
+        r = dict(self.rules)
+        for k, v in over.items():
+            r[k] = tuple(v) if isinstance(v, (list, tuple)) else (v,)
+        return ShardingRules(r)
+
+    def spec(self, mesh: Mesh, logical_axes: Sequence[Optional[str]]) -> P:
+        parts = []
+        used: set[str] = set()
+        for ax in logical_axes:
+            names = self.rules.get(ax, ())
+            resolved = tuple(
+                n for n in names if n in mesh.axis_names and n not in used
+            )
+            used.update(resolved)
+            if len(resolved) == 0:
+                parts.append(None)
+            elif len(resolved) == 1:
+                parts.append(resolved[0])
+            else:
+                parts.append(resolved)
+        return P(*parts)
+
+    def named(self, mesh: Mesh, logical_axes: Sequence[Optional[str]]) -> NamedSharding:
+        return NamedSharding(mesh, self.spec(mesh, logical_axes))
+
+
+def tree_shardings(mesh: Mesh, logical_tree, rules: ShardingRules | None = None):
+    """Map a pytree of logical-axis tuples to a pytree of NamedShardings."""
+    import jax
+
+    rules = rules or ShardingRules()
+    return jax.tree.map(
+        lambda axes: rules.named(mesh, axes),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )

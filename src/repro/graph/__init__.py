@@ -1,0 +1,36 @@
+"""Graph substrate: fixed-shape containers, generators, partitioning, sampling.
+
+Everything in this package is built around one invariant: **all shapes are
+static**.  A :class:`~repro.graph.container.Graph` owns padded, directed COO
+edge arrays (both directions of every undirected edge are stored) plus a
+ghost-vertex slot, so that every downstream phase (Louvain local-moving,
+splitting, aggregation, GNN message passing) can run under ``jax.jit`` /
+``lax.while_loop`` without shape polymorphism.
+"""
+from repro.graph.container import Graph, from_coo, from_undirected, ghost_pad
+from repro.graph.generators import (
+    sbm_graph,
+    rmat_graph,
+    ring_of_cliques,
+    bridge_graph,
+    grid_graph,
+    random_regular_graph,
+)
+from repro.graph.partition import partition_edges_by_src, shard_graph
+from repro.graph.sampler import neighbor_sample
+
+__all__ = [
+    "Graph",
+    "from_coo",
+    "from_undirected",
+    "ghost_pad",
+    "sbm_graph",
+    "rmat_graph",
+    "ring_of_cliques",
+    "bridge_graph",
+    "grid_graph",
+    "random_regular_graph",
+    "partition_edges_by_src",
+    "shard_graph",
+    "neighbor_sample",
+]

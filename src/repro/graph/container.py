@@ -1,0 +1,217 @@
+"""Fixed-shape graph container.
+
+Conventions (shared by the whole framework — see DESIGN.md §2):
+
+* Edges are stored in **directed COO**: every undirected edge ``{u, v}`` with
+  ``u != v`` appears twice, as ``(u, v, w)`` and ``(v, u, w)``.  Self-loops
+  appear **once** with their full weight.  Under this convention the weighted
+  degree ``K_i = sum_e w[src==i]`` satisfies ``sum_i K_i == 2 m`` and stays
+  invariant under Louvain aggregation.
+* Arrays are padded to static capacities ``(n_cap, m_cap)``.  Padded edges
+  point at the **ghost vertex** (index ``n_cap``); node arrays are sized
+  ``nv = n_cap + 1`` so that gathers through padded edges are always in
+  bounds and land on the ghost slot.  Padded edges carry ``w = 0``.
+* Edges are sorted by ``(src, dst)``; the ghost sentinel therefore sorts all
+  padding to the tail, and CSR row offsets are recovered with
+  ``searchsorted``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """A padded, fixed-shape, directed-COO graph.
+
+    Attributes:
+      src:  int32[m_cap]  edge sources, sorted, padded with ``n_cap``.
+      dst:  int32[m_cap]  edge destinations, padded with ``n_cap``.
+      w:    float32[m_cap] edge weights, 0 at padding.
+      n_nodes: int32[] number of real vertices (can be traced after
+        aggregation — capacities never change).
+      n_cap: static int, vertex capacity. Ghost vertex lives at index n_cap.
+      m_cap: static int, edge capacity.
+    """
+
+    src: Array
+    dst: Array
+    w: Array
+    n_nodes: Array
+    n_cap: int = dataclasses.field(metadata=dict(static=True))
+    m_cap: int = dataclasses.field(metadata=dict(static=True))
+
+    # ---- static helpers ------------------------------------------------
+    @property
+    def nv(self) -> int:
+        """Node-array length including the ghost slot."""
+        return self.n_cap + 1
+
+    @property
+    def ghost(self) -> int:
+        return self.n_cap
+
+    # ---- derived quantities (jit-safe) ---------------------------------
+    def edge_mask(self) -> Array:
+        return self.src < self.n_cap
+
+    def node_mask(self) -> Array:
+        return jnp.arange(self.nv) < self.n_nodes
+
+    def num_edges(self) -> Array:
+        """Number of real directed edges."""
+        return jnp.sum(self.edge_mask().astype(jnp.int32))
+
+    def vertex_weights(self) -> Array:
+        """K_i = weighted (out-)degree, float32[nv]. Ghost gets 0."""
+        return jax.ops.segment_sum(self.w, self.src, num_segments=self.nv)
+
+    def degrees(self) -> Array:
+        """Unweighted out-degree, int32[nv]."""
+        ones = self.edge_mask().astype(jnp.int32)
+        return jax.ops.segment_sum(ones, self.src, num_segments=self.nv)
+
+    def total_weight_2m(self) -> Array:
+        """2m = sum of all directed edge weights (padding contributes 0)."""
+        return jnp.sum(self.w)
+
+    def row_offsets(self) -> Array:
+        """CSR row offsets int32[nv + 1] (requires the sorted invariant)."""
+        return jnp.searchsorted(self.src, jnp.arange(self.nv + 1)).astype(jnp.int32)
+
+    # ---- host-side conveniences (not jit-safe) --------------------------
+    def to_networkx(self):
+        import networkx as nx
+
+        g = nx.Graph()
+        n = int(self.n_nodes)
+        g.add_nodes_from(range(n))
+        src = np.asarray(self.src)
+        dst = np.asarray(self.dst)
+        w = np.asarray(self.w)
+        mask = src < self.n_cap
+        for u, v, ww in zip(src[mask], dst[mask], w[mask]):
+            g.add_edge(int(u), int(v), weight=float(ww))
+        return g
+
+    def __repr__(self) -> str:  # keep small: Graph repr shows caps only
+        return f"Graph(n_cap={self.n_cap}, m_cap={self.m_cap})"
+
+
+def _sort_coo(src: np.ndarray, dst: np.ndarray, w: np.ndarray):
+    order = np.lexsort((dst, src))
+    return src[order], dst[order], w[order]
+
+
+def from_coo(
+    n_nodes: int,
+    src: np.ndarray,
+    dst: np.ndarray,
+    w: np.ndarray | None = None,
+    *,
+    n_cap: int | None = None,
+    m_cap: int | None = None,
+) -> Graph:
+    """Build a :class:`Graph` from an already-directed COO edge list.
+
+    The caller is responsible for the both-directions convention; see
+    :func:`from_undirected` for the friendly path.
+    """
+    src = np.asarray(src, dtype=np.int32)
+    dst = np.asarray(dst, dtype=np.int32)
+    if w is None:
+        w = np.ones(src.shape, dtype=np.float32)
+    w = np.asarray(w, dtype=np.float32)
+    if n_cap is None:
+        n_cap = int(n_nodes)
+    if m_cap is None:
+        m_cap = int(src.shape[0])
+    if src.shape[0] > m_cap:
+        raise ValueError(f"m_cap={m_cap} < num edges {src.shape[0]}")
+    if n_nodes > n_cap:
+        raise ValueError(f"n_cap={n_cap} < n_nodes {n_nodes}")
+    src, dst, w = _sort_coo(src, dst, w)
+    pad = m_cap - src.shape[0]
+    ghost = n_cap
+    src = np.concatenate([src, np.full(pad, ghost, np.int32)])
+    dst = np.concatenate([dst, np.full(pad, ghost, np.int32)])
+    w = np.concatenate([w, np.zeros(pad, np.float32)])
+    return Graph(
+        src=jnp.asarray(src),
+        dst=jnp.asarray(dst),
+        w=jnp.asarray(w),
+        n_nodes=jnp.asarray(n_nodes, jnp.int32),
+        n_cap=n_cap,
+        m_cap=m_cap,
+    )
+
+
+def from_undirected(
+    n_nodes: int,
+    u: np.ndarray,
+    v: np.ndarray,
+    w: np.ndarray | None = None,
+    *,
+    n_cap: int | None = None,
+    m_cap: int | None = None,
+    dedup: bool = True,
+) -> Graph:
+    """Build a :class:`Graph` from an undirected edge list.
+
+    Each edge ``{u, v}`` with ``u != v`` is materialized in both directions;
+    self-loops are kept once.  Duplicate undirected edges are merged by
+    summing weights when ``dedup``.
+    """
+    u = np.asarray(u, dtype=np.int64)
+    v = np.asarray(v, dtype=np.int64)
+    if w is None:
+        w = np.ones(u.shape, dtype=np.float32)
+    w = np.asarray(w, dtype=np.float32)
+    lo, hi = np.minimum(u, v), np.maximum(u, v)
+    if dedup and lo.size:
+        key = lo * (n_nodes + 1) + hi
+        order = np.argsort(key, kind="stable")
+        key, lo, hi, w = key[order], lo[order], hi[order], w[order]
+        first = np.ones_like(key, dtype=bool)
+        first[1:] = key[1:] != key[:-1]
+        run = np.cumsum(first) - 1
+        w = np.bincount(run, weights=w).astype(np.float32)
+        lo, hi = lo[first], hi[first]
+    loops = lo == hi
+    s = np.concatenate([lo, hi[~loops]])
+    d = np.concatenate([hi, lo[~loops]])
+    ww = np.concatenate([w, w[~loops]])
+    return from_coo(n_nodes, s, d, ww, n_cap=n_cap, m_cap=m_cap)
+
+
+def ghost_pad(values: Array, ghost_value=0) -> Array:
+    """Append the ghost slot to a per-vertex array of length n_cap."""
+    pad = jnp.full((1,) + values.shape[1:], ghost_value, values.dtype)
+    return jnp.concatenate([values, pad], axis=0)
+
+
+def from_networkx(g, *, n_cap: int | None = None, m_cap: int | None = None) -> Graph:
+    """Host-side import from a networkx (undirected) graph."""
+    import networkx as nx
+
+    if g.is_directed():
+        raise ValueError("from_networkx expects an undirected graph")
+    n = g.number_of_nodes()
+    nodes = {node: i for i, node in enumerate(g.nodes())}
+    u, v, w = [], [], []
+    for a, b, data in g.edges(data=True):
+        u.append(nodes[a])
+        v.append(nodes[b])
+        w.append(float(data.get("weight", 1.0)))
+    return from_undirected(
+        n, np.array(u or [0])[: len(u)], np.array(v or [0])[: len(v)],
+        np.array(w or [0.0])[: len(w)], n_cap=n_cap, m_cap=m_cap,
+    )

@@ -1,0 +1,96 @@
+"""Uniform-fanout neighbor sampling (GraphSAGE-style), jit-compatible.
+
+``minibatch_lg`` cells train on sampled k-hop subgraphs: ``batch_nodes``
+seeds, fanout ``[f1, f2]`` (15-10).  The sampler works on the CSR view of a
+:class:`~repro.graph.container.Graph` with **static output shapes**:
+
+* layer 0 frontier: ``[B]`` seed ids
+* layer 1 frontier: ``[B, f1]`` sampled neighbor ids (+ edge list)
+* layer 2 frontier: ``[B * f1, f2]`` ...
+
+Vertices with degree < fanout sample with replacement; degree-0 vertices
+(and ghost padding) yield self-edges with weight 0, which downstream
+segment-reductions ignore.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def _sample_layer(key, frontier, row_offsets, dst, fanout: int):
+    """Sample `fanout` neighbors for each vertex in `frontier`.
+
+    Returns (neighbors [F, fanout] int32, valid [F, fanout] bool).
+    """
+    start = row_offsets[frontier]
+    end = row_offsets[frontier + 1]
+    deg = end - start
+    r = jax.random.randint(
+        key, (frontier.shape[0], fanout), 0, jnp.iinfo(jnp.int32).max, dtype=jnp.int32
+    )
+    # uniform with replacement in [0, deg); degree-0 falls back to self
+    offs = jnp.where(deg[:, None] > 0, r % jnp.maximum(deg[:, None], 1), 0)
+    idx = start[:, None] + offs
+    nbrs = dst[jnp.clip(idx, 0, dst.shape[0] - 1)]
+    valid = jnp.broadcast_to(deg[:, None] > 0, nbrs.shape)
+    nbrs = jnp.where(valid, nbrs, frontier[:, None])
+    return nbrs, valid
+
+
+def neighbor_sample(
+    key,
+    seeds,
+    row_offsets,
+    dst,
+    fanouts: Sequence[int],
+):
+    """Multi-layer uniform neighbor sampling.
+
+    Args:
+      key: PRNG key.
+      seeds: int32[B] seed vertex ids.
+      row_offsets: int32[nv + 1] CSR offsets of the full graph.
+      dst: int32[m_cap] CSR/sorted-COO destination array.
+      fanouts: per-layer fanout, outermost first (e.g. ``(15, 10)``).
+
+    Returns:
+      A dict with, per layer ``l``:
+        ``src_l`` int32[F_l * fanout_l]: edge sources (frontier vertex ids,
+            repeated), ``dst_l``: sampled neighbors, ``valid_l``: bool mask,
+      plus ``frontiers``: list of frontier id arrays (layer 0 = seeds).
+      Shapes are static given (B, fanouts).
+    """
+    layers = []
+    frontiers = [seeds]
+    frontier = seeds
+    for li, f in enumerate(fanouts):
+        key, sub = jax.random.split(key)
+        nbrs, valid = _sample_layer(sub, frontier, row_offsets, dst, f)
+        src_e = jnp.repeat(frontier, f)
+        dst_e = nbrs.reshape(-1)
+        layers.append(
+            dict(src=src_e, dst=dst_e, valid=valid.reshape(-1), fanout=f)
+        )
+        frontier = dst_e
+        frontiers.append(frontier)
+    return dict(layers=layers, frontiers=frontiers)
+
+
+def subgraph_relabel(frontiers):
+    """Concatenate frontiers into one padded node list with positional ids.
+
+    The sampled computation graph is 'layered': layer l edges connect
+    positions in frontier[l] to positions in frontier[l+1].  Models consume
+    positional indexing directly, so no hash-based relabeling is needed —
+    this returns the flat node id list [sum_l F_l] and per-layer position
+    offsets.
+    """
+    sizes = [int(f.shape[0]) for f in frontiers]
+    offsets = [0]
+    for s in sizes[:-1]:
+        offsets.append(offsets[-1] + s)
+    all_nodes = jnp.concatenate(frontiers)
+    return all_nodes, offsets

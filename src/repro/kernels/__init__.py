@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the framework's gather/reduce hot spots.
+
+Kernels (each with a pure-jnp oracle in ref.py and a jit'd wrapper with XLA
+fallback in ops.py):
+
+* ``segsum``        — blocked prefix-sum; sorted segment-reduce = boundary
+                      gathers over the prefix (local-move scoring,
+                      aggregation, LP label-min).
+* ``spmm``          — bucketed fixed-degree SpMM via one-hot MXU gather
+                      (GNN message passing; Louvain super-vertex scans).
+* ``onehot_segsum`` — unsorted segment-sum as accumulated one-hot matmuls
+                      (Sigma recompute / community histograms).
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

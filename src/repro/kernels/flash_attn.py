@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: flash-attention forward (causal / sliding-window).
+
+The §Perf A-series identified f32 score-tile HBM round-trips as the
+dominant memory term of every LM training/prefill cell under XLA's
+chunked-attention lowering.  This kernel keeps the [block_q, block_k] score
+tile and the online-softmax state (m, l, acc) in VMEM across the k-block
+grid dimension — scores never touch HBM.
+
+Canonical TPU layout: grid = (B, H, n_q, n_k) with the k dimension
+innermost (sequential on a TensorCore), scratch accumulators persisting
+across k steps, output written on the last k step.  Causal and
+sliding-window masks are computed from absolute block offsets, so the same
+kernel serves train, prefill, and (q-length-1) decode.
+
+GQA callers repeat/reshape kv heads to the q-head count (zero-copy view);
+ops.flash_attention handles it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale, causal, window, block_q, block_k, n_k):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+
+    # skip fully-masked blocks (strictly above the causal diagonal)
+    run = True
+    if causal:
+        run = ki * block_k <= qi * block_q + block_q - 1
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # [bq, dh]
+        k = k_ref[0, 0].astype(jnp.float32)              # [bk, dh]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                # [bq, bk]
+        mask = jnp.ones_like(s, dtype=bool)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.where(jnp.isfinite(m_prev),
+                         jnp.exp(m_prev - m_safe), 0.0)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        o_ref[0, 0] = (
+            acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention_fwd(q, k, v, *, causal: bool = True, window=None,
+                        block_q: int = 128, block_k: int = 128,
+                        interpret: bool = True):
+    """q, k, v: [B, H, S, Dh] (same H; GQA handled by the ops wrapper).
+
+    Returns [B, H, Sq, Dh].  Sq/Sk must be multiples of the block sizes
+    (ops wrapper pads).
+    """
+    b, h, sq, dh = q.shape
+    sk = k.shape[2]
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk)
+    n_q, n_k = sq // block_q, sk // block_k
+    scale = 1.0 / (dh ** 0.5)
+    grid = (b, h, n_q, n_k)
+    kern = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_k=n_k,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, dh), lambda b, h, qi, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, dh), lambda b, h, qi, ki: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, dh), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

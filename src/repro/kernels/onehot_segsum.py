@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: unsorted segment-sum via one-hot MXU accumulation.
+
+Louvain's per-community reductions (Sigma recompute, community sizes,
+aggregation offsets) are unsorted scatter-adds keyed by community id.  The
+TPU-native form: for each block of values, build ``onehot(ids)`` and
+accumulate ``onehot^T @ values`` into a VMEM-resident [C, D] output — a
+pure-matmul scatter with deterministic ordering (unlike atomics in the
+paper's OpenMP build).
+
+Envelope: C * D * 4B must fit the VMEM output block (<= ~8 MB), i.e. this
+kernel targets moderate community counts — exactly the post-first-pass
+regime.  Large-C reductions use jax.ops.segment_sum in ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _onehot_segsum_kernel(ids_ref, v_ref, o_ref, *, num_segments: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    ids = ids_ref[...]                       # [BN]
+    v = v_ref[...].astype(jnp.float32)       # [BN, D]
+    bn = ids.shape[0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (num_segments, bn), 0)
+    onehot = (ids[None, :] == iota).astype(jnp.float32)   # [C, BN]
+    o_ref[...] += jnp.dot(onehot, v, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "block_n", "interpret"))
+def onehot_segsum(values, ids, *, num_segments: int, block_n: int = 512,
+                  interpret: bool = True):
+    """Unsorted segment sum: values [N, D], ids int32[N] -> [C, D]."""
+    n, d = values.shape
+    assert n % block_n == 0, (n, block_n)
+    assert num_segments * d * 4 <= 8 * 1024 * 1024, (
+        "output exceeds VMEM-resident envelope; use ops.segsum (XLA path)"
+    )
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        functools.partial(_onehot_segsum_kernel, num_segments=num_segments),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((num_segments, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_segments, d), jnp.float32),
+        interpret=interpret,
+    )(ids, values)

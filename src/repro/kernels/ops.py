@@ -1,0 +1,139 @@
+"""Jit'd public wrappers around the Pallas kernels, with XLA fallbacks.
+
+Every op takes ``impl`` in {'auto', 'pallas', 'xla'}:
+  * 'pallas' — the kernel (interpret-mode on CPU, compiled on TPU);
+  * 'xla'    — the pure-jnp reference path (always available, any size);
+  * 'auto'   — pallas when the input fits the kernel's envelope and we are
+               on a TPU backend, else xla.  On this CPU container 'auto'
+               resolves to xla so the system never pays interpret-mode cost
+               in production paths; tests pin impl='pallas'.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.segsum import cumsum_blocked
+from repro.kernels.spmm import bucket_spmm as _bucket_spmm_kernel
+from repro.kernels.onehot_segsum import onehot_segsum as _onehot_segsum_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_rows(x, multiple):
+    m = x.shape[0]
+    pad = (-m) % multiple
+    if pad == 0:
+        return x, m
+    pad_block = jnp.zeros((pad,) + x.shape[1:], x.dtype)
+    return jnp.concatenate([x, pad_block], axis=0), m
+
+
+def cumsum(x, *, impl: str = "auto", block_m: int = 1024):
+    """Inclusive prefix sum along axis 0; x [M] or [M, D]."""
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[:, None]
+    if impl == "xla" or (impl == "auto" and not _on_tpu()):
+        out = ref.cumsum_ref(x)
+    else:
+        xp, m = _pad_rows(x, block_m)
+        out = cumsum_blocked(xp, block_m=block_m, interpret=not _on_tpu())[: x.shape[0]]
+    return out[:, 0] if squeeze else out
+
+
+def segsum_sorted(values, segment_ids, num_segments, *, impl: str = "auto",
+                  block_m: int = 1024):
+    """Segment sum over sorted ids via the blocked-cumsum kernel.
+
+    sum over segment s = prefix[end_s] - prefix[start_s]: two gathers of the
+    kernel's output at boundaries found with searchsorted (no scatter).
+    """
+    if impl == "xla" or (impl == "auto" and not _on_tpu()):
+        return ref.segsum_sorted_ref(values, segment_ids, num_segments)
+    squeeze = values.ndim == 1
+    v = values[:, None] if squeeze else values
+    prefix = cumsum(v, impl=impl, block_m=block_m)
+    zero = jnp.zeros((1, prefix.shape[1]), prefix.dtype)
+    prefix = jnp.concatenate([zero, prefix], axis=0)          # [M+1, D]
+    bounds = jnp.searchsorted(
+        segment_ids, jnp.arange(num_segments + 1, dtype=segment_ids.dtype)
+    )
+    out = prefix[bounds[1:]] - prefix[bounds[:-1]]
+    return (out[:, 0] if squeeze else out).astype(values.dtype)
+
+
+def spmm(nbr, w, x, *, impl: str = "auto", block_n: int = 64):
+    """Fixed-degree neighbor aggregation out[i] = sum_k w[i,k] x[nbr[i,k]].
+
+    Falls back to XLA gather when X exceeds the VMEM-resident envelope.
+    """
+    nx, d = x.shape
+    fits = nx * d * 4 <= 8 * 1024 * 1024
+    if impl == "xla" or (impl == "auto" and (not _on_tpu() or not fits)):
+        return ref.bucket_spmm_ref(nbr, w, x)
+    nbr_p, n = _pad_rows(nbr, block_n)
+    w_p, _ = _pad_rows(w, block_n)
+    out = _bucket_spmm_kernel(
+        nbr_p, w_p, x.astype(jnp.float32),
+        block_n=block_n, interpret=not _on_tpu(),
+    )
+    return out[:n].astype(x.dtype)
+
+
+def segsum(values, ids, num_segments, *, impl: str = "auto", block_n: int = 512):
+    """Unsorted segment sum; values [N] or [N, D], ids int32[N]."""
+    squeeze = values.ndim == 1
+    v = values[:, None] if squeeze else values
+    fits = num_segments * v.shape[1] * 4 <= 8 * 1024 * 1024
+    if impl == "xla" or (impl == "auto" and (not _on_tpu() or not fits)):
+        out = ref.onehot_segsum_ref(v, ids, num_segments)
+    else:
+        v_p, n = _pad_rows(v, block_n)
+        # pad ids to an out-of-range segment? No: clamp into range with zero
+        # values (padding rows are zeros, any segment absorbs them safely).
+        ids_p, _ = _pad_rows(ids, block_n)
+        out = _onehot_segsum_kernel(
+            v_p.astype(jnp.float32), ids_p,
+            num_segments=num_segments, block_n=block_n,
+            interpret=not _on_tpu(),
+        ).astype(v.dtype)
+    return out[:, 0] if squeeze else out
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, impl: str = "auto",
+                    block_q: int = 128, block_k: int = 128):
+    """Flash attention with GQA support.
+
+    q: [B, Sq, Hq, Dh]; k, v: [B, Sk, Hkv, Dh] with Hq % Hkv == 0.
+    Returns [B, Sq, Hq, Dh].
+    """
+    from repro.kernels.flash_attn import flash_attention_fwd
+
+    b, sq, hq, dh = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    # layout to [B, H, S, D]; repeat kv heads to the q-head count
+    qt = jnp.transpose(q, (0, 2, 1, 3))
+    kt = jnp.repeat(jnp.transpose(k, (0, 2, 1, 3)), g, axis=1)
+    vt = jnp.repeat(jnp.transpose(v, (0, 2, 1, 3)), g, axis=1)
+    if impl == "xla" or (impl == "auto" and not _on_tpu()):
+        out = ref.flash_attention_ref(qt, kt, vt, causal=causal, window=window)
+    else:
+        bq = min(block_q, sq)
+        bk = min(block_k, kt.shape[2])
+        pq = (-sq) % bq
+        pk = (-kt.shape[2]) % bk
+        qt2 = jnp.pad(qt, ((0, 0), (0, 0), (0, pq), (0, 0)))
+        kt2 = jnp.pad(kt, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        vt2 = jnp.pad(vt, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        out = flash_attention_fwd(
+            qt2, kt2, vt2, causal=causal, window=window,
+            block_q=bq, block_k=bk, interpret=not _on_tpu(),
+        )[:, :, :sq]
+    return jnp.transpose(out, (0, 2, 1, 3))

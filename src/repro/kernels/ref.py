@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth used by the interpret-mode
+allclose sweeps in ``tests/test_kernels.py`` and by the XLA fallback path in
+:mod:`repro.kernels.ops`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cumsum_ref(x, axis=0):
+    """Inclusive prefix sum along ``axis`` (f32 accumulation)."""
+    return jnp.cumsum(x.astype(jnp.float32), axis=axis).astype(x.dtype)
+
+
+def segsum_sorted_ref(values, segment_ids, num_segments):
+    """Segment sum over *sorted* segment ids.
+
+    values: [M] or [M, D]; segment_ids: int32[M] nondecreasing.
+    """
+    return jax.ops.segment_sum(
+        values, segment_ids, num_segments=num_segments,
+        indices_are_sorted=True,
+    )
+
+
+def bucket_spmm_ref(nbr, w, x):
+    """Fixed-degree neighbor aggregation.
+
+    nbr: int32[N, K] neighbor row indices into x (padding -> any index with
+        w == 0), w: f32[N, K] edge weights, x: [Nx, D] features.
+    Returns [N, D]: out[i] = sum_k w[i,k] * x[nbr[i,k]].
+    """
+    gathered = x[nbr]                       # [N, K, D]
+    return jnp.einsum("nk,nkd->nd", w, gathered.astype(w.dtype)).astype(x.dtype)
+
+
+def onehot_segsum_ref(values, ids, num_segments):
+    """Unsorted segment sum (the MXU one-hot formulation's oracle).
+
+    values: [N, D]; ids: int32[N] in [0, num_segments).
+    """
+    return jax.ops.segment_sum(values, ids, num_segments=num_segments)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """Plain softmax attention oracle. q/k/v: [B, H, S, Dh]."""
+    b, h, sq, dh = q.shape
+    sk = k.shape[2]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (dh ** 0.5)
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

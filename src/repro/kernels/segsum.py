@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: blocked prefix-sum (the segment-reduction workhorse).
+
+The paper's hot loops (local-move scoring, aggregation, LP label-min) are
+all reduce-by-key over *sorted* runs.  On TPU the bandwidth-optimal form is
+a streaming **blocked cumsum** with a VMEM carry — a segment sum over sorted
+ids is then two O(1)-per-segment gathers of the prefix array at run
+boundaries (``ops.segsum_sorted``), with no scatter anywhere.
+
+Grid steps on TPU execute sequentially on a core, so the carry lives in a
+VMEM scratch accumulator that persists across steps (the flash-attention
+accumulator pattern).  Block shape: (block_m, D) — D is the lane dimension
+(pad to multiples of 128 for real hardware; the wrapper handles ragged
+tails by padding).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _cumsum_kernel(x_ref, o_ref, carry_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    c = jnp.cumsum(x, axis=0)
+    o_ref[...] = (c + carry_ref[...]).astype(o_ref.dtype)
+    carry_ref[...] = carry_ref[...] + c[-1:, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def cumsum_blocked(x, *, block_m: int = 1024, interpret: bool = True):
+    """Inclusive prefix sum along axis 0 of ``x [M, D]`` (f32 accumulate).
+
+    M must be a multiple of ``block_m`` (ops.py pads).  ``interpret=True``
+    runs the kernel body on CPU for validation; on TPU pass False.
+    """
+    m, d = x.shape
+    assert m % block_m == 0, (m, block_m)
+    grid = (m // block_m,)
+    return pl.pallas_call(
+        _cumsum_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_m, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,642 @@
+"""Step builders: one (arch x shape x mesh) cell -> jit-able step + specs.
+
+``build_cell`` returns a :class:`CellPlan` carrying the step function,
+abstract inputs (ShapeDtypeStructs — nothing is allocated), and in/out
+shardings, ready for ``jax.jit(...).lower(...).compile()`` in dryrun.py or
+for real execution in train.py (which passes concrete arrays of the same
+structure).
+
+Sharding policy lives here (DESIGN.md §4):
+  * LM: FSDP params/optimizer over ('pod','data'), tensor-parallel over
+    'model'; batch over ('pod','data'); activations constrained batch-sharded.
+  * GNN full-graph: nodes over ('pod','data'), edges over the whole mesh.
+  * GNN sampled/batched: pure data parallel over seeds/graphs.
+  * recsys: embedding-table rows over 'model', batch over ('pod','data').
+  * louvain: vertex-aligned edge shards over the flattened mesh via
+    shard_map (core/distributed.py).
+
+Every sharding is *divisibility-safe*: mesh axes that do not divide an
+array dimension are dropped for that dimension (e.g. smollm's 15 heads
+shard as the packed 960-wide projection instead).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchSpec
+from repro.distributed.sharding import ShardingRules
+from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class CellPlan:
+    arch_id: str
+    shape_name: str
+    step_name: str                 # train_step | serve_step | prefill_step
+    step_fn: Callable
+    args: tuple                    # abstract (SDS) args
+    in_shardings: Any
+    out_shardings: Any
+    model_flops: float             # useful work per step (6ND etc.)
+    notes: str = ""
+    donate: tuple = ()
+
+
+# --------------------------------------------------------------------------
+# sharding helpers
+# --------------------------------------------------------------------------
+
+def _safe_spec(mesh, rules: ShardingRules, axes, shape) -> P:
+    """Resolve logical axes -> PartitionSpec.
+
+    Joint resolution: a mesh axis is consumed only if it is actually kept,
+    and an axis is kept only when (a) it exists on this mesh, (b) it has not
+    been consumed by an earlier dim, and (c) the running product divides the
+    dim size.  (E.g. mixtral's 8-expert dim cannot take model=16, so 'model'
+    stays available for the expert-FFN width dim.)
+    """
+    logical = tuple(axes) + (None,) * (len(shape) - len(axes))
+    used: set = set()
+    parts = []
+    for dim, ax in zip(shape, logical):
+        names = rules.rules.get(ax, ()) if ax is not None else ()
+        kept = []
+        prod = 1
+        for n in names:
+            if n not in mesh.axis_names or n in used:
+                continue
+            if dim % (prod * mesh.shape[n]) == 0:
+                kept.append(n)
+                prod *= mesh.shape[n]
+        used.update(kept)
+        if not kept:
+            parts.append(None)
+        elif len(kept) == 1:
+            parts.append(kept[0])
+        else:
+            parts.append(tuple(kept))
+    return P(*parts)
+
+
+def shard_tree(mesh, rules, axes_tree, abs_tree):
+    """NamedShardings for an abstract tree given a logical-axes tree."""
+    def one(axes, node):
+        return NamedSharding(mesh, _safe_spec(mesh, rules, axes, node.shape))
+
+    return jax.tree.map(
+        one, axes_tree, abs_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        ),
+    )
+
+
+def replicated(mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def _opt_axes(param_axes):
+    return dict(
+        m=param_axes, v=param_axes,
+        step=(None,),
+    )
+
+
+# --------------------------------------------------------------------------
+# LM cells
+# --------------------------------------------------------------------------
+
+def _lm_constrain(mesh, rules):
+    def constrain(x):
+        axes = ("batch",) + (None,) * (x.ndim - 1)
+        spec = _safe_spec(mesh, rules, axes, x.shape)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    return constrain
+
+
+def _lm_cell(spec: ArchSpec, shape_name: str, mesh, rules) -> CellPlan:
+    from repro.models import transformer as T
+
+    cfg = spec.config
+    sh = spec.shapes[shape_name]
+    B, S = sh["global_batch"], sh["seq_len"]
+    kind = sh["kind"]
+    params_abs = jax.eval_shape(partial(T.init_params, cfg=cfg),
+                                jax.random.PRNGKey(0))
+    p_axes = T.param_logical_axes(cfg)
+    p_shard = shard_tree(mesh, rules, p_axes, params_abs)
+    constrain = _lm_constrain(mesh, rules)
+    batch_shard = NamedSharding(mesh, _safe_spec(mesh, rules, ("batch", None), (B, S)))
+
+    if kind == "train":
+        opt_cfg = AdamWConfig()
+        opt_abs = jax.eval_shape(adamw_init, params_abs)
+        o_shard = shard_tree(mesh, rules, _opt_axes(p_axes), opt_abs)
+
+        def train_step(params, opt_state, tokens, targets):
+            loss, grads = jax.value_and_grad(T.loss_fn)(
+                params, tokens, targets, cfg, constrain)
+            lr_scale = warmup_cosine(opt_state["step"])
+            params, opt_state, metrics = adamw_update(
+                params, grads, opt_state, opt_cfg, lr_scale)
+            metrics["loss"] = loss
+            return params, opt_state, metrics
+
+        args = (params_abs, opt_abs,
+                SDS((B, S), jnp.int32), SDS((B, S), jnp.int32))
+        in_sh = (p_shard, o_shard, batch_shard, batch_shard)
+        out_sh = (p_shard, o_shard,
+                  replicated(mesh, dict(grad_norm=0., lr=0., loss=0.)))
+        flops = 6.0 * cfg.active_param_count() * B * S
+        return CellPlan(spec.arch_id, shape_name, "train_step", train_step,
+                        args, in_sh, out_sh, flops, donate=(0, 1))
+
+    if kind == "prefill":
+        def prefill_step(params, tokens):
+            logits = T.forward(params, tokens, cfg, constrain)
+            return logits[:, -1]
+
+        args = (params_abs, SDS((B, S), jnp.int32))
+        out_abs = jax.eval_shape(prefill_step, params_abs, args[1])
+        out_sh = NamedSharding(
+            mesh, _safe_spec(mesh, rules, ("batch", None), out_abs.shape))
+        flops = 2.0 * cfg.active_param_count() * B * S
+        return CellPlan(spec.arch_id, shape_name, "prefill_step", prefill_step,
+                        args, (p_shard, batch_shard), out_sh, flops)
+
+    # decode: one new token against a cache of seq_len context.
+    # Params use 2-D tensor-parallel sharding (no 'fsdp'; widths over BOTH
+    # mesh axes): FSDP would re-all-gather weights each step to serve ONE
+    # token, and model-only TP leaves mixtral-8x22b's expert FFNs at
+    # 18 GB/device (E=8 cannot take model=16).  2-D TP keeps every weight
+    # resident (282 GB / 256 chips = 1.1 GB) with only activation psums.
+    rules = rules.with_overrides(
+        fsdp=(), mlp=("model", "data"), heads=("model", "data"),
+        vocab=("model", "data"),
+    )
+    # serving keeps no optimizer state and needs no f32 master: bf16 weights
+    # halve resident bytes and per-step weight reads (§Perf B3)
+    params_abs = jax.tree.map(
+        lambda s: SDS(s.shape, cfg.compute_dtype), params_abs)
+    p_shard = shard_tree(mesh, rules, p_axes, params_abs)
+    serve_cfg = dataclasses.replace(cfg, moe_dropless=True) if cfg.is_moe else cfg
+    cache_abs = jax.eval_shape(
+        partial(T.init_cache, serve_cfg, B, S))
+    # Cache shards along the LENGTH dim (flash-decoding split-K): attention
+    # contracts locally per length shard and only softmax stats + [B, D]
+    # partials cross chips.  (head_dim sharding fits memory equally but
+    # makes QK^T contract a sharded dim — XLA all-gathers K in f32:
+    # 1.07e9 B/layer/step on command-r decode_32k.  §Perf B2.)
+    cache_axes = dict(
+        k=("stack", "batch", "kv_len", "kv_heads", None),
+        v=("stack", "batch", "kv_len", "kv_heads", None),
+        pos=("stack", "batch", "kv_len"),
+        t=(None,),
+    )
+    c_shard = shard_tree(mesh, rules, cache_axes, cache_abs)
+
+    def serve_step(params, cache, tokens):
+        return T.decode_step(params, cache, tokens, serve_cfg)
+
+    args = (params_abs, cache_abs, SDS((B,), jnp.int32))
+    tok_shard = NamedSharding(mesh, _safe_spec(mesh, rules, ("batch",), (B,)))
+    logits_abs, _ = jax.eval_shape(serve_step, *args)
+    logit_shard = NamedSharding(
+        mesh, _safe_spec(mesh, rules, ("batch", None), logits_abs.shape))
+    flops = 2.0 * serve_cfg.active_param_count() * B
+    return CellPlan(spec.arch_id, shape_name, "serve_step", serve_step,
+                    args, (p_shard, c_shard, tok_shard),
+                    (logit_shard, c_shard), flops, donate=(1,))
+
+
+# --------------------------------------------------------------------------
+# GNN cells
+# --------------------------------------------------------------------------
+
+def _round_up(x, m):
+    return ((x + m - 1) // m) * m
+
+
+def _gnn_model(spec: ArchSpec, d_in: int, n_classes: int):
+    """Adapt the arch config to a shape's feature/class dims + bind fns."""
+    from repro.models import gnn as G
+
+    cfg = dataclasses.replace(spec.config, d_in=d_in, n_classes=n_classes)
+    if spec.arch_id.startswith("gcn"):
+        return cfg, G.init_gcn, lambda p, x, s, d, w, c: G.gcn_forward(p, x, s, d, c)
+    if spec.arch_id.startswith("gatedgcn"):   # before 'gat' (prefix!)
+        return cfg, G.init_gatedgcn, G.gatedgcn_forward
+    if spec.arch_id.startswith("gat"):
+        return cfg, G.init_gat, lambda p, x, s, d, w, c: G.gat_forward(p, x, s, d, c)
+    raise KeyError(spec.arch_id)
+
+
+def _gnn_flops(spec: ArchSpec, cfg, nv, ne):
+    d_h = getattr(cfg, "d_hidden", 32)
+    L = cfg.n_layers
+    d_in = getattr(cfg, "d_in", d_h)
+    if spec.arch_id == "nequip":
+        C = cfg.d_hidden
+        paths = 11
+        return L * ne * paths * C * 25 * 2.0 + L * ne * cfg.n_rbf * 16 * 2
+    heads = getattr(cfg, "n_heads", 1)
+    per_edge = 2.0 * d_h * heads
+    per_node = 2.0 * d_in * d_h + 2.0 * d_h * d_h * (5 if "gated" in spec.arch_id else 1)
+    return L * (nv * per_node + ne * per_edge)
+
+
+def _gnn_cell(spec: ArchSpec, shape_name: str, mesh, rules) -> CellPlan:
+    sh = spec.shapes[shape_name]
+    kind = sh["kind"]
+    flat = int(np.prod(list(mesh.shape.values())))
+    dp = mesh.shape.get("pod", 1) * mesh.shape["data"]
+    opt_cfg = AdamWConfig(weight_decay=0.0)
+
+    if kind == "batched":
+        # molecule: batch of small graphs, flattened with a ghost slot
+        Bg, n_per, e_per = sh["batch"], sh["n_nodes"], sh["n_edges"]
+        nv = Bg * n_per + 1
+        ne = _round_up(Bg * e_per * 2, flat)
+        if spec.arch_id == "nequip":
+            from repro.models.gnn import nequip as NQ
+            cfg = spec.config
+            init = partial(NQ.init_nequip, cfg=cfg)
+            params_abs = jax.eval_shape(init, jax.random.PRNGKey(0))
+
+            def loss(params, species, pos, src, dst, gid, y):
+                e = NQ.nequip_forward(params, species, pos, src, dst, cfg)
+                e_g = jax.ops.segment_sum(e, gid, num_segments=Bg + 1)[:Bg]
+                return jnp.mean((e_g - y) ** 2)
+
+            def train_step(params, opt, species, pos, src, dst, gid, y):
+                l, g = jax.value_and_grad(loss)(params, species, pos, src, dst, gid, y)
+                params, opt, m = adamw_update(params, g, opt, opt_cfg)
+                m["loss"] = l
+                return params, opt, m
+
+            args = (params_abs, jax.eval_shape(adamw_init, params_abs),
+                    SDS((nv,), jnp.int32), SDS((nv, 3), jnp.float32),
+                    SDS((ne,), jnp.int32), SDS((ne,), jnp.int32),
+                    SDS((nv,), jnp.int32), SDS((Bg,), jnp.float32))
+            in_sh = (replicated(mesh, params_abs),
+                     replicated(mesh, args[1]),
+                     NamedSharding(mesh, P()), NamedSharding(mesh, P()),
+                     NamedSharding(mesh, _safe_spec(mesh, rules, ("edges",), (ne,))),
+                     NamedSharding(mesh, _safe_spec(mesh, rules, ("edges",), (ne,))),
+                     NamedSharding(mesh, P()), NamedSharding(mesh, P()))
+            out_sh = (replicated(mesh, params_abs), replicated(mesh, args[1]),
+                      replicated(mesh, dict(grad_norm=0., lr=0., loss=0.)))
+            fl = _gnn_flops(spec, cfg, nv, ne)
+            return CellPlan(spec.arch_id, shape_name, "train_step", train_step,
+                            args, in_sh, out_sh, fl, donate=(0, 1))
+        d_in, n_cls = sh["d_feat"], 8
+        cfg, init, fwd = _gnn_model(spec, d_in, n_cls)
+        params_abs = jax.eval_shape(partial(init, cfg=cfg), jax.random.PRNGKey(0))
+
+        def loss(params, x, src, dst, w, gid, y):
+            out = fwd(params, x, src, dst, w, cfg)         # [nv, C]
+            pooled = jax.ops.segment_sum(out, gid, num_segments=Bg + 1)[:Bg]
+            logz = jax.nn.logsumexp(pooled, -1)
+            gold = jnp.take_along_axis(pooled, y[:, None], -1)[:, 0]
+            return jnp.mean(logz - gold)
+
+        def train_step(params, opt, x, src, dst, w, gid, y):
+            l, g = jax.value_and_grad(loss)(params, x, src, dst, w, gid, y)
+            params, opt, m = adamw_update(params, g, opt, opt_cfg)
+            m["loss"] = l
+            return params, opt, m
+
+        args = (params_abs, jax.eval_shape(adamw_init, params_abs),
+                SDS((nv, d_in), jnp.float32),
+                SDS((ne,), jnp.int32), SDS((ne,), jnp.int32),
+                SDS((ne,), jnp.float32),
+                SDS((nv,), jnp.int32), SDS((Bg,), jnp.int32))
+        e_sh = NamedSharding(mesh, _safe_spec(mesh, rules, ("edges",), (ne,)))
+        in_sh = (replicated(mesh, params_abs), replicated(mesh, args[1]),
+                 NamedSharding(mesh, P()), e_sh, e_sh, e_sh,
+                 NamedSharding(mesh, P()), NamedSharding(mesh, P()))
+        out_sh = (replicated(mesh, params_abs), replicated(mesh, args[1]),
+                  replicated(mesh, dict(grad_norm=0., lr=0., loss=0.)))
+        fl = _gnn_flops(spec, cfg, nv, ne)
+        return CellPlan(spec.arch_id, shape_name, "train_step", train_step,
+                        args, in_sh, out_sh, fl, donate=(0, 1))
+
+    if kind == "sampled":
+        # neighbor-sampled training on a big graph held as CSR inputs
+        N, E = sh["n_nodes"], sh["n_edges"]
+        Bn = sh["batch_nodes"]
+        f1, f2 = sh["fanout"]
+        d_in, n_cls = sh["d_feat"], sh["n_classes"]
+        nv_full = N + 1
+        ne_full = _round_up(E, flat)
+        p1 = Bn * f1
+        p2 = p1 * f2
+        P_nodes = Bn + p1 + p2 + 1                      # + ghost
+        ne_sub = _round_up(2 * (p1 + p2), flat)
+
+        if spec.arch_id == "nequip":
+            from repro.models.gnn import nequip as NQ
+            cfg = spec.config
+            init = partial(NQ.init_nequip, cfg=cfg)
+            fwd = lambda p, x, s, d, w, c: None  # unused below
+        else:
+            cfg, init, fwd = _gnn_model(spec, d_in, n_cls)
+        params_abs = jax.eval_shape(partial(init, cfg=cfg), jax.random.PRNGKey(0))
+
+        from repro.graph.sampler import neighbor_sample
+
+        def make_subgraph(key, seeds, row_offsets, dst_full):
+            s = neighbor_sample(key, seeds, row_offsets, dst_full, (f1, f2))
+            f0, fr1, fr2 = s["frontiers"]
+            nodes = jnp.concatenate([f0, fr1, fr2])
+            ghost = P_nodes - 1
+            # positional edges: hop1 nbrs -> seeds, hop2 nbrs -> hop1
+            src1 = Bn + jnp.arange(p1, dtype=jnp.int32)
+            dst1 = jnp.repeat(jnp.arange(Bn, dtype=jnp.int32), f1)
+            src2 = Bn + p1 + jnp.arange(p2, dtype=jnp.int32)
+            dst2 = Bn + jnp.repeat(jnp.arange(p1, dtype=jnp.int32), f2)
+            esrc = jnp.concatenate([src1, src2])
+            edst = jnp.concatenate([dst1, dst2])
+            val = jnp.concatenate([s["layers"][0]["valid"],
+                                   s["layers"][1]["valid"]])
+            # both directions + padding to static ne_sub
+            esrc2 = jnp.concatenate([esrc, edst])
+            edst2 = jnp.concatenate([edst, esrc])
+            val2 = jnp.concatenate([val, val])
+            pad = ne_sub - esrc2.shape[0]
+            esrc2 = jnp.concatenate([jnp.where(val2, esrc2, ghost),
+                                     jnp.full((pad,), ghost, jnp.int32)])
+            edst2 = jnp.concatenate([jnp.where(val2, edst2, ghost),
+                                     jnp.full((pad,), ghost, jnp.int32)])
+            wsub = (esrc2 < ghost).astype(jnp.float32)
+            return nodes, esrc2, edst2, wsub
+
+        def loss(params, x_sub, esrc, edst, wsub, labels, pos_sub=None,
+                 species_sub=None):
+            if spec.arch_id == "nequip":
+                from repro.models.gnn import nequip as NQ
+                e = NQ.nequip_forward(params, species_sub, pos_sub, esrc, edst, cfg)
+                return jnp.mean((e[:Bn] - labels.astype(jnp.float32)) ** 2)
+            out = fwd(params, x_sub, esrc, edst, wsub, cfg)
+            logits = out[:Bn]
+            logz = jax.nn.logsumexp(logits, -1)
+            gold = jnp.take_along_axis(logits, labels[:Bn, None], -1)[:, 0]
+            return jnp.mean(logz - gold)
+
+        def train_step(params, opt, key, seeds, labels, row_offsets,
+                       dst_full, feats):
+            nodes, esrc, edst, wsub = make_subgraph(
+                key, seeds, row_offsets, dst_full)
+            ghostf = jnp.zeros((1, feats.shape[1]), feats.dtype)
+            x_sub = jnp.concatenate([feats[nodes], ghostf], axis=0)
+            if spec.arch_id == "nequip":
+                pos_sub = x_sub[:, :3].astype(jnp.float32)
+                species_sub = (nodes % cfg.n_species).astype(jnp.int32)
+                species_sub = jnp.concatenate(
+                    [species_sub, jnp.zeros((1,), jnp.int32)])
+                l, g = jax.value_and_grad(loss)(
+                    params, x_sub, esrc, edst, wsub, labels,
+                    pos_sub, species_sub)
+            else:
+                l, g = jax.value_and_grad(loss)(
+                    params, x_sub, esrc, edst, wsub, labels)
+            params, opt, m = adamw_update(params, g, opt, opt_cfg)
+            m["loss"] = l
+            return params, opt, m
+
+        args = (params_abs, jax.eval_shape(adamw_init, params_abs),
+                SDS((2,), jnp.uint32),
+                SDS((Bn,), jnp.int32), SDS((Bn,), jnp.int32),
+                SDS((nv_full + 1,), jnp.int32),
+                SDS((ne_full,), jnp.int32),
+                SDS((nv_full, d_in), jnp.float32))
+        seed_sh = NamedSharding(mesh, _safe_spec(mesh, rules, ("batch",), (Bn,)))
+        in_sh = (replicated(mesh, params_abs), replicated(mesh, args[1]),
+                 NamedSharding(mesh, P()),
+                 seed_sh, seed_sh,
+                 NamedSharding(mesh, P()),
+                 NamedSharding(mesh, _safe_spec(mesh, rules, ("edges",), (ne_full,))),
+                 NamedSharding(mesh, _safe_spec(mesh, rules, ("batch", None),
+                                                (nv_full, d_in))))
+        out_sh = (replicated(mesh, params_abs), replicated(mesh, args[1]),
+                  replicated(mesh, dict(grad_norm=0., lr=0., loss=0.)))
+        fl = _gnn_flops(spec, spec.config, P_nodes, ne_sub)
+        return CellPlan(spec.arch_id, shape_name, "train_step", train_step,
+                        args, in_sh, out_sh, fl, donate=(0, 1),
+                        notes="sampler inside the step (jit'd)")
+
+    # full-graph training
+    N, E = sh["n_nodes"], sh["n_edges"]
+    d_in, n_cls = sh["d_feat"], sh["n_classes"]
+    dp_total = mesh.shape.get("pod", 1) * mesh.shape["data"]
+    nv = _round_up(N, dp_total * mesh.shape["model"]) + 1
+    ne = _round_up(E, flat)
+
+    if spec.arch_id == "nequip":
+        from repro.models.gnn import nequip as NQ
+        cfg = spec.config
+        params_abs = jax.eval_shape(partial(NQ.init_nequip, cfg=cfg),
+                                    jax.random.PRNGKey(0))
+
+        def loss(params, species, pos, src, dst, y, mask):
+            e = NQ.nequip_forward(params, species, pos, src, dst, cfg)
+            return jnp.sum(((e - y) ** 2) * mask) / jnp.maximum(mask.sum(), 1)
+
+        def train_step(params, opt, species, pos, src, dst, y, mask):
+            l, g = jax.value_and_grad(loss)(params, species, pos, src, dst, y, mask)
+            params, opt, m = adamw_update(params, g, opt, opt_cfg)
+            m["loss"] = l
+            return params, opt, m
+
+        node_sh = NamedSharding(mesh, _safe_spec(mesh, rules, ("batch",), (nv - 1 + 1,)))
+        args = (params_abs, jax.eval_shape(adamw_init, params_abs),
+                SDS((nv,), jnp.int32), SDS((nv, 3), jnp.float32),
+                SDS((ne,), jnp.int32), SDS((ne,), jnp.int32),
+                SDS((nv,), jnp.float32), SDS((nv,), jnp.float32))
+        e_sh = NamedSharding(mesh, _safe_spec(mesh, rules, ("edges",), (ne,)))
+        in_sh = (replicated(mesh, params_abs), replicated(mesh, args[1]),
+                 node_sh, NamedSharding(mesh, _safe_spec(mesh, rules, ("batch", None), (nv, 3))),
+                 e_sh, e_sh, node_sh, node_sh)
+        out_sh = (replicated(mesh, params_abs), replicated(mesh, args[1]),
+                  replicated(mesh, dict(grad_norm=0., lr=0., loss=0.)))
+        fl = _gnn_flops(spec, cfg, nv, ne)
+        return CellPlan(spec.arch_id, shape_name, "train_step", train_step,
+                        args, in_sh, out_sh, fl, donate=(0, 1))
+
+    cfg, init, fwd = _gnn_model(spec, d_in, n_cls)
+    params_abs = jax.eval_shape(partial(init, cfg=cfg), jax.random.PRNGKey(0))
+
+    def loss(params, x, src, dst, w, y, mask):
+        out = fwd(params, x, src, dst, w, cfg)
+        logz = jax.nn.logsumexp(out, -1)
+        gold = jnp.take_along_axis(out, y[:, None], -1)[:, 0]
+        return jnp.sum((logz - gold) * mask) / jnp.maximum(mask.sum(), 1)
+
+    def train_step(params, opt, x, src, dst, w, y, mask):
+        l, g = jax.value_and_grad(loss)(params, x, src, dst, w, y, mask)
+        params, opt, m = adamw_update(params, g, opt, opt_cfg)
+        m["loss"] = l
+        return params, opt, m
+
+    args = (params_abs, jax.eval_shape(adamw_init, params_abs),
+            SDS((nv, d_in), jnp.float32),
+            SDS((ne,), jnp.int32), SDS((ne,), jnp.int32), SDS((ne,), jnp.float32),
+            SDS((nv,), jnp.int32), SDS((nv,), jnp.float32))
+    e_sh = NamedSharding(mesh, _safe_spec(mesh, rules, ("edges",), (ne,)))
+    node_sh = NamedSharding(mesh, _safe_spec(mesh, rules, ("batch", None), (nv, d_in)))
+    lab_sh = NamedSharding(mesh, _safe_spec(mesh, rules, ("batch",), (nv,)))
+    in_sh = (replicated(mesh, params_abs), replicated(mesh, args[1]),
+             node_sh, e_sh, e_sh, e_sh, lab_sh, lab_sh)
+    out_sh = (replicated(mesh, params_abs), replicated(mesh, args[1]),
+              replicated(mesh, dict(grad_norm=0., lr=0., loss=0.)))
+    fl = _gnn_flops(spec, cfg, nv, ne)
+    return CellPlan(spec.arch_id, shape_name, "train_step", train_step,
+                    args, in_sh, out_sh, fl, donate=(0, 1))
+
+
+# --------------------------------------------------------------------------
+# recsys cells
+# --------------------------------------------------------------------------
+
+def _bst_flops(cfg, batch):
+    d = cfg.embed_dim
+    s = cfg.seq_len + 1
+    attn = 4 * s * d * d + 2 * s * s * d
+    ffn = 2 * s * d * cfg.d_ff * 2
+    flat = s * d + d + cfg.n_user_fields * d
+    mlp_dims = [flat] + list(cfg.mlp) + [1]
+    mlp = sum(2 * a * b for a, b in zip(mlp_dims[:-1], mlp_dims[1:]))
+    return batch * float(cfg.n_blocks * (attn + ffn) + mlp)
+
+
+def _recsys_cell(spec: ArchSpec, shape_name: str, mesh, rules) -> CellPlan:
+    from repro.models import recsys as R
+
+    cfg = spec.config
+    sh = spec.shapes[shape_name]
+    kind = sh["kind"]
+    B = sh["batch"]
+    hot = 3
+    params_abs = jax.eval_shape(partial(R.init_bst, cfg=cfg),
+                                jax.random.PRNGKey(0))
+    p_axes = R.bst.param_logical_axes(cfg) if hasattr(R, "bst") else None
+    from repro.models.recsys import bst as BSTmod
+    p_axes = BSTmod.param_logical_axes(cfg)
+    p_shard = shard_tree(mesh, rules, p_axes, params_abs)
+
+    def batch_abs(n):
+        return dict(
+            user=SDS((n,), jnp.int32),
+            behavior=SDS((n, cfg.seq_len), jnp.int32),
+            target=SDS((n,), jnp.int32),
+            fields=SDS((n, cfg.n_user_fields, hot), jnp.int32),
+            label=SDS((n,), jnp.int32),
+        )
+
+    def batch_shard(n):
+        one = lambda shape: NamedSharding(
+            mesh, _safe_spec(mesh, rules, ("batch",) + (None,) * (len(shape) - 1),
+                             shape))
+        b = batch_abs(n)
+        return jax.tree.map(lambda s: one(s.shape), b)
+
+    if kind == "train":
+        opt_cfg = AdamWConfig(weight_decay=0.0, lr=1e-3)
+        opt_abs = jax.eval_shape(adamw_init, params_abs)
+        o_shard = shard_tree(mesh, rules, _opt_axes(p_axes), opt_abs)
+
+        def train_step(params, opt, batch):
+            l, g = jax.value_and_grad(R.bst_loss)(params, batch, cfg)
+            params, opt, m = adamw_update(params, g, opt, opt_cfg)
+            m["loss"] = l
+            return params, opt, m
+
+        args = (params_abs, opt_abs, batch_abs(B))
+        in_sh = (p_shard, o_shard, batch_shard(B))
+        out_sh = (p_shard, o_shard,
+                  replicated(mesh, dict(grad_norm=0., lr=0., loss=0.)))
+        return CellPlan(spec.arch_id, shape_name, "train_step", train_step,
+                        args, in_sh, out_sh, 3 * _bst_flops(cfg, B),
+                        donate=(0, 1))
+
+    if kind == "serve":
+        def serve_step(params, batch):
+            return R.bst_forward(params, batch, cfg)
+
+        b = batch_abs(B)
+        b.pop("label")
+        bs = batch_shard(B)
+        bs.pop("label")
+        out_sh = NamedSharding(mesh, _safe_spec(mesh, rules, ("batch",), (B,)))
+        return CellPlan(spec.arch_id, shape_name, "serve_step", serve_step,
+                        (params_abs, b), (p_shard, bs), out_sh,
+                        _bst_flops(cfg, B))
+
+    # retrieval: 1 user x n_candidates
+    NC = sh["n_candidates"]
+
+    def retrieval_step(params, query, candidates):
+        return R.bst_score_candidates(params, query, candidates, cfg)
+
+    query_abs = dict(
+        user=SDS((), jnp.int32),
+        behavior=SDS((cfg.seq_len,), jnp.int32),
+        fields=SDS((cfg.n_user_fields, hot), jnp.int32),
+    )
+    cand_abs = SDS((NC,), jnp.int32)
+    cand_sh = NamedSharding(mesh, _safe_spec(mesh, rules, ("batch",), (NC,)))
+    out_sh = cand_sh
+    return CellPlan(spec.arch_id, shape_name, "retrieval_step", retrieval_step,
+                    (params_abs, query_abs, cand_abs),
+                    (p_shard, replicated(mesh, query_abs), cand_sh), out_sh,
+                    _bst_flops(cfg, NC))
+
+
+# --------------------------------------------------------------------------
+# louvain (graph family) cells — one distributed pass via shard_map
+# --------------------------------------------------------------------------
+
+def _louvain_cell(spec: ArchSpec, shape_name: str, mesh, rules) -> CellPlan:
+    from repro.core.distributed import build_community_step
+
+    sh = spec.shapes[shape_name]
+    flat = int(np.prod(list(mesh.shape.values())))
+    n_cap = _round_up(sh["n_nodes"], 1024)
+    m_shard = _round_up(sh["n_edges"], flat) // flat
+    # prune=False at production scale: the pruning bookkeeping costs two
+    # extra [nv] segment ops + a psum'd moved-flag per sweep, while
+    # realized-Q convergence already bounds sweeps (§Perf C2; pruning
+    # stays ON in the CPU benchmarks for paper faithfulness)
+    plan = build_community_step(
+        mesh, n_cap=n_cap, m_shard=m_shard,
+        move_iters=4, split_iters=8, prune=False,
+    )
+    # edges-ops model: ~ local-move sorting + split + aggregate touch each
+    # edge ~(move_iters + split_iters + 1) times with ~20 flops/edge
+    fl = sh["n_edges"] * (4 + 8 + 1) * 20.0
+    return CellPlan(spec.arch_id, shape_name, "community_step", plan["fn"],
+                    plan["args"], plan["in_shardings"], plan["out_shardings"],
+                    fl, notes="one GSP-Louvain pass (move+split+aggregate)")
+
+
+def build_cell(spec: ArchSpec, shape_name: str, mesh,
+               rules: Optional[ShardingRules] = None) -> CellPlan:
+    rules = rules or ShardingRules()
+    if spec.family == "lm":
+        return _lm_cell(spec, shape_name, mesh, rules)
+    if spec.family == "gnn":
+        return _gnn_cell(spec, shape_name, mesh, rules)
+    if spec.family == "recsys":
+        return _recsys_cell(spec, shape_name, mesh, rules)
+    if spec.family == "graph":
+        return _louvain_cell(spec, shape_name, mesh, rules)
+    raise KeyError(spec.family)

@@ -1,0 +1,9 @@
+"""Model zoo: LM transformers (dense + MoE), GNNs, recsys.
+
+Every model family exposes the same functional surface:
+  * ``Config`` dataclass (full configs live in repro.configs),
+  * ``init_params(key, cfg)`` -> pytree,
+  * ``param_logical_axes(cfg)`` -> matching pytree of logical-axis tuples
+    consumed by repro.distributed.sharding,
+  * pure ``forward`` / ``loss_fn`` functions used by launch/ step builders.
+"""

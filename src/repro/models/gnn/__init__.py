@@ -1,0 +1,19 @@
+"""GNN zoo: GCN, GAT, GatedGCN (segment-op message passing) and NequIP
+(E(3)-equivariant tensor-product message passing).
+
+All message passing is built on ``jax.ops.segment_sum`` / ``segment_max``
+over padded edge lists — the same kernel regime as the paper's Louvain
+phases (JAX has no CSR SpMM; the edge-scatter formulation IS the system,
+per the assignment notes).
+"""
+from repro.models.gnn.gcn import GCNConfig, init_gcn, gcn_forward
+from repro.models.gnn.gat import GATConfig, init_gat, gat_forward
+from repro.models.gnn.gatedgcn import GatedGCNConfig, init_gatedgcn, gatedgcn_forward
+from repro.models.gnn.nequip import NequIPConfig, init_nequip, nequip_forward
+
+__all__ = [
+    "GCNConfig", "init_gcn", "gcn_forward",
+    "GATConfig", "init_gat", "gat_forward",
+    "GatedGCNConfig", "init_gatedgcn", "gatedgcn_forward",
+    "NequIPConfig", "init_nequip", "nequip_forward",
+]

@@ -1,0 +1,50 @@
+"""Shared GNN message-passing primitives over padded edge lists.
+
+Edge convention matches :mod:`repro.graph.container`: directed COO with a
+ghost vertex absorbing padding; per-edge masks are implied by ``src < ghost``
+and zero weights.  Features are [nv, D] with the ghost row zeroed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def scatter_sum(values, index, nv):
+    return jax.ops.segment_sum(values, index, num_segments=nv)
+
+
+def scatter_max(values, index, nv, fill=-jnp.inf):
+    out = jax.ops.segment_max(values, index, num_segments=nv)
+    return jnp.where(jnp.isfinite(out), out, fill)
+
+
+def degree(src, nv, edge_mask=None):
+    ones = jnp.ones(src.shape, jnp.float32)
+    if edge_mask is not None:
+        ones = jnp.where(edge_mask, ones, 0.0)
+    return jax.ops.segment_sum(ones, src, num_segments=nv)
+
+
+def sym_norm_coeff(src, dst, nv, edge_mask=None):
+    """GCN symmetric normalization 1/sqrt((d_u+1)(d_v+1)) per edge."""
+    d = degree(src, nv, edge_mask) + 1.0
+    return jax.lax.rsqrt(d[src]) * jax.lax.rsqrt(d[dst])
+
+
+def edge_softmax(scores, dst, nv, edge_mask):
+    """Softmax of per-edge scores grouped by destination vertex.
+
+    scores: [M] or [M, H]; edge_mask: bool[M].
+    """
+    mask = edge_mask if scores.ndim == 1 else edge_mask[:, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    mx = scatter_max(scores, dst, nv, fill=0.0)
+    ex = jnp.where(mask, jnp.exp(scores - mx[dst]), 0.0)
+    denom = scatter_sum(ex, dst, nv)
+    return ex / jnp.maximum(denom[dst], 1e-9)
+
+
+def linear(key, d_in, d_out, scale=None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    return jax.random.normal(key, (d_in, d_out), jnp.float32) * scale

@@ -1,0 +1,72 @@
+"""GAT (Velickovic et al., arXiv:1710.10903): SDDMM edge scores ->
+segment-softmax -> weighted scatter.  gat-cora: 2 layers, 8 hidden, 8 heads.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn import common
+
+
+@dataclasses.dataclass(frozen=True)
+class GATConfig:
+    name: str = "gat"
+    n_layers: int = 2
+    d_in: int = 1433
+    d_hidden: int = 8
+    n_heads: int = 8
+    n_classes: int = 7
+    negative_slope: float = 0.2
+
+
+def init_gat(key, cfg: GATConfig):
+    layers = []
+    d_in = cfg.d_in
+    for li in range(cfg.n_layers):
+        last = li == cfg.n_layers - 1
+        h = 1 if last else cfg.n_heads
+        d_out = cfg.n_classes if last else cfg.d_hidden
+        k1, k2, k3, key = jax.random.split(key, 4)
+        layers.append(dict(
+            w=common.linear(k1, d_in, h * d_out),
+            a_src=jax.random.normal(k2, (h, d_out), jnp.float32) * 0.1,
+            a_dst=jax.random.normal(k3, (h, d_out), jnp.float32) * 0.1,
+        ))
+        d_in = h * d_out if not last else d_out
+    return dict(layers=layers)
+
+
+def param_logical_axes(cfg: GATConfig):
+    return dict(layers=[
+        dict(w=("fsdp", "heads"), a_src=("heads", None), a_dst=("heads", None))
+        for _ in range(cfg.n_layers)
+    ])
+
+
+def gat_forward(params, x, src, dst, cfg: GATConfig, edge_mask=None):
+    nv = x.shape[0]
+    if edge_mask is None:
+        edge_mask = src < (nv - 1)
+    h = x
+    n_layers = len(params["layers"])
+    for li, lp in enumerate(params["layers"]):
+        last = li == n_layers - 1
+        heads = 1 if last else cfg.n_heads
+        d_out = lp["w"].shape[1] // heads
+        z = (h @ lp["w"]).reshape(nv, heads, d_out)
+        e_src = jnp.einsum("nhd,hd->nh", z, lp["a_src"])
+        e_dst = jnp.einsum("nhd,hd->nh", z, lp["a_dst"])
+        scores = jax.nn.leaky_relu(
+            e_src[src] + e_dst[dst], cfg.negative_slope
+        )                                              # [M, H]
+        alpha = common.edge_softmax(scores, dst, nv, edge_mask)
+        msg = z[src] * alpha[..., None]                # [M, H, D]
+        agg = common.scatter_sum(msg, dst, nv)         # [nv, H, D]
+        if last:
+            h = agg[:, 0]
+        else:
+            h = jax.nn.elu(agg.reshape(nv, heads * d_out))
+    return h

@@ -1,0 +1,142 @@
+"""NequIP (Batzner et al., arXiv:2101.03164): E(3)-equivariant interatomic
+potential with channel-wise ("uvu") Clebsch-Gordan tensor-product messages.
+
+Node state: one feature block per irrep degree l in {0..l_max}:
+``h[l]: [nv, C, 2l+1]``.  Message for path (l1, l2 -> l3):
+
+    m3[e] = R_path(|r_e|) * einsum('ci,j,ijk->ck', h[l1][src_e], sh_l2(r_e), CG)
+
+summed over paths into each l3, scatter-summed over edges, then mixed by a
+per-l self-interaction linear layer and a gate nonlinearity (scalars gate
+the norms of l > 0 blocks).  Radial weights come from a Bessel-RBF + cutoff
+envelope MLP, one output per (path, channel) — NequIP's structure, with the
+assigned config: 5 layers, 32 channels, l_max 2, 8 RBFs, cutoff 5.0.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.gnn import common
+from repro.models.gnn.irreps import admissible_paths, clebsch_gordan, sh
+
+
+@dataclasses.dataclass(frozen=True)
+class NequIPConfig:
+    name: str = "nequip"
+    n_layers: int = 5
+    d_hidden: int = 32           # channels per irrep degree
+    l_max: int = 2
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    n_species: int = 16
+    radial_hidden: int = 16
+
+
+def _paths(cfg):
+    return admissible_paths(cfg.l_max)
+
+
+def init_nequip(key, cfg: NequIPConfig):
+    C = cfg.d_hidden
+    paths = _paths(cfg)
+    keys = jax.random.split(key, 3 + cfg.n_layers)
+    layers = []
+    for li in range(cfg.n_layers):
+        k = jax.random.split(keys[li], 4 + len(paths) + cfg.l_max + 1)
+        radial = dict(
+            w1=common.linear(k[0], cfg.n_rbf, cfg.radial_hidden),
+            w2=common.linear(k[1], cfg.radial_hidden, len(paths) * C),
+        )
+        self_int = {
+            str(l): common.linear(k[2 + l], C, C)
+            for l in range(cfg.l_max + 1)
+        }
+        gates = common.linear(k[3 + cfg.l_max], C, cfg.l_max * C)
+        layers.append(dict(radial=radial, self_int=self_int, gates=gates))
+    return dict(
+        species_embed=jax.random.normal(keys[-2], (cfg.n_species, C)) * 0.5,
+        layers=layers,
+        readout=common.linear(keys[-1], C, 1),
+    )
+
+
+def param_logical_axes(cfg: NequIPConfig):
+    paths = _paths(cfg)
+    layer = dict(
+        radial=dict(w1=(None, None), w2=(None, "feat")),
+        self_int={str(l): ("feat", None) for l in range(cfg.l_max + 1)},
+        gates=("feat", None),
+    )
+    return dict(
+        species_embed=(None, "feat"),
+        layers=[layer] * cfg.n_layers,
+        readout=("feat", None),
+    )
+
+
+def bessel_rbf(r, n_rbf, cutoff):
+    """Bessel radial basis with smooth polynomial cutoff envelope."""
+    r = jnp.maximum(r, 1e-6)
+    n = jnp.arange(1, n_rbf + 1, dtype=jnp.float32)
+    basis = jnp.sqrt(2.0 / cutoff) * jnp.sin(
+        n[None, :] * jnp.pi * r[:, None] / cutoff
+    ) / r[:, None]
+    x = jnp.clip(r / cutoff, 0.0, 1.0)
+    env = 1.0 - 10.0 * x**3 + 15.0 * x**4 - 6.0 * x**5   # p=3 polynomial
+    return basis * env[:, None]
+
+
+def nequip_forward(params, species, pos, src, dst, cfg: NequIPConfig,
+                   edge_mask=None):
+    """species: int32[nv], pos: f32[nv, 3] -> per-node scalar energy [nv].
+
+    Padded edges must point at the ghost vertex; ghost rows contribute 0.
+    """
+    nv = species.shape[0]
+    if edge_mask is None:
+        edge_mask = src < (nv - 1)
+    C = cfg.d_hidden
+    paths = _paths(cfg)
+    cg = {p: jnp.asarray(clebsch_gordan(*p), jnp.float32) for p in paths}
+
+    rvec = pos[dst] - pos[src]
+    r = jnp.sqrt(jnp.sum(rvec * rvec, axis=-1) + 1e-12)
+    rhat = rvec / r[:, None]
+    rbf = bessel_rbf(r, cfg.n_rbf, cfg.cutoff)
+    rbf = jnp.where(edge_mask[:, None], rbf, 0.0)
+    edge_sh = {l: sh(rhat, l) for l in range(cfg.l_max + 1)}
+
+    h = {0: params["species_embed"][species][:, :, None]}
+    for l in range(1, cfg.l_max + 1):
+        h[l] = jnp.zeros((nv, C, 2 * l + 1), jnp.float32)
+
+    for lp in params["layers"]:
+        rw = jax.nn.silu(rbf @ lp["radial"]["w1"]) @ lp["radial"]["w2"]
+        rw = rw.reshape(-1, len(paths), C)              # [M, P, C]
+        msg = {l: 0.0 for l in range(cfg.l_max + 1)}
+        for pi, (l1, l2, l3) in enumerate(paths):
+            t = jnp.einsum(
+                "eci,ej,ijk->eck", h[l1][src], edge_sh[l2], cg[(l1, l2, l3)]
+            )
+            msg[l3] = msg[l3] + t * rw[:, pi, :, None]
+        agg = {l: common.scatter_sum(
+            jnp.where(edge_mask[:, None, None], msg[l], 0.0), dst, nv)
+            for l in msg}
+        # self-interaction + residual
+        new_h = {}
+        for l in range(cfg.l_max + 1):
+            mixed = jnp.einsum("ncm,cd->ndm", agg[l], lp["self_int"][str(l)])
+            new_h[l] = h[l] + mixed
+        # gate nonlinearity: scalars pass through silu and gate higher l
+        scalars = new_h[0][:, :, 0]
+        gates = jax.nn.sigmoid(scalars @ lp["gates"]).reshape(nv, cfg.l_max, C)
+        h = {0: jax.nn.silu(scalars)[:, :, None]}
+        for l in range(1, cfg.l_max + 1):
+            h[l] = new_h[l] * gates[:, l - 1, :, None]
+
+    energy = (h[0][:, :, 0] @ params["readout"])[:, 0]
+    return energy

@@ -1,0 +1,7 @@
+"""RecSys models: BST (Behavior Sequence Transformer)."""
+from repro.models.recsys.bst import (
+    BSTConfig, init_bst, bst_forward, bst_loss, bst_score_candidates,
+)
+
+__all__ = ["BSTConfig", "init_bst", "bst_forward", "bst_loss",
+           "bst_score_candidates"]

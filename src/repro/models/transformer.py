@@ -1,0 +1,528 @@
+"""Decoder-only LM transformer: GQA + RoPE, SWA, SwiGLU, top-k MoE, KV cache.
+
+Covers the five assigned LM architectures (mixtral-8x7b/-8x22b,
+command-r-35b, smollm-360m, tinyllama-1.1b) from one config dataclass.
+
+Implementation notes (TPU-shaped):
+  * Layers are **stacked** ([L, ...] leaves) and driven by ``lax.scan`` with
+    optional per-layer remat — compile time and HLO size stay O(1) in depth,
+    which matters when lowering 56-layer models against a 512-chip mesh.
+  * Attention uses **online-softmax KV chunking** (flash-style at the XLA
+    level): peak score memory is [B, H, block_q, block_k], never [S, S].
+  * Sliding-window attention masks per chunk; decode uses a **rolling KV
+    cache** bounded by the window, which is what makes the 524k-token
+    ``long_500k`` cell finite for the Mixtral configs.
+  * MoE is sort-based dispatch (tokens sorted by expert, capacity-bounded,
+    renormalized top-k combine) — no [T, E, C] dispatch tensor; the buffers
+    are 2x activations like the compute itself.  Expert dim shards over the
+    'model' mesh axis (expert parallelism; XLA inserts the all-to-alls).
+  * Params are stored f32 (master) and cast to ``compute_dtype`` in the
+    forward pass; matmuls accumulate f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str = "lm"
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    d_head: int = 32
+    d_ff: int = 512
+    vocab: int = 1024
+    # MoE (None -> dense SwiGLU)
+    n_experts: Optional[int] = None
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    moe_dropless: bool = False      # serving: capacity = T (no token drops)
+    # attention
+    sliding_window: Optional[int] = None
+    rope_theta: float = 1e4
+    attn_chunk: int = 1024          # query/kv chunk for online softmax
+    attn_impl: str = "chunked"      # chunked (XLA) | flash (Pallas kernel;
+                                    # forward-only -> serving/prefill paths)
+    # numerics
+    compute_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    remat_policy: str = "full"      # full | dots  (dots: save matmul outputs)
+    scan_layers: bool = True        # False: unrolled (cost-analysis probes)
+    # vocab-parallel logits
+    tie_embeddings: bool = False
+
+    @property
+    def d_q(self) -> int:
+        return self.n_heads * self.d_head
+
+    @property
+    def d_kv(self) -> int:
+        return self.n_kv_heads * self.d_head
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts is not None
+
+    def cache_len(self, seq_len: int) -> int:
+        if self.sliding_window is not None:
+            return min(seq_len, self.sliding_window)
+        return seq_len
+
+    def param_count(self) -> int:
+        """Total parameters (for 6ND roofline accounting)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        attn = d * self.d_q + 2 * d * self.d_kv + self.d_q * d
+        if self.is_moe:
+            mlp = self.n_experts * 3 * d * f + d * self.n_experts
+        else:
+            mlp = 3 * d * f
+        per_layer = attn + mlp + 2 * d
+        head = 0 if self.tie_embeddings else d * v
+        return v * d + self.n_layers * per_layer + d + head
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k experts only)."""
+        if not self.is_moe:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        dense_like = self.param_count() - self.n_layers * (
+            self.n_experts - self.top_k
+        ) * 3 * d * f
+        return dense_like
+
+
+# --------------------------------------------------------------------------
+# init + logical sharding axes
+# --------------------------------------------------------------------------
+
+def init_params(key, cfg: LMConfig):
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    L = cfg.n_layers
+    k = jax.random.split(key, 12)
+
+    def norm(key, *shape, scale=None):
+        import math
+        if scale is None:
+            scale = 1.0 / math.sqrt(shape[-2] if len(shape) > 1 else d)
+        return (jax.random.normal(key, shape, jnp.float32) * scale)
+
+    layers = dict(
+        ln1=jnp.ones((L, d), jnp.float32),
+        ln2=jnp.ones((L, d), jnp.float32),
+        wq=norm(k[0], L, d, cfg.d_q),
+        wk=norm(k[1], L, d, cfg.d_kv),
+        wv=norm(k[2], L, d, cfg.d_kv),
+        wo=norm(k[3], L, cfg.d_q, d),
+    )
+    if cfg.is_moe:
+        E = cfg.n_experts
+        layers.update(
+            gate=norm(k[4], L, d, E),
+            w1=norm(k[5], L, E, d, f),
+            w3=norm(k[6], L, E, d, f),
+            w2=norm(k[7], L, E, f, d, scale=f ** -0.5),
+        )
+    else:
+        layers.update(
+            w1=norm(k[5], L, d, f),
+            w3=norm(k[6], L, d, f),
+            w2=norm(k[7], L, f, d, scale=f ** -0.5),
+        )
+    params = dict(
+        embed=norm(k[8], v, d, scale=1.0),
+        layers=layers,
+        final_norm=jnp.ones((d,), jnp.float32),
+    )
+    if not cfg.tie_embeddings:
+        params["lm_head"] = norm(k[9], d, v)
+    return params
+
+
+def param_logical_axes(cfg: LMConfig):
+    layers = dict(
+        ln1=("stack", None),
+        ln2=("stack", None),
+        wq=("stack", "fsdp", "heads"),
+        wk=("stack", "fsdp", "heads"),
+        wv=("stack", "fsdp", "heads"),
+        wo=("stack", "heads", "fsdp"),
+    )
+    if cfg.is_moe:
+        # experts dim stays unsharded (E=8 does not divide model=16);
+        # expert matrices shard 2D: D over fsdp, F over model — 141B-param
+        # mixtral-8x22b + f32 Adam then fits 256x16GB (dry-run memory proof)
+        layers.update(
+            gate=("stack", "fsdp", None),
+            w1=("stack", "experts", "fsdp", "mlp"),
+            w3=("stack", "experts", "fsdp", "mlp"),
+            w2=("stack", "experts", "mlp", "fsdp"),
+        )
+    else:
+        layers.update(
+            w1=("stack", "fsdp", "mlp"),
+            w3=("stack", "fsdp", "mlp"),
+            w2=("stack", "mlp", "fsdp"),
+        )
+    axes = dict(
+        embed=("vocab", "fsdp"),
+        layers=layers,
+        final_norm=(None,),
+    )
+    if not cfg.tie_embeddings:
+        axes["lm_head"] = ("fsdp", "vocab")
+    return axes
+
+
+# --------------------------------------------------------------------------
+# building blocks
+# --------------------------------------------------------------------------
+
+def rmsnorm(x, g, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * rms).astype(x.dtype) * g.astype(x.dtype)
+
+
+def rope(x, positions, theta):
+    """x: [B, S, H, Dh]; positions: [B, S] or [S]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freq  # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    rotated = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return rotated.astype(x.dtype)
+
+
+def _attend_chunked(q, k, v, q_pos, k_pos, window, chunk):
+    """Online-softmax attention. q: [B,Sq,Hkv,G,Dh], k/v: [B,Sk,Hkv,Dh].
+
+    q_pos [Sq], k_pos [Sk] are absolute positions (causal + window masks are
+    computed from them, so the same code serves train, prefill, and rolling-
+    cache decode).  Memory peak: [B, Hkv, G, chunk_q, chunk_k].
+    """
+    b, sq, hkv, g, dh = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    cq = min(chunk, sq)
+    ck = min(chunk, sk)
+    n_q, n_k = sq // cq, sk // ck
+    q = q.reshape(b, n_q, cq, hkv, g, dh)
+    k = k.reshape(b, n_k, ck, hkv, dh)
+    v = v.reshape(b, n_k, ck, hkv, dh)
+    q_pos = q_pos.reshape(n_q, cq)
+    k_pos = k_pos.reshape(n_k, ck)
+
+    def q_block(qi):
+        qb = q[:, qi]                       # [B, cq, Hkv, G, Dh]
+        qp = q_pos[qi]                      # [cq]
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            kb, vb = k[:, kj], v[:, kj]     # [B, ck, Hkv, Dh]
+            kp = k_pos[kj]                  # [ck]
+            s = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", qb, kb,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            mask = kp[None, :] <= qp[:, None]
+            if window is not None:
+                mask &= (qp[:, None] - kp[None, :]) < window
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            # guard fully-masked rows
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            corr = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+            corr = jnp.where(jnp.isfinite(m), corr, 0.0)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vb.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, cq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, cq, dh), jnp.float32)
+        # flash-style backward: remat each kv block so the [cq, ck] score
+        # tiles are never saved as scan residuals (else bwd materializes the
+        # full S^2 score tensor per layer)
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), (m0, l0, a0), jnp.arange(n_k)
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-9)
+        return out                           # [B, Hkv, G, cq, Dh]
+
+    outs = jax.lax.map(q_block, jnp.arange(n_q))  # [n_q, B, Hkv, G, cq, Dh]
+    out = jnp.moveaxis(outs, 0, 3)                # [B, Hkv, G, n_q, cq, Dh]
+    out = out.reshape(b, hkv, g, sq, dh)
+    out = jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(b, sq, hkv * g * dh)
+    return out
+
+
+def attention(lp, x, cfg: LMConfig, positions, kv=None):
+    """Self-attention. If ``kv=(k_cache, v_cache, k_pos)`` attends to the
+    cache (decode); otherwise to ``x`` itself (train/prefill)."""
+    b, s, _ = x.shape
+    hkv, g, dh = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads, cfg.d_head
+    dt = cfg.compute_dtype
+    q = (x @ lp["wq"].astype(dt)).reshape(b, s, hkv, g, dh)
+    k = (x @ lp["wk"].astype(dt)).reshape(b, s, hkv, dh)
+    v = (x @ lp["wv"].astype(dt)).reshape(b, s, hkv, dh)
+    q = rope(q.reshape(b, s, hkv * g, dh), positions, cfg.rope_theta)
+    q = q.reshape(b, s, hkv, g, dh)
+    k = rope(k, positions, cfg.rope_theta)
+    if kv is None:
+        if cfg.attn_impl == "flash":
+            from repro.kernels import ops as kops
+            out = kops.flash_attention(
+                q.reshape(b, s, hkv * g, dh), k, v,
+                causal=True, window=cfg.sliding_window,
+            ).reshape(b, s, hkv * g * dh)
+        else:
+            out = _attend_chunked(
+                q, k, v, positions, positions, cfg.sliding_window,
+                cfg.attn_chunk,
+            )
+        new_kv = (k, v)
+    else:
+        k_cache, v_cache, k_pos = kv
+        out = _attend_chunked(
+            q, k_cache, v_cache,
+            positions if positions.ndim == 1 else positions[0],
+            k_pos, cfg.sliding_window, cfg.attn_chunk,
+        )
+        new_kv = None
+    return (out.astype(dt) @ lp["wo"].astype(dt)), new_kv
+
+
+def swiglu(lp, x, dt):
+    h = jax.nn.silu(x @ lp["w1"].astype(dt)) * (x @ lp["w3"].astype(dt))
+    return h @ lp["w2"].astype(dt)
+
+
+def moe_mlp(lp, x, cfg: LMConfig, constrain=None):
+    """Grouped sort-based top-k MoE with per-group capacity.
+
+    GShard-style groups: each batch row routes its own tokens with local
+    capacity ``ceil(cf * K * S / E)``.  The group axis is data-sharded, so
+    dispatch (sort/scatter) and the [G, E, cap, D] buffers stay shard-local
+    under SPMD — a *global* sort/scatter cannot be value-sharded and forces
+    XLA to materialize the full [E*cap_global, D] buffer on every device
+    (measured 9.4 GB x ~100 touches/layer on mixtral-8x7b train_4k; §Perf A1).
+    """
+    b, s, d = x.shape
+    dt = cfg.compute_dtype
+    E, K = cfg.n_experts, cfg.top_k
+    if cfg.moe_dropless:
+        cap = s                      # worst-case skew: no drops (serving)
+    else:
+        cap = min(max(-(-int(cfg.capacity_factor * K * s) // E), 1), s)
+
+    def dispatch(xt):
+        """xt: [S, D] -> buffer [E, cap, D] + combine indices."""
+        logits = (xt @ lp["gate"].astype(dt)).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        topv, tope = jax.lax.top_k(probs, K)                # [S, K]
+        topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+        flat_e = tope.reshape(-1).astype(jnp.int32)         # [S*K]
+        flat_t = jnp.repeat(jnp.arange(s, dtype=jnp.int32), K)
+        flat_w = topv.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+        start = jnp.searchsorted(se, jnp.arange(E, dtype=jnp.int32))
+        pos = jnp.arange(s * K, dtype=jnp.int32) - start[se]
+        keep = pos < cap
+        slot = jnp.where(keep, se * cap + pos, E * cap)     # dropped -> tail
+        buf = jnp.zeros((E * cap + 1, d), dt).at[slot].set(
+            xt[st] * keep[:, None].astype(dt)
+        )
+        return buf[: E * cap].reshape(E, cap, d), st, sw, keep, slot
+
+    h, st, sw, keep, slot = jax.vmap(dispatch)(x)           # h: [B,E,cap,D]
+    # keep the group dim batch-sharded through the expert einsums: without
+    # the constraint XLA reshards the [G,E,cap,*] buffers to the FSDP weight
+    # layout (full G on every chip) instead of gathering the far smaller
+    # weight shards (§Perf A2)
+    if constrain is not None:
+        h = constrain(h)
+    up = jax.nn.silu(
+        jnp.einsum("gecd,edf->gecf", h, lp["w1"].astype(dt))
+    ) * jnp.einsum("gecd,edf->gecf", h, lp["w3"].astype(dt))
+    if constrain is not None:
+        up = constrain(up)
+    down = jnp.einsum("gecf,efd->gecd", up, lp["w2"].astype(dt))
+    if constrain is not None:
+        down = constrain(down)
+
+    def combine(down_g, st_g, sw_g, keep_g, slot_g):
+        flat = jnp.concatenate(
+            [down_g.reshape(E * cap, d), jnp.zeros((1, d), dt)], axis=0)
+        return jnp.zeros((s, d), dt).at[st_g].add(
+            flat[slot_g] * (sw_g * keep_g)[:, None].astype(dt)
+        )
+
+    return jax.vmap(combine)(down, st, sw, keep, slot)
+
+
+def _layer(lp, x, cfg: LMConfig, positions, kv=None, constrain=None):
+    h, new_kv = attention(lp, rmsnorm(x, lp["ln1"]), cfg, positions, kv)
+    x = x + h
+    h2 = rmsnorm(x, lp["ln2"])
+    if cfg.is_moe:
+        x = x + moe_mlp(lp, h2, cfg, constrain)
+    else:
+        x = x + swiglu(lp, h2, cfg.compute_dtype)
+    if constrain is not None:
+        x = constrain(x)
+    return x, new_kv
+
+
+# --------------------------------------------------------------------------
+# public forward passes
+# --------------------------------------------------------------------------
+
+def forward(params, tokens, cfg: LMConfig, constrain=None):
+    """Train/prefill forward. tokens: int32[B, S] -> logits [B, S, V]."""
+    b, s = tokens.shape
+    dt = cfg.compute_dtype
+    x = params["embed"].astype(dt)[tokens]
+    if constrain is not None:
+        x = constrain(x)
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def body(x, lp):
+        base = partial(_layer, cfg=cfg, positions=positions, constrain=constrain)
+        if cfg.remat:
+            policy = None
+            if cfg.remat_policy == "dots":
+                policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            ck = jax.checkpoint(lambda p, h: base(p, h)[0], policy=policy)
+            return ck(lp, x), None
+        return base(lp, x)[0], None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    else:  # unrolled: exact cost_analysis (scan bodies are counted once)
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, _ = body(x, lp)
+    x = rmsnorm(x, params["final_norm"])
+    head = params.get("lm_head", None)
+    if head is None:
+        head = params["embed"].T
+    logits = (x @ head.astype(dt)).astype(jnp.float32)
+    return logits
+
+
+def loss_fn(params, tokens, targets, cfg: LMConfig, constrain=None):
+    """Next-token cross-entropy (mean over tokens)."""
+    logits = forward(params, tokens, cfg, constrain)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# ---- serving -------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, seq_len: int):
+    """Allocate the KV cache for decode at context length ``seq_len``.
+
+    SWA models use a rolling buffer bounded by the window: the 524k-token
+    long-context cell costs the same cache as a 4k one.
+    """
+    cl = cfg.cache_len(seq_len)
+    shape = (cfg.n_layers, batch, cl, cfg.n_kv_heads, cfg.d_head)
+    return dict(
+        k=jnp.zeros(shape, cfg.compute_dtype),
+        v=jnp.zeros(shape, cfg.compute_dtype),
+        pos=jnp.zeros((cfg.n_layers, batch, cl), jnp.int32) - 1,
+        t=jnp.zeros((), jnp.int32) + seq_len,  # absolute decode position
+    )
+
+
+def decode_step(params, cache, tokens, cfg: LMConfig, constrain=None):
+    """One decode step. tokens: int32[B] -> (logits [B, V], new cache)."""
+    b = tokens.shape[0]
+    dt = cfg.compute_dtype
+    t = cache["t"]
+    x = params["embed"].astype(dt)[tokens][:, None, :]      # [B, 1, D]
+    positions = jnp.full((b, 1), t, jnp.int32)
+    cl = cache["k"].shape[2]
+    slot = t % cl                                            # rolling slot
+
+    def body(x, per_layer):
+        lp, kc, vc, pc = per_layer
+        h1 = rmsnorm(x, lp["ln1"])
+        hkv, g, dh = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads, cfg.d_head
+        q = (h1 @ lp["wq"].astype(dt)).reshape(b, 1, hkv, g, dh)
+        k = (h1 @ lp["wk"].astype(dt)).reshape(b, 1, hkv, dh)
+        v = (h1 @ lp["wv"].astype(dt)).reshape(b, 1, hkv, dh)
+        q = rope(q.reshape(b, 1, hkv * g, dh), positions, cfg.rope_theta)
+        q = q.reshape(b, 1, hkv, g, dh)
+        k = rope(k, positions, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, slot, 0, 0))
+        pc = jax.lax.dynamic_update_slice(pc, positions, (0, slot))
+        # score against the whole cache; stale slots masked via positions
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q, kc,
+                       preferred_element_type=jnp.float32)
+        s = s / jnp.sqrt(dh)
+        valid = (pc >= 0) & (pc <= t)
+        if cfg.sliding_window is not None:
+            valid &= (t - pc) < cfg.sliding_window
+        s = jnp.where(valid[:, None, None, None, :], s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(dt), vc)
+        o = o.reshape(b, 1, cfg.d_q) @ lp["wo"].astype(dt)
+        x = x + o
+        h2 = rmsnorm(x, lp["ln2"])
+        if cfg.is_moe:
+            x = x + moe_mlp(lp, h2, cfg)
+        else:
+            x = x + swiglu(lp, h2, dt)
+        return x, (kc, vc, pc)
+
+    if cfg.scan_layers:
+        x, (k_new, v_new, p_new) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"], cache["pos"])
+        )
+    else:  # unrolled (cost-analysis probes)
+        ks, vs, ps = [], [], []
+        for i in range(cfg.n_layers):
+            per = jax.tree.map(
+                lambda a: a[i],
+                (params["layers"], cache["k"], cache["v"], cache["pos"]),
+            )
+            x, (kc, vc, pc) = body(x, per)
+            ks.append(kc)
+            vs.append(vc)
+            ps.append(pc)
+        k_new = jnp.stack(ks)
+        v_new = jnp.stack(vs)
+        p_new = jnp.stack(ps)
+    x = rmsnorm(x, params["final_norm"])
+    head = params.get("lm_head", None)
+    if head is None:
+        head = params["embed"].T
+    logits = (x[:, 0] @ head.astype(dt)).astype(jnp.float32)
+    new_cache = dict(k=k_new, v=v_new, pos=p_new, t=t + 1)
+    return logits, new_cache

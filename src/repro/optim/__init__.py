@@ -1,0 +1,9 @@
+"""Optimizers and schedules (no optax dependency)."""
+from repro.optim.adamw import adamw_init, adamw_update, AdamWConfig
+from repro.optim.schedules import warmup_cosine
+from repro.optim.compress import compress_int8, decompress_int8
+
+__all__ = [
+    "adamw_init", "adamw_update", "AdamWConfig",
+    "warmup_cosine", "compress_int8", "decompress_int8",
+]

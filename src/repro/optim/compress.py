@@ -1,0 +1,41 @@
+"""int8 gradient compression with error feedback (distributed-opt trick).
+
+For bandwidth-bound data-parallel all-reduces, gradients are quantized to
+int8 with a per-tensor scale before the collective and dequantized after;
+the quantization residual is carried to the next step (error feedback keeps
+convergence unbiased, 1-bit-Adam style).  4x fewer collective bytes on the
+DP axis — wired as an option in launch/train.py and counted by the roofline
+collective parser.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(grads, error):
+    """Returns (quantized int8 tree, scales tree, new local error tree)."""
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        new_e = g - q.astype(jnp.float32) * scale
+        return q, scale, new_e
+
+    flat, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(error) if error is not None else [0.0] * len(flat)
+    out = [one(g, e) for g, e in zip(flat, flat_e)]
+    q = tdef.unflatten([o[0] for o in out])
+    s = tdef.unflatten([o[1] for o in out])
+    e = tdef.unflatten([o[2] for o in out])
+    return q, s, e
+
+
+def decompress_int8(q, scales):
+    return jax.tree.map(
+        lambda qq, ss: qq.astype(jnp.float32) * ss, q, scales
+    )
+
+
+def init_error(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

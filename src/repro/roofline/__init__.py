@@ -1,0 +1,5 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+from repro.roofline.hw import HW
+from repro.roofline.analyze import analyze_compiled, collective_bytes
+
+__all__ = ["HW", "analyze_compiled", "collective_bytes"]

@@ -1,0 +1,133 @@
+"""Roofline terms from compiled XLA artifacts.
+
+``cost_analysis`` supplies HLO FLOPs and bytes-accessed; collective traffic
+is *not* in cost_analysis, so :func:`collective_bytes` parses the optimized
+HLO text and sums operand sizes of every collective op, bucketed by kind.
+
+Terms (seconds, per step, per chip):
+  t_comp = flops_dev / peak
+  t_mem  = bytes_dev / hbm_bw
+  t_coll = coll_bytes_dev / ici_bw
+
+``cost_analysis`` of an SPMD-partitioned executable reports **per-device**
+flops/bytes (verified empirically against analytic 6ND in
+EXPERIMENTS.md §Dry-run), and post-partitioning HLO shapes are per-device
+too, so every term is already chip-local; ``model_flops`` (global) is
+divided by chip count before forming ratios.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+from repro.roofline.hw import HW
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective in optimized HLO.
+
+    Returns {kind: bytes} plus 'total'.  Output-shape accounting counts each
+    collective's payload once (all-gather output = full gathered tensor;
+    all-reduce output = reduced tensor), a consistent proxy for link traffic
+    up to the (chips-1)/chips ring factor, which we fold into HW.ici_bw.
+    """
+    out: dict = {k: 0 for k in _COLLECTIVES}
+    n_ops: dict = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match "<shape> <op-name> = opcode(...)" in optimized HLO: opcode
+        # appears after '=', e.g. "%ag = bf16[4096,512] all-gather(...)"
+        if "=" not in s:
+            continue
+        rhs = s.split("=", 1)[1]
+        for kind in _COLLECTIVES:
+            # opcode token, avoid matching fused computation names
+            if re.search(rf"\b{kind}(-start|-done)?\(", rhs):
+                lhs_shape = rhs.split(kind)[0]
+                b = _shape_bytes(lhs_shape)
+                if f"{kind}-done(" in rhs:
+                    continue  # -start already counted
+                out[kind] += b
+                n_ops[kind] += 1
+                break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["n_ops"] = {k: v for k, v in n_ops.items() if v}
+    return out
+
+
+def analyze_compiled(compiled, chips: int, *, model_flops: float | None = None,
+                     hlo_text: str | None = None) -> dict:
+    """Roofline record for one compiled executable."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    t_comp = flops / HW.peak_flops_bf16
+    t_mem = byts / HW.hbm_bw
+    t_coll = coll["total"] / HW.ici_bw
+    terms = dict(compute=t_comp, memory=t_mem, collective=t_coll)
+    bottleneck = max(terms, key=terms.get)
+    step_time = max(terms.values())
+    rec = dict(
+        chips=chips,
+        hlo_flops=flops,
+        hlo_bytes=byts,
+        collective_bytes=coll["total"],
+        collective_breakdown={k: v for k, v in coll.items()
+                              if k in _COLLECTIVES and v},
+        collective_ops=coll.get("n_ops", {}),
+        t_compute=t_comp,
+        t_memory=t_mem,
+        t_collective=t_coll,
+        bottleneck=bottleneck,
+        step_time_bound=step_time,
+    )
+    if model_flops:
+        mf_dev = float(model_flops) / chips
+        rec["model_flops"] = float(model_flops)
+        rec["useful_flops_ratio"] = mf_dev / max(flops, 1.0)
+        # roofline fraction: useful work at peak vs bound step time
+        rec["roofline_fraction"] = (
+            mf_dev / HW.peak_flops_bf16
+        ) / max(step_time, 1e-12)
+    try:
+        mem = compiled.memory_analysis()
+        rec["bytes_per_device"] = dict(
+            argument=int(getattr(mem, "argument_size_in_bytes", 0)),
+            output=int(getattr(mem, "output_size_in_bytes", 0)),
+            temp=int(getattr(mem, "temp_size_in_bytes", 0)),
+            peak=int(getattr(mem, "peak_memory_in_bytes", 0) or 0),
+        )
+    except Exception:  # pragma: no cover - memory analysis is best-effort
+        pass
+    return rec

@@ -1,0 +1,24 @@
+"""Hardware model for the roofline (TPU v5e-like, per task spec).
+
+All roofline terms in EXPERIMENTS.md §Roofline are computed against these
+constants; they are deliberately centralized so perf iterations change code,
+never the yardstick.
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class _HW:
+    peak_flops_bf16: float = 197e12     # FLOP/s per chip
+    hbm_bw: float = 819e9               # B/s per chip
+    ici_link_bw: float = 50e9           # B/s per link per direction
+    ici_links: int = 2                  # effective links engaged per chip for
+                                        # ring collectives on the sharded axis
+    vmem_bytes: int = 128 * 1024 * 1024  # not a roofline term; kernel budget
+
+    @property
+    def ici_bw(self) -> float:
+        return self.ici_link_bw * self.ici_links
+
+
+HW = _HW()

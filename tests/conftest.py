@@ -1,0 +1,10 @@
+import numpy as np
+import pytest
+
+# NOTE: do NOT set XLA_FLAGS device-count here — smoke tests and benches
+# must see the real (single) device; multi-device tests spawn subprocesses.
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,72 @@
+"""Checkpoint store: atomicity, retention, roundtrip, elastic restore."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    CheckpointManager, latest_step, restore_checkpoint, save_checkpoint,
+)
+
+
+def _tree(v=0.0):
+    return dict(
+        params=dict(w=jnp.full((4, 3), 1.0 + v), b=jnp.zeros((3,))),
+        opt=dict(m=jnp.full((4, 3), 2.0 + v), step=jnp.asarray(7, jnp.int32)),
+    )
+
+
+def test_roundtrip(tmp_path):
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 3, _tree(1.0))
+    restored, step = restore_checkpoint(d, _tree())
+    assert step == 3
+    np.testing.assert_allclose(np.asarray(restored["params"]["w"]), 2.0)
+    assert int(restored["opt"]["step"]) == 7
+
+
+def test_latest_and_retention(tmp_path):
+    d = str(tmp_path / "ck")
+    mgr = CheckpointManager(d, keep=2, async_save=False)
+    for s in [1, 5, 9]:
+        mgr.save(s, _tree(float(s)))
+    assert latest_step(d) == 9
+    steps = sorted(int(x.split("-")[1]) for x in os.listdir(d))
+    assert steps == [5, 9]
+
+
+def test_async_save(tmp_path):
+    d = str(tmp_path / "ck")
+    mgr = CheckpointManager(d, keep=3, async_save=True)
+    mgr.save(1, _tree(0.5))
+    mgr.wait()
+    restored, step = mgr.restore_latest(_tree())
+    assert step == 1
+    np.testing.assert_allclose(np.asarray(restored["params"]["w"]), 1.5)
+
+
+def test_tree_mismatch_raises(tmp_path):
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 0, _tree())
+    with pytest.raises(ValueError, match="mismatch"):
+        restore_checkpoint(d, dict(other=jnp.zeros(3)))
+
+
+def test_elastic_restore_with_shardings(tmp_path):
+    """Restore with explicit target shardings (single-device 'mesh')."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 2, _tree(3.0))
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), _tree())
+    restored, step = restore_checkpoint(d, _tree(), shardings=sh)
+    assert step == 2
+    assert restored["params"]["w"].sharding == NamedSharding(mesh, P())
+
+
+def test_missing_dir_returns_none(tmp_path):
+    restored, step = restore_checkpoint(str(tmp_path / "nope"), _tree())
+    assert restored is None and step is None

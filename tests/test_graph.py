@@ -1,0 +1,99 @@
+"""Graph substrate invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import (
+    Graph, from_undirected, sbm_graph, rmat_graph, grid_graph,
+    ring_of_cliques, partition_edges_by_src,
+)
+
+
+def _random_graph(n, m, seed):
+    rng = np.random.default_rng(seed)
+    u = rng.integers(0, n, m)
+    v = rng.integers(0, n, m)
+    return from_undirected(n, u, v)
+
+
+def test_directed_convention():
+    g = from_undirected(4, [0, 1, 2], [1, 2, 0])
+    # 3 undirected edges -> 6 directed entries
+    assert int(g.num_edges()) == 6
+    assert float(g.total_weight_2m()) == 6.0
+    K = np.asarray(g.vertex_weights())
+    assert K[:3].tolist() == [2.0, 2.0, 2.0]
+
+
+def test_self_loops_once():
+    g = from_undirected(3, [0, 1], [0, 2])
+    # self-loop (0,0) stored once, edge (1,2) twice
+    assert int(g.num_edges()) == 3
+    K = np.asarray(g.vertex_weights())
+    assert K[0] == 1.0 and K[1] == 1.0 and K[2] == 1.0
+
+
+def test_dedup_sums_weights():
+    g = from_undirected(3, [0, 0], [1, 1], np.array([1.0, 2.0], np.float32))
+    assert int(g.num_edges()) == 2
+    assert float(g.total_weight_2m()) == 6.0
+
+
+def test_sorted_and_padded():
+    g = _random_graph(50, 200, 0)
+    src = np.asarray(g.src)
+    assert (np.diff(src) >= 0).all()
+    mask = src < g.n_cap
+    w = np.asarray(g.w)
+    assert (w[~mask] == 0).all()
+
+
+def test_row_offsets_match_degrees():
+    g = _random_graph(30, 100, 1)
+    offs = np.asarray(g.row_offsets())
+    deg = np.asarray(g.degrees())
+    np.testing.assert_array_equal(np.diff(offs)[: g.n_cap], deg[: g.n_cap])
+
+
+def test_networkx_roundtrip():
+    g = sbm_graph(60, 3, seed=0)[0]
+    nxg = g.to_networkx()
+    assert nxg.number_of_nodes() == int(g.n_nodes)
+    assert 2 * nxg.number_of_edges() == int(g.num_edges())
+
+
+@given(st.integers(10, 60), st.integers(20, 150), st.integers(0, 5))
+@settings(max_examples=10, deadline=None)
+def test_2m_invariant(n, m, seed):
+    g = _random_graph(n, m, seed)
+    assert float(g.total_weight_2m()) == pytest.approx(
+        float(np.asarray(g.vertex_weights()).sum())
+    )
+
+
+@pytest.mark.parametrize("n_shards", [2, 4, 7])
+def test_partition_vertex_aligned(n_shards):
+    g = _random_graph(40, 160, 2)
+    parts = partition_edges_by_src(g, n_shards)
+    # every real edge appears exactly once across shards
+    total = int((parts["src"] < g.n_cap).sum())
+    assert total == int(g.num_edges())
+    # vertex-aligned: shard s holds only sources in [v_lo, v_hi)
+    for s in range(n_shards):
+        srcs = parts["src"][s]
+        real = srcs[srcs < g.n_cap]
+        if len(real):
+            assert real.min() >= parts["v_lo"][s]
+            assert real.max() < parts["v_hi"][s]
+    # ranges tile [0, nv)
+    assert parts["v_lo"][0] == 0
+    assert parts["v_hi"][-1] == g.nv
+    assert (parts["v_lo"][1:] == parts["v_hi"][:-1]).all()
+
+
+def test_generators_shapes():
+    for g in [rmat_graph(scale=6, edge_factor=4), grid_graph(8, 8),
+              ring_of_cliques(4, 5)]:
+        assert int(g.num_edges()) > 0
+        assert float(g.total_weight_2m()) > 0

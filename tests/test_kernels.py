@@ -1,0 +1,146 @@
+"""Pallas kernel sweeps: interpret-mode allclose vs the ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.segsum import cumsum_blocked
+from repro.kernels.spmm import bucket_spmm
+from repro.kernels.onehot_segsum import onehot_segsum
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("m,d,block", [
+    (256, 1, 64), (512, 8, 128), (1024, 16, 256), (2048, 128, 1024),
+])
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_cumsum_kernel(m, d, block, dtype):
+    x = jnp.asarray(RNG.normal(size=(m, d)).astype(dtype))
+    out = cumsum_blocked(x.astype(jnp.float32), block_m=block)
+    want = ref.cumsum_ref(x.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("m,nseg,d", [(256, 7, 4), (1024, 64, 16),
+                                      (2048, 1, 8), (512, 512, 2)])
+def test_segsum_sorted_kernel(m, nseg, d):
+    ids = jnp.asarray(np.sort(RNG.integers(0, nseg, m)).astype(np.int32))
+    x = jnp.asarray(RNG.normal(size=(m, d)).astype(np.float32))
+    got = ops.segsum_sorted(x, ids, nseg, impl="pallas", block_m=256)
+    want = ref.segsum_sorted_ref(x, ids, nseg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-4)
+
+
+def test_segsum_sorted_1d_and_empty_segments():
+    ids = jnp.asarray(np.array([0, 0, 3, 3, 3, 7], np.int32))
+    x = jnp.arange(6, dtype=jnp.float32) + 1
+    got = ops.segsum_sorted(x, ids, 9, impl="pallas", block_m=2)
+    want = np.zeros(9, np.float32)
+    want[0], want[3], want[7] = 3.0, 12.0, 6.0
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6)
+
+
+@pytest.mark.parametrize("n,k,nx,d", [
+    (64, 4, 32, 8), (192, 16, 100, 32), (128, 8, 256, 128),
+])
+def test_bucket_spmm_kernel(n, k, nx, d):
+    nbr = jnp.asarray(RNG.integers(0, nx, (n, k)).astype(np.int32))
+    w = jnp.asarray(RNG.normal(size=(n, k)).astype(np.float32))
+    x = jnp.asarray(RNG.normal(size=(nx, d)).astype(np.float32))
+    got = bucket_spmm(nbr, w, x, block_n=64)
+    want = ref.bucket_spmm_ref(nbr, w, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-4)
+
+
+def test_bucket_spmm_zero_weight_padding():
+    nbr = jnp.zeros((64, 4), jnp.int32)          # bogus neighbors
+    w = jnp.zeros((64, 4), jnp.float32)          # but zero weight
+    x = jnp.asarray(RNG.normal(size=(16, 8)).astype(np.float32))
+    got = bucket_spmm(nbr, w, x, block_n=64)
+    assert float(jnp.abs(got).max()) == 0.0
+
+
+def test_bucket_spmm_envelope_assert():
+    nbr = jnp.zeros((64, 2), jnp.int32)
+    w = jnp.zeros((64, 2), jnp.float32)
+    x = jnp.zeros((40000, 128), jnp.float32)     # > 8MB VMEM envelope
+    with pytest.raises(AssertionError):
+        bucket_spmm(nbr, w, x)
+
+
+@pytest.mark.parametrize("n,nseg,d,block", [
+    (512, 10, 4, 128), (1024, 50, 16, 256), (256, 256, 8, 256),
+])
+def test_onehot_segsum_kernel(n, nseg, d, block):
+    v = jnp.asarray(RNG.normal(size=(n, d)).astype(np.float32))
+    ids = jnp.asarray(RNG.integers(0, nseg, n).astype(np.int32))
+    got = onehot_segsum(v, ids, num_segments=nseg, block_n=block)
+    want = ref.onehot_segsum_ref(v, ids, nseg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=1e-4)
+
+
+def test_ops_auto_fallback_cpu():
+    """On CPU, impl='auto' must resolve to the XLA path and still be exact."""
+    v = jnp.asarray(RNG.normal(size=(100, 3)).astype(np.float32))
+    ids = jnp.asarray(RNG.integers(0, 5, 100).astype(np.int32))
+    got = ops.segsum(v, ids, 5)
+    want = ref.onehot_segsum_ref(v, ids, 5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_ragged_padding_path():
+    """ops wrappers pad non-multiple shapes before calling the kernel."""
+    x = jnp.asarray(RNG.normal(size=(100, 4)).astype(np.float32))
+    out = ops.cumsum(x, impl="pallas", block_m=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref.cumsum_ref(x)),
+                               rtol=2e-5, atol=1e-4)
+
+
+# --- flash attention ---------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,sq,sk,dh,causal,window", [
+    (2, 3, 64, 64, 32, True, None),
+    (1, 2, 128, 128, 64, True, 8),
+    (2, 2, 32, 96, 16, False, None),
+    (1, 1, 16, 16, 8, True, 4),
+])
+def test_flash_attention_kernel(b, h, sq, sk, dh, causal, window):
+    from repro.kernels.flash_attn import flash_attention_fwd
+
+    q = jnp.asarray(RNG.normal(size=(b, h, sq, dh)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(b, h, sk, dh)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(b, h, sk, dh)).astype(np.float32))
+    got = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                              block_q=16, block_k=16)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    from repro.kernels.flash_attn import flash_attention_fwd
+
+    q = jnp.asarray(RNG.normal(size=(1, 2, 64, 32))).astype(jnp.bfloat16)
+    k = jnp.asarray(RNG.normal(size=(1, 2, 64, 32))).astype(jnp.bfloat16)
+    v = jnp.asarray(RNG.normal(size=(1, 2, 64, 32))).astype(jnp.bfloat16)
+    got = flash_attention_fwd(q, k, v, block_q=32, block_k=32)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=3e-2, atol=3e-2)
+
+
+def test_flash_attention_gqa_wrapper():
+    q = jnp.asarray(RNG.normal(size=(2, 40, 8, 16)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(2, 40, 2, 16)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(2, 40, 2, 16)).astype(np.float32))
+    got = ops.flash_attention(q, k, v, impl="pallas", block_q=16, block_k=16)
+    want = ops.flash_attention(q, k, v, impl="xla")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

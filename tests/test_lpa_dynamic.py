@@ -1,0 +1,69 @@
+"""LPA baseline + dynamic (incremental) community updates."""
+import jax.numpy as jnp
+import networkx as nx
+import numpy as np
+import pytest
+
+from repro.core import (
+    LouvainConfig, louvain, modularity, disconnected_communities,
+    split_labels,
+)
+from repro.core.dynamic import update_communities, affected_vertices
+from repro.core.lpa import lpa_run
+from repro.graph import ring_of_cliques, sbm_graph
+
+
+def test_lpa_finds_planted_blocks():
+    g, blocks = sbm_graph(n_nodes=200, n_blocks=5, p_in=0.4, p_out=0.01,
+                          seed=0)
+    labels, it = lpa_run(g)
+    q = float(modularity(g.src, g.dst, g.w, labels))
+    assert q > 0.5
+    assert int(it) < 50
+
+
+def test_lpa_plus_split_pipeline():
+    """Raghavan et al.'s own fix: LPA then BFS-split — composes directly."""
+    g = ring_of_cliques(8, 6)
+    labels, _ = lpa_run(g)
+    split, _ = split_labels(g.src, g.dst, g.w, labels)
+    det = disconnected_communities(g.src, g.dst, g.w, split, g.n_nodes)
+    assert int(det["n_disconnected"]) == 0
+
+
+def test_affected_vertices_localized():
+    g, _ = sbm_graph(n_nodes=300, n_blocks=6, p_in=0.3, p_out=0.005, seed=1)
+    C, _ = louvain(g, LouvainConfig())
+    touched = jnp.asarray([0, 1], jnp.int32)
+    act = affected_vertices(g, C, touched)
+    n_act = int(jnp.sum(act.astype(jnp.int32)))
+    assert 0 < n_act < int(g.n_nodes)  # screening localizes
+
+
+def test_incremental_update_quality_and_connectivity():
+    rng = np.random.default_rng(0)
+    g, _ = sbm_graph(n_nodes=240, n_blocks=6, p_in=0.35, p_out=0.01, seed=2,
+                     m_cap=2 * 9000)
+    C0, _ = louvain(g, LouvainConfig())
+    q0 = float(modularity(g.src, g.dst, g.w, C0))
+    # a batch of random intra/inter edges
+    u = rng.integers(0, 240, 30)
+    v = rng.integers(0, 240, 30)
+    w = np.ones(30, np.float32)
+    g2, C2, stats = update_communities(g, C0, (u, v, w))
+    q_inc = float(modularity(g2.src, g2.dst, g2.w, C2))
+    # full recompute reference on the updated graph
+    C_full, _ = louvain(g2, LouvainConfig())
+    q_full = float(modularity(g2.src, g2.dst, g2.w, C_full))
+    assert q_inc >= q_full - 0.05          # near-recompute quality
+    det = disconnected_communities(g2.src, g2.dst, g2.w, C2, g2.n_nodes)
+    assert int(det["n_disconnected"]) == 0  # the guarantee survives updates
+    assert int(stats["n_affected"]) <= int(g2.n_nodes)
+
+
+def test_capacity_exhaustion_raises():
+    g, _ = sbm_graph(n_nodes=60, n_blocks=3, seed=3)  # m_cap == m (no slack)
+    with pytest.raises(ValueError, match="capacity"):
+        update_communities(g, jnp.arange(g.nv, dtype=jnp.int32),
+                           (np.array([0]), np.array([5]),
+                            np.array([1.0], np.float32)))

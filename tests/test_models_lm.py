@@ -1,0 +1,138 @@
+"""LM transformer: smoke configs of all five assigned archs + semantics."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_spec
+from repro.models import transformer as T
+
+LM_ARCHS = ["mixtral-8x7b", "mixtral-8x22b", "command-r-35b",
+            "smollm-360m", "tinyllama-1.1b"]
+
+
+def _smoke(arch):
+    return get_spec(arch).smoke
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_smoke_forward_and_grads(arch):
+    cfg = _smoke(arch)
+    key = jax.random.PRNGKey(0)
+    p = T.init_params(key, cfg)
+    toks = jax.random.randint(key, (2, 32), 0, cfg.vocab)
+    logits = T.forward(p, toks, cfg)
+    assert logits.shape == (2, 32, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    g = jax.grad(T.loss_fn)(p, toks, toks, cfg)
+    assert all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(g))
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "mixtral-8x7b"])
+def test_decode_matches_forward(arch):
+    cfg = _smoke(arch)
+    if cfg.is_moe:
+        cfg = dataclasses.replace(cfg, moe_dropless=True)
+    key = jax.random.PRNGKey(1)
+    p = T.init_params(key, cfg)
+    toks = jax.random.randint(key, (2, 16), 0, cfg.vocab)
+    cache = dict(T.init_cache(cfg, 2, 16), t=jnp.int32(0))
+    step = jax.jit(T.decode_step, static_argnames=("cfg",))
+    lg = None
+    for i in range(16):
+        lg, cache = step(p, cache, toks[:, i], cfg)
+    full = T.forward(p, toks, cfg)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, -1]),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_swa_equals_full_when_window_large():
+    base = _smoke("tinyllama-1.1b")
+    cfg_full = dataclasses.replace(base, sliding_window=None)
+    cfg_swa = dataclasses.replace(base, sliding_window=4096)
+    key = jax.random.PRNGKey(2)
+    p = T.init_params(key, cfg_full)
+    toks = jax.random.randint(key, (2, 32), 0, base.vocab)
+    np.testing.assert_allclose(
+        np.asarray(T.forward(p, toks, cfg_full)),
+        np.asarray(T.forward(p, toks, cfg_swa)),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_swa_restricts_context():
+    # dense model: MoE capacity routing would leak global influence
+    base = _smoke("tinyllama-1.1b")
+    cfg = dataclasses.replace(base, sliding_window=4)
+    key = jax.random.PRNGKey(3)
+    p = T.init_params(key, cfg)
+    toks = jax.random.randint(key, (1, 32), 0, cfg.vocab)
+    out1 = T.forward(p, toks, cfg)
+    # perturbing a token outside the receptive field (n_layers * window)
+    # must not change the last position's output
+    toks2 = toks.at[0, 0].set((toks[0, 0] + 1) % cfg.vocab)
+    out2 = T.forward(p, toks2, cfg)
+    np.testing.assert_allclose(np.asarray(out1[0, -1]), np.asarray(out2[0, -1]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_chunked_attention_matches_unchunked():
+    base = dataclasses.replace(_smoke("command-r-35b"), attn_chunk=8)
+    big = dataclasses.replace(base, attn_chunk=64)
+    key = jax.random.PRNGKey(4)
+    p = T.init_params(key, base)
+    toks = jax.random.randint(key, (2, 64), 0, base.vocab)
+    np.testing.assert_allclose(
+        np.asarray(T.forward(p, toks, base)),
+        np.asarray(T.forward(p, toks, big)),
+        rtol=2e-4, atol=2e-4,
+    )
+
+
+def test_scan_matches_unrolled():
+    cfg = _smoke("tinyllama-1.1b")
+    unrolled = dataclasses.replace(cfg, scan_layers=False)
+    key = jax.random.PRNGKey(5)
+    p = T.init_params(key, cfg)
+    toks = jax.random.randint(key, (2, 16), 0, cfg.vocab)
+    np.testing.assert_allclose(
+        np.asarray(T.forward(p, toks, cfg)),
+        np.asarray(T.forward(p, toks, unrolled)),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_rolling_cache_bounded_by_window():
+    cfg = _smoke("mixtral-8x7b")   # sliding_window=32
+    cache = T.init_cache(cfg, 4, 524288)
+    assert cache["k"].shape[2] == cfg.sliding_window
+
+
+def test_moe_capacity_drops_and_dropless():
+    cfg = _smoke("mixtral-8x7b")
+    key = jax.random.PRNGKey(6)
+    p = T.init_params(key, cfg)
+    toks = jax.random.randint(key, (2, 16), 0, cfg.vocab)
+    out_drop = T.forward(p, toks, cfg)
+    out_full = T.forward(
+        p, toks, dataclasses.replace(cfg, moe_dropless=True))
+    assert out_drop.shape == out_full.shape
+    assert bool(jnp.all(jnp.isfinite(out_drop)))
+    assert bool(jnp.all(jnp.isfinite(out_full)))
+
+
+def test_param_count_configs():
+    # published ballparks: mixtral-8x7b ~47B total / ~13B active
+    cfg = get_spec("mixtral-8x7b").config
+    assert 4.4e10 < cfg.param_count() < 5.0e10
+    assert 1.1e10 < cfg.active_param_count() < 1.5e10
+    cfg = get_spec("tinyllama-1.1b").config
+    assert 0.9e9 < cfg.param_count() < 1.3e9
+    cfg = get_spec("smollm-360m").config
+    assert 3.0e8 < cfg.param_count() < 4.5e8
+    cfg = get_spec("mixtral-8x22b").config
+    assert 1.3e11 < cfg.param_count() < 1.5e11
+    cfg = get_spec("command-r-35b").config
+    assert 3.0e10 < cfg.param_count() < 4.1e10

@@ -1,0 +1,80 @@
+"""Splitting phase: LP / LPP / PJ all compute (component ∩ community)
+labels — property-tested against networkx connected components."""
+import jax.numpy as jnp
+import networkx as nx
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.split import split_labels
+from repro.graph import from_undirected
+
+
+def _random_graph_and_comms(n, m, k, seed):
+    rng = np.random.default_rng(seed)
+    u = rng.integers(0, n, m)
+    v = rng.integers(0, n, m)
+    keep = u != v
+    g = from_undirected(n, u[keep], v[keep])
+    C = np.concatenate([rng.integers(0, k, n).astype(np.int32), [g.n_cap]])
+    return g, C
+
+
+def _oracle_labels(g, C, n):
+    """min vertex id within (community ∩ component), via networkx."""
+    nxg = g.to_networkx()
+    out = np.arange(n)
+    for c in np.unique(C[:n]):
+        verts = [v for v in range(n) if C[v] == c]
+        sub = nxg.subgraph(verts)
+        for comp in nx.connected_components(sub):
+            rep = min(comp)
+            for v in comp:
+                out[v] = rep
+    return out
+
+
+@pytest.mark.parametrize("mode", ["lp", "lpp", "pj"])
+@given(st.integers(8, 40), st.integers(8, 80), st.integers(1, 5),
+       st.integers(0, 8))
+@settings(max_examples=8, deadline=None)
+def test_split_matches_oracle(mode, n, m, k, seed):
+    g, C = _random_graph_and_comms(n, m, k, seed)
+    L, its = split_labels(g.src, g.dst, g.w, jnp.asarray(C), mode=mode)
+    got = np.asarray(L)[:n]
+    want = _oracle_labels(g, C, n)
+    np.testing.assert_array_equal(got, want)
+
+
+@given(st.integers(10, 40), st.integers(10, 60), st.integers(0, 8))
+@settings(max_examples=8, deadline=None)
+def test_modes_agree(n, m, seed):
+    g, C = _random_graph_and_comms(n, m, 3, seed)
+    outs = [
+        np.asarray(split_labels(g.src, g.dst, g.w, jnp.asarray(C), mode=mo)[0])
+        for mo in ["lp", "lpp", "pj"]
+    ]
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_array_equal(outs[0], outs[2])
+
+
+def test_pj_fewer_iterations_on_paths():
+    """Pointer jumping beats plain LP on large-diameter components."""
+    n = 256
+    u = np.arange(n - 1)
+    v = np.arange(1, n)
+    g = from_undirected(n, u, v)
+    C = jnp.zeros((g.nv,), jnp.int32).at[g.n_cap].set(g.n_cap)
+    _, it_lp = split_labels(g.src, g.dst, g.w, C, mode="lp")
+    _, it_pj = split_labels(g.src, g.dst, g.w, C, mode="pj")
+    assert int(it_pj) < int(it_lp) / 4
+
+
+def test_split_refines_partition():
+    g, C = _random_graph_and_comms(30, 40, 3, 7)
+    L, _ = split_labels(g.src, g.dst, g.w, jnp.asarray(C))
+    Ln = np.asarray(L)[:30]
+    # refinement: same label => same original community
+    for lab in np.unique(Ln):
+        members = np.where(Ln == lab)[0]
+        assert len(set(C[:30][members])) == 1

@@ -1,0 +1,114 @@
+"""End-to-end system behaviour: the paper's full pipeline + per-arch smoke
+steps (assignment requirement: every arch instantiates a reduced config and
+runs one forward/train step on CPU with shape + finite checks)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_spec
+from repro.core import (
+    LouvainConfig, louvain, modularity, disconnected_communities,
+)
+from repro.graph import rmat_graph, sbm_graph
+
+
+def test_end_to_end_gsp_louvain():
+    """The paper's headline behaviour on web-like graphs (the default's
+    disconnection is statistical — aggregate over a seed family)."""
+    disc_none = 0
+    for seed in [1, 2, 3]:
+        g = rmat_graph(scale=11, edge_factor=8, seed=seed)
+        results = {}
+        for split in ["none", "sp-pj"]:
+            C, stats = louvain(g, LouvainConfig(split=split))
+            det = disconnected_communities(g.src, g.dst, g.w, C, g.n_nodes)
+            results[split] = dict(
+                q=float(modularity(g.src, g.dst, g.w, C)),
+                disc=int(det["n_disconnected"]),
+            )
+        disc_none += results["none"]["disc"]
+        assert results["sp-pj"]["disc"] == 0    # GSP-Louvain always fixes it
+        assert results["sp-pj"]["q"] >= results["none"]["q"] - 0.02
+    assert disc_none > 0                        # the problem exists
+
+
+# ---------------------------------------------------------------------------
+# per-arch smoke steps (reduced configs)
+# ---------------------------------------------------------------------------
+
+LM = ["mixtral-8x7b", "mixtral-8x22b", "command-r-35b", "smollm-360m",
+      "tinyllama-1.1b"]
+GNN = ["gcn-cora", "gat-cora", "gatedgcn", "nequip"]
+
+
+@pytest.mark.parametrize("arch", LM)
+def test_lm_smoke_train_step(arch):
+    from repro.models import transformer as T
+    from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+    cfg = get_spec(arch).smoke
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, cfg)
+    opt = adamw_init(params)
+    toks = jax.random.randint(key, (2, 16), 0, cfg.vocab)
+
+    @jax.jit
+    def step(params, opt):
+        loss, g = jax.value_and_grad(T.loss_fn)(params, toks, toks, cfg)
+        params, opt, m = adamw_update(params, g, opt, AdamWConfig(lr=1e-3))
+        return params, opt, loss
+
+    params, opt, loss = step(params, opt)
+    assert np.isfinite(float(loss))
+    logits = T.forward(params, toks, cfg)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", GNN)
+def test_gnn_smoke_train_step(arch):
+    from repro.launch.train import train_gnn
+
+    spec = get_spec(arch)
+    losses = train_gnn(spec, steps=3, ckpt=None, resume=False)
+    assert len(losses) == 3
+    assert all(np.isfinite(l) for l in losses)
+
+
+def test_recsys_smoke_train_step():
+    from repro.launch.train import train_recsys
+
+    spec = get_spec("bst")
+    losses = train_recsys(spec.smoke, steps=3, batch=16, ckpt=None,
+                          resume=False)
+    assert len(losses) == 3 and all(np.isfinite(l) for l in losses)
+
+
+def test_louvain_arch_selectable():
+    spec = get_spec("louvain")
+    g = sbm_graph(80, 4, seed=0)[0]
+    C, stats = louvain(g, spec.smoke)
+    assert int(stats["n_communities"]) >= 1
+
+
+def test_all_assigned_archs_have_specs():
+    for arch in ARCH_IDS:
+        spec = get_spec(arch)
+        assert spec.shapes, arch
+        assert spec.smoke is not None, arch
+
+
+def test_lm_training_learns():
+    """A few hundred steps on the Markov stream beat the unigram bound."""
+    from repro.launch.train import train_lm
+
+    cfg = dataclasses.replace(get_spec("tinyllama-1.1b").smoke, vocab=64)
+    losses = train_lm(cfg, steps=120, batch=16, seq_len=32, ckpt=None,
+                      resume=False, log_every=1000)
+    # Markov chain with 8 successors: achievable loss ~ log(8) = 2.08;
+    # random vocab-64 baseline is log(64) = 4.16
+    assert np.mean(losses[-10:]) < 3.4
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.5
