@@ -1,0 +1,128 @@
+"""Service benchmark: batched engine vs sequential single-graph calls.
+
+Two sections:
+
+1. **Engine throughput, one bucket** — an ego-net workload in the
+   (64, 2048) bucket.  The sequential baseline is the repo's public
+   ``louvain()`` + detector per padded graph (what a service without the
+   engine would run per request).  The engine is measured at batch sizes
+   1 / 8 / 32; results are asserted to match the sequential partitions
+   exactly.  Acceptance: batch-32 engine throughput >= 5x sequential.
+
+2. **Bucket mixes through the full service** — the mixed three-bucket
+   traffic of launch/serve_communities.py at service batch 32 vs a
+   batch-1 service (per-request dispatch), reporting graphs/s and
+   aggregate directed edges/s.
+
+CSV rows use the suite convention ``name,us_per_call,derived`` (run.py).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core import (
+    LouvainConfig, disconnected_communities, louvain, modularity,
+)
+from repro.graph import sbm_graph
+from repro.service import BatchedLouvainEngine
+from repro.service.buckets import Bucket, admit
+
+
+BUCKET = Bucket(64, 2048)
+B = 32
+
+
+def workload(n_graphs: int = B, seed0: int = 0):
+    """Dense ego-net-like graphs, all admitted into the (64, 2048) bucket."""
+    gs = []
+    for s in range(n_graphs):
+        g = sbm_graph(n_nodes=56, n_blocks=4, p_in=0.7, p_out=0.08,
+                      seed=seed0 + s)[0]
+        padded, bucket = admit(g, [BUCKET])
+        assert bucket == BUCKET
+        gs.append(padded)
+    return gs
+
+
+def sequential_detect(graphs, cfg):
+    """Per-request work without the engine: partition + disconnected stats
+    + modularity through the public single-graph API (same outputs the
+    engine produces per graph)."""
+    outs = []
+    for g in graphs:
+        C, stats = louvain(g, cfg)
+        det = disconnected_communities(g.src, g.dst, g.w, C, g.n_nodes)
+        q = modularity(g.src, g.dst, g.w, C)
+        outs.append((C, stats, det, q))
+    jax.block_until_ready(outs[-1][0])
+    return outs
+
+
+def bench_engine():
+    cfg = LouvainConfig()
+    graphs = workload()
+    engine = BatchedLouvainEngine(cfg)
+
+    # -- sequential baseline: public per-graph API ------------------------
+    t_seq = timeit(sequential_detect, graphs, cfg)
+    row("service_sequential_32", t_seq, f"{B / t_seq:.1f} graphs/s")
+
+    # -- exactness: the engine must reproduce louvain() bit for bit ------
+    seq = sequential_detect(graphs, cfg)
+    res = engine.detect_batch(graphs)
+    for i, (r, (C, stats, det, _)) in enumerate(zip(res, seq)):
+        assert np.array_equal(r.C, np.asarray(C)), f"partition mismatch @{i}"
+        assert r.n_communities == int(stats["n_communities"])
+        assert r.n_disconnected == int(det["n_disconnected"]) == 0
+    print("# batched results match per-graph louvain() exactly (32/32)")
+
+    # -- engine at batch sizes -------------------------------------------
+    ratios = {}
+    for nb in (1, 8, 32):
+        chunk = graphs[:nb]
+        t = timeit(engine.detect_batch, chunk)
+        per_graph = t / nb
+        ratios[nb] = (t_seq / B) / per_graph
+        row(f"service_engine_batch{nb}", t,
+            f"{nb / t:.1f} graphs/s,{ratios[nb]:.2f}x_vs_sequential")
+    m_edges = float(np.mean([int(np.asarray(g.src < g.n_cap).sum())
+                             for g in graphs]))
+    t32 = timeit(engine.detect_batch, graphs)
+    row("service_engine_edges", t32,
+        f"{B * m_edges / t32:,.0f} directed edges/s")
+    print(f"# speedup_batch32,{ratios[32]:.2f}")
+    assert ratios[32] >= 5.0, (
+        f"batched engine speedup {ratios[32]:.2f}x < 5x acceptance bar")
+    return ratios
+
+
+def bench_bucket_mix():
+    from repro.launch.serve_communities import run_traffic
+    from repro.service import CommunityService
+
+    for name, batch, sub in (("service_mix_batch32", 32, None),
+                             ("service_mix_batch1", 1, 1)):
+        svc = CommunityService(LouvainConfig(), batch_size=batch,
+                               max_delay_s=0.05, sub_batch=sub)
+        t0 = time.perf_counter()
+        rep = run_traffic(svc, n_requests=60, update_frac=0.25, seed=7,
+                          verbose=False)
+        dt = time.perf_counter() - t0
+        row(name, dt,
+            f"{rep['graphs_per_s']:.1f} graphs/s,"
+            f"{rep['edges_per_s']:,.0f} edges/s,"
+            f"p50 {rep['p50_ms']:.0f} ms,p99 {rep['p99_ms']:.0f} ms")
+
+
+def main():
+    print("name,us_per_call,derived")
+    bench_engine()
+    bench_bucket_mix()
+
+
+if __name__ == "__main__":
+    main()

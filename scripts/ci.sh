@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Pre-merge check: tier-1 suite + service smoke.
+#
+#   scripts/ci.sh
+#
+# Keep this the documented gate: it is what CHANGES.md entries are
+# validated against.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== service smoke =="
+python -m repro.launch.serve_communities --smoke

@@ -1,9 +1,13 @@
 """GSP-Louvain core: the paper's contribution as composable JAX modules."""
-from repro.core.louvain import LouvainConfig, louvain, louvain_staged
+from repro.core.louvain import (
+    LouvainConfig, louvain, louvain_impl, louvain_staged,
+)
 from repro.core.local_move import local_move
 from repro.core.split import split_labels
 from repro.core.aggregate import aggregate
-from repro.core.detect import disconnected_communities
+from repro.core.detect import (
+    disconnected_communities, disconnected_communities_impl,
+)
 from repro.core.modularity import modularity
 from repro.core.lpa import lpa_run
 from repro.core.dynamic import update_communities
@@ -11,11 +15,13 @@ from repro.core.dynamic import update_communities
 __all__ = [
     "LouvainConfig",
     "louvain",
+    "louvain_impl",
     "louvain_staged",
     "local_move",
     "split_labels",
     "aggregate",
     "disconnected_communities",
+    "disconnected_communities_impl",
     "modularity",
     "lpa_run",
     "update_communities",

@@ -22,8 +22,8 @@ import jax.numpy as jnp
 from repro.core import _segments as seg
 
 
-@partial(jax.jit, static_argnames=())
-def aggregate(src, dst, w, C_dense):
+@partial(jax.jit, static_argnames=("impl",))
+def aggregate(src, dst, w, C_dense, *, impl: str = "sort"):
     """Build the super-vertex graph.
 
     Args:
@@ -32,6 +32,13 @@ def aggregate(src, dst, w, C_dense):
         padding vertices must already map to the ghost community (nv - 1 is
         fine — anything >= n_comms that sorts last; callers use
         ``_segments.renumber`` which guarantees this).
+      impl: 'sort' (run-length reduction after a (C[src], C[dst]) sort) or
+        'dense' (scatter into a [nv, nv] super-adjacency and re-extract COO
+        — the small-``nv`` service specialization).  Both produce the same
+        output bit for bit: super-edge weights sum in edge order either
+        way (stable sort preserves it within runs; scatter-add applies
+        duplicate-index updates in it), and the flattened (c1, c2) cell
+        order *is* the sorted run order.
 
     Returns:
       (src', dst', w'): the super-vertex graph in the same capacities.
@@ -44,6 +51,25 @@ def aggregate(src, dst, w, C_dense):
     e_src = jnp.where(valid, C_dense[src], ghost).astype(jnp.int32)
     e_dst = jnp.where(valid, C_dense[dst], ghost).astype(jnp.int32)
     e_w = jnp.where(valid, w, 0.0)
+
+    if impl == "dense":
+        M = jnp.zeros((nv, nv), jnp.float32).at[e_src, e_dst].add(e_w)
+        flat = M.reshape(-1)
+        rows = (jnp.arange(nv * nv, dtype=jnp.int32) // nv).astype(jnp.int32)
+        # all real edge weights are positive, so a nonzero cell <=> a run
+        cell_valid = (rows < ghost) & (flat != 0.0)
+        cnt = jnp.cumsum(cell_valid.astype(jnp.int32))
+        n_runs = cnt[-1]
+        k = jnp.arange(m_cap, dtype=jnp.int32)
+        # slot k holds the k-th valid cell in flat (c1, c2) order — exactly
+        # run k of the sort formulation
+        idx = jnp.searchsorted(cnt, k + 1, side="left").astype(jnp.int32)
+        idx = jnp.minimum(idx, nv * nv - 1)
+        keep = k < n_runs
+        out_src = jnp.where(keep, idx // nv, ghost).astype(jnp.int32)
+        out_dst = jnp.where(keep, idx % nv, ghost).astype(jnp.int32)
+        out_w = jnp.where(keep, flat[idx], 0.0)
+        return out_src, out_dst, out_w
 
     s_src, s_dst, s_w = seg.sort_by_key2(e_src, e_dst, e_w)
     starts = seg.run_starts(s_src, s_dst)

@@ -19,19 +19,22 @@ from repro.core import _segments as seg
 from repro.core.split import split_labels
 
 
-@partial(jax.jit, static_argnames=("axis",))
-def disconnected_communities(src, dst, w, C, n_nodes, *, axis=None):
-    """Flags + counts of internally-disconnected communities.
+def disconnected_communities_impl(src, dst, w, C, n_nodes, *, axis=None,
+                                  impl: str = "coo"):
+    """Flags + counts of internally-disconnected communities (unjitted).
 
     Returns a dict with:
       disconnected: bool[nv] per community id (dense ids not required),
       n_disconnected: int32, n_communities: int32, fraction: f32.
+
+    ``impl`` selects the split fixpoint implementation ('coo' | 'dense' —
+    see :func:`repro.core.split.split_labels`).
     """
     nv = C.shape[0]
     ghost = nv - 1
     node_valid = jnp.arange(nv) < n_nodes
 
-    L, _ = split_labels(src, dst, w, C, mode="pj", axis=axis)
+    L, _ = split_labels(src, dst, w, C, mode="pj", axis=axis, impl=impl)
     # count distinct (C, L) pairs per community: sort pairs, count run starts
     c_key = jnp.where(node_valid, C, ghost).astype(jnp.int32)
     l_key = jnp.where(node_valid, L, ghost).astype(jnp.int32)
@@ -50,3 +53,8 @@ def disconnected_communities(src, dst, w, C, n_nodes, *, axis=None):
         n_communities=n_comms,
         fraction=frac.astype(jnp.float32),
     )
+
+
+disconnected_communities = partial(
+    jax.jit, static_argnames=("axis", "impl")
+)(disconnected_communities_impl)

@@ -34,6 +34,16 @@ from repro.core.split import split_labels
 
 SDS = jax.ShapeDtypeStruct
 
+# jax >= 0.6 exposes shard_map at the top level with `check_vma`; earlier
+# releases ship it under jax.experimental with the `check_rep` spelling.
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _SHARD_MAP_KW = {"check_vma": False}
+else:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _SHARD_MAP_KW = {"check_rep": False}
+
 
 def community_pass(src, dst, w, v_lo, v_hi, two_m, n_nodes, *,
                    nv: int, axis, move_iters: int, split_iters: int,
@@ -88,13 +98,13 @@ def build_community_step(mesh, *, n_cap: int, m_shard: int,
 
     edge_spec = P(axes, None)
     scal_spec = P(axes)
-    step = jax.shard_map(
+    step = _shard_map(
         shard_fn,
         mesh=mesh,
         in_specs=(edge_spec, edge_spec, edge_spec, scal_spec, scal_spec,
                   P(), P()),
         out_specs=(P(), P(), P(), edge_spec, edge_spec, edge_spec),
-        check_vma=False,
+        **_SHARD_MAP_KW,
     )
 
     args = (

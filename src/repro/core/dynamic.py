@@ -24,8 +24,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import _segments as seg
-from repro.core.local_move import MoveState, _half_sweep, _hash_parity, \
-    realized_modularity
+from repro.core.local_move import MoveState, _half_sweep, _half_sweep_dense, \
+    _hash_parity, realized_modularity
 from repro.core.split import split_labels
 from repro.graph.container import Graph
 
@@ -33,9 +33,11 @@ from repro.graph.container import Graph
 def apply_edge_updates(g: Graph, new_src, new_dst, new_w):
     """Append directed edges into the padded capacity (host-side numpy).
 
-    Returns a new Graph; raises if capacity is exhausted.  Deletions are
-    modeled as weight-0 updates of existing entries (standard for padded
-    dynamic formats).
+    Returns a new Graph; raises if capacity is exhausted.  Additions only:
+    a duplicate of an existing edge appends a parallel entry, which every
+    downstream consumer treats as summed weight.  True deletions /
+    weight-deltas (rewriting existing entries in place) are future work —
+    see ROADMAP open items.
     """
     import numpy as np
 
@@ -72,22 +74,32 @@ def affected_vertices(g: Graph, C, touched):
     return t | nbr | member
 
 
-@partial(jax.jit, static_argnames=("max_iters", "sync"))
+@partial(jax.jit, static_argnames=("max_iters", "sync", "scan"))
 def warm_local_move(src, dst, w, C_prev, two_m, active0, *, tau=1e-3,
-                    max_iters: int = 10, sync: str = "handshake"):
+                    max_iters: int = 10, sync: str = "handshake",
+                    scan: str = "sort"):
     """Local-moving warm-started from C_prev with a restricted active set.
 
     Mirrors local_move but (a) starts from the previous membership instead
     of singletons and (b) seeds the pruning mask with the screening set.
+    ``scan`` selects the sweep implementation exactly as in local_move.
     Returns (C, Sigma, iterations).
     """
     nv = C_prev.shape[0]
     ghost = nv - 1
     ids = jnp.arange(nv, dtype=jnp.int32)
-    owned = jnp.ones((nv,), bool)
+    owned = None if scan == "dense" else jnp.ones((nv,), bool)
     K = jax.ops.segment_sum(w, src, num_segments=nv)
     C0 = C_prev.astype(jnp.int32).at[ghost].set(ghost)
     Sigma0 = jax.ops.segment_sum(K, C0, num_segments=nv)
+    sweep_kw = {}
+    if scan == "dense":
+        sweep = _half_sweep_dense
+        adj = jnp.zeros((nv, nv), bool).at[src, dst].set(True)
+        sweep_kw["valid_cell"] = (ids[:, None] < ghost) & (ids[None, :] < ghost)
+    else:
+        sweep = _half_sweep
+        adj = None
 
     def body(state: MoveState) -> MoveState:
         (C, Sigma, active, q_prev, dq_it, _, it, n_prod,
@@ -97,14 +109,17 @@ def warm_local_move(src, dst, w, C_prev, two_m, active0, *, tau=1e-3,
         for ph, tp in ((0, 1), (1, 0)):
             movable = active & (pbit == ph)
             target_ok = pbit == tp
-            C, Sigma, moved, _, want = _half_sweep(
+            C, Sigma, moved, _, want = sweep(
                 src, dst, w, C, K, Sigma, two_m, owned, movable, None,
-                target_ok=target_ok, anchored=True,
+                target_ok=target_ok, anchored=True, **sweep_kw,
             )
             moved_any = moved_any | moved
         q_now = realized_modularity(src, dst, w, C, Sigma, two_m, owned, None)
-        nbr_moved = jax.ops.segment_max(
-            moved_any[src].astype(jnp.int32), dst, num_segments=nv) > 0
+        if scan == "dense":
+            nbr_moved = jnp.any(adj & moved_any[:, None], axis=0)
+        else:
+            nbr_moved = jax.ops.segment_max(
+                moved_any[src].astype(jnp.int32), dst, num_segments=nv) > 0
         active = nbr_moved | (want & active)
         better = q_now > q_best
         C_best = jnp.where(better, C, C_best)
@@ -129,20 +144,25 @@ def warm_local_move(src, dst, w, C_prev, two_m, active0, *, tau=1e-3,
 
 
 def update_communities(g_old: Graph, C_prev, updates, *, tau=1e-3,
-                       max_iters: int = 10):
+                       max_iters: int = 10, scan: str = "sort"):
     """Incrementally update a partition after an edge batch.
 
-    updates: (u int32[], v int32[], w f32[]) undirected additions (each pair
-    is inserted in both directions).  Returns (g_new, C_new dense, stats).
+    updates: (u int32[], v int32[], w f32[]) undirected additions (each
+    pair is inserted in both directions; self-loops once, per the
+    container convention).  Returns (g_new, C_new dense, stats).
+    ``scan='dense'`` routes the warm local-move and the split through the
+    small-graph dense kernels (the service's low-latency update path).
     """
     import numpy as np
 
     u, v, wts = (np.asarray(x) for x in updates)
-    keep = u != v
-    u, v, wts = u[keep], v[keep], wts[keep]
-    src = np.concatenate([u, v]).astype(np.int32)
-    dst = np.concatenate([v, u]).astype(np.int32)
-    ww = np.concatenate([wts, wts]).astype(np.float32)
+    # container convention: each undirected pair appears in both
+    # directions, self-loops once with their full weight
+    loops = u == v
+    src = np.concatenate([u[~loops], v[~loops], u[loops]]).astype(np.int32)
+    dst = np.concatenate([v[~loops], u[~loops], u[loops]]).astype(np.int32)
+    ww = np.concatenate([wts[~loops], wts[~loops],
+                         wts[loops]]).astype(np.float32)
     g = apply_edge_updates(g_old, src, dst, ww)
 
     touched = jnp.asarray(np.unique(np.concatenate([u, v])).astype(np.int32))
@@ -150,9 +170,10 @@ def update_communities(g_old: Graph, C_prev, updates, *, tau=1e-3,
     two_m = g.total_weight_2m()
     C, _, it = warm_local_move(
         g.src, g.dst, g.w, C_prev, two_m, active0,
-        tau=tau, max_iters=max_iters,
+        tau=tau, max_iters=max_iters, scan=scan,
     )
-    labels, _ = split_labels(g.src, g.dst, g.w, C)
+    labels, _ = split_labels(g.src, g.dst, g.w, C,
+                             impl="dense" if scan == "dense" else "coo")
     C_new, n_comms = seg.renumber(labels, g.node_mask(), g.nv)
     stats = dict(
         iterations=it,

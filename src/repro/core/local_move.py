@@ -36,6 +36,25 @@ shard — graph/partition.py), so every per-vertex reduction here is exact
 shard-locally.  Per-vertex state (C, Sigma, active) is replicated and merged
 with one ``psum``/``pmax`` per half-sweep (collectives.py wrappers; identity
 when ``axis=None``).
+
+Scan strategies (``scan=``): the sweep above is expressed twice.
+
+* ``'sort'`` (default) — the sort + run-reduction formulation described
+  above: O(m log m) per sweep, capacity-oblivious, the right layout for
+  the paper's 100M+-vertex graphs.
+* ``'dense'`` — the small-graph service specialization: ``K_{i->c}`` is
+  scattered straight into a dense ``[nv, nv]`` vertex-x-community matrix
+  and the argmax runs as a row reduction.  For the bucketed request
+  shapes of :mod:`repro.service` (``nv`` of a few hundred, ``nv^2``
+  comparable to ``m_cap``) this removes the per-sweep sort entirely,
+  which dominates wall time on small graphs and vmaps/batches without
+  sort's poor accelerator utilization.  The two strategies are **bit
+  equivalent**: scatter-add applies duplicate-index updates in edge
+  order, which is exactly the order the stable ``(src, C[dst])`` sort
+  feeds the run reduction, so every W_{i->c} (and hence every dq,
+  argmax decision, and realized-Q trajectory) matches the sort path
+  float for float (asserted in tests/test_service.py).  Single-device
+  only (``axis`` must be None).
 """
 from __future__ import annotations
 
@@ -150,8 +169,14 @@ def _half_sweep(src, dst, w, C, K, Sigma, two_m, owned, movable, axis,
     # 'want': the vertex has a positive move ignoring schedule gates — used
     # to keep schedule-blocked vertices awake under pruning (a pruned vertex
     # whose merge was blocked by an unlucky parity roll must retry, or the
-    # move is lost forever once its neighborhood goes quiet).
-    base = run_valid & (i_run < ghost) & (c_run < ghost) & (c_run != d_of_i)
+    # move is lost forever once its neighborhood goes quiet).  Zero-weight
+    # runs are excluded: cand requires W_ic(frozen) > 0 <= W_ic_all, so a
+    # zero-weight target can never become admissible and shouldn't hold a
+    # vertex awake — this also keeps the dense scan (whose cells exist iff
+    # W_ic_all > 0) bit-equivalent even when zero-weight edges appear
+    # (refine's masked graphs, weight-delta updates).
+    base = (run_valid & (i_run < ghost) & (c_run < ghost)
+            & (c_run != d_of_i) & (W_ic_all > 0.0))
     dq_all = jnp.where(base, dq, NEG)
     want = jax.ops.segment_max(dq_all, i_run, num_segments=nv) > 0.0
     dq = jnp.where(cand, dq, NEG)
@@ -180,7 +205,93 @@ def _half_sweep(src, dst, w, C, K, Sigma, two_m, owned, movable, axis,
     return C_new, Sigma_new, moved, gain, want
 
 
-@partial(jax.jit, static_argnames=("max_iters", "sync", "prune", "axis"))
+def _half_sweep_dense(src, dst, w, C, K, Sigma, two_m, owned, movable, axis,
+                      target_ok=None, anchored=True, valid_cell=None):
+    """Dense twin of :func:`_half_sweep` for small ``nv`` (see module doc).
+
+    Same contract and bit-identical results (for positive edge weights —
+    the framework invariant); the sortscan is replaced by a complex-packed
+    scatter-add into a ``[nv, nv]`` community matrix (real part: true
+    K_{i->c}; imaginary part: anchored/frozen K_{i->c}).
+
+    ``owned=None`` means "no ownership partition" (single-device service
+    path) and skips the masking entirely — value-identical to an all-True
+    owned.  ``valid_cell`` optionally carries the loop-invariant
+    (i < ghost) & (c < ghost) mask so callers hoist it out of the sweep.
+    """
+    nv = C.shape[0]
+    ghost = nv - 1
+    ids = jnp.arange(nv, dtype=jnp.int32)
+    c_ids = ids[None, :]
+    if valid_cell is None:
+        valid_cell = (ids[:, None] < ghost) & (c_ids < ghost)
+
+    cd = C[dst]
+    not_self = src != dst  # exclude self-loops from scan (paper Alg. 4)
+    w_all = jnp.where(not_self, w, 0.0)
+    w_frozen = jnp.where(not_self & ~movable[dst], w, 0.0) if anchored else w_all
+    # One scatter pays the per-index cost once for both scans.  Complex add
+    # is componentwise IEEE f32 add, and duplicate-index updates apply in
+    # edge order — the same order the stable sort feeds segment_sum — so
+    # both components are bit-identical to the sort path's run sums.
+    packed = jax.lax.complex(w_all, w_frozen)
+    Wc = jnp.zeros((nv, nv), jnp.complex64).at[src, cd].add(packed)
+    W_all = jnp.real(Wc)       # true K_{i->c} per (vertex, community)
+    W_frz = jnp.imag(Wc)       # anchored K_{i->c}
+
+    # --- K_{i->d}: true weight to own community (excluding self) ---------
+    K_own = W_all[ids, C]
+
+    # --- delta-modularity per candidate cell (paper Eq. 2) ---------------
+    Ki = K[:, None]
+    dq = (
+        2.0 * (W_all - K_own[:, None]) / two_m
+        - 2.0 * Ki * (Ki + Sigma[None, :] - Sigma[C][:, None]) / (two_m * two_m)
+    )
+    # A cell (i, c != C[i]) corresponds to a sortscan run iff some non-self
+    # edge i->j lands in c; all real edge weights are positive, so run
+    # existence is exactly W_all > 0 (and the anchored gate W_frz > 0
+    # subsumes it for cand).
+    geom = valid_cell & (c_ids != C[:, None])
+    cand = geom & (W_frz > 0.0) & movable[:, None]
+    if owned is not None:
+        cand = cand & owned[:, None]
+    if target_ok is not None:
+        cand = cand & target_ok[None, :]
+    want = jnp.max(jnp.where(geom & (W_all > 0.0), dq, NEG), axis=1) > 0.0
+
+    # --- argmax per source vertex (min community id breaks ties) ---------
+    dq_cand = jnp.where(cand, dq, NEG)
+    best = jnp.max(dq_cand, axis=1)
+    c_star = jnp.min(
+        jnp.where(cand & (dq_cand >= best[:, None] - 0.0), c_ids, seg.INT_MAX),
+        axis=1,
+    )
+    move = (best > 0.0) & (c_star < ghost)
+    C_local = jnp.where(move, c_star.astype(jnp.int32), C)
+
+    # --- merge + exact Sigma recompute: identical to the sort path -------
+    if owned is None:
+        C_new = C_local.at[ghost].set(ghost)
+        moved = move
+        Sigma_new = jax.ops.segment_sum(K, C_new, num_segments=nv)
+        gain = jnp.sum(jnp.where(move, best, 0.0))
+    else:
+        C_new = col.psum(jnp.where(owned, C_local, 0), axis)
+        C_new = C_new.at[ghost].set(ghost)
+        moved = col.psum(
+            jnp.where(owned & move, 1, 0).astype(jnp.int32), axis) > 0
+        Sigma_new = col.psum(
+            jax.ops.segment_sum(
+                jnp.where(owned, K, 0.0), C_new, num_segments=nv),
+            axis,
+        )
+        gain = col.psum(jnp.sum(jnp.where(owned & move, best, 0.0)), axis)
+        want = col.pmax((want & owned).astype(jnp.int32), axis) > 0
+    return C_new, Sigma_new, moved, gain, want
+
+
+@partial(jax.jit, static_argnames=("max_iters", "sync", "prune", "axis", "scan"))
 def local_move(
     src,
     dst,
@@ -196,18 +307,50 @@ def local_move(
     prune: bool = True,
     axis=None,
     owned=None,
+    scan: str = "sort",
+    skip=None,
+    adj=None,
 ):
     """Run the local-moving phase to convergence.
 
     Returns ``(C, Sigma, l_i)`` — final membership, community weights, and
     the number of iterations performed (paper's ``l_i``; drives the global
     convergence check ``l_i <= 1``).
+
+    ``scan='dense'`` selects the small-graph dense community-matrix sweep
+    (bit-identical results; single-device only — see module docstring).
+
+    ``skip`` (traced bool[] or None): when True the loop exits before the
+    first sweep and returns the initial state.  Callers that re-enter the
+    pass loop under ``vmap`` pass their per-element done flag here so a
+    finished graph contributes zero trips to the batched while_loop instead
+    of re-converging work that the pass driver then discards.
+
+    ``adj`` (bool[nv, nv] or None, dense scan only): precomputed edge
+    adjacency; lets the pass driver amortize one scatter across the
+    local-move and split phases.
     """
     nv = C0.shape[0]
     ghost = nv - 1
-    if owned is None:
+    if scan == "dense" and axis is not None:
+        raise ValueError("scan='dense' is single-device only (axis=None)")
+    if owned is None and scan != "dense":
         owned = jnp.ones((nv,), bool)
+    no_skip = jnp.bool_(False) if skip is None else skip
     ids = jnp.arange(nv, dtype=jnp.int32)
+    sweep_kw = {}
+    if scan == "dense":
+        sweep = _half_sweep_dense
+        if adj is None:
+            # boolean adjacency for the pruning wake-up (replaces the
+            # per-sweep segment_max scatter with a [nv, nv] reduction;
+            # booleans, so any formulation is exact).  Padded edges land at
+            # (ghost, ghost) where moved[ghost] is always False.
+            adj = jnp.zeros((nv, nv), bool).at[src, dst].set(True)
+        # loop-invariant cell validity, hoisted out of the sweeps
+        sweep_kw["valid_cell"] = (ids[:, None] < ghost) & (ids[None, :] < ghost)
+    else:
+        sweep = _half_sweep
 
     def body(state: MoveState) -> MoveState:
         (C, Sigma, active, q_prev, dq_it, _, it, n_prod,
@@ -224,18 +367,21 @@ def local_move(
             parity_ok = jnp.ones((nv,), bool) if ph is None else (pbit == ph)
             movable = active & parity_ok
             target_ok = None if tp is None else (pbit == tp)
-            C, Sigma, moved, _, want = _half_sweep(
+            C, Sigma, moved, _, want = sweep(
                 src, dst, w, C, K, Sigma, two_m, owned, movable, axis,
-                target_ok=target_ok, anchored=(ph is not None),
+                target_ok=target_ok, anchored=(ph is not None), **sweep_kw,
             )
             moved_any = moved_any | moved
         q_now = realized_modularity(src, dst, w, C, Sigma, two_m, owned, axis)
         if prune:
             # neighbors of moved vertices wake up; everyone else sleeps
-            nbr_moved = jax.ops.segment_max(
-                moved_any[src].astype(jnp.int32), dst, num_segments=nv
-            )
-            nbr_moved = col.pmax(nbr_moved, axis) > 0
+            if scan == "dense":
+                nbr_moved = jnp.any(adj & moved_any[:, None], axis=0)
+            else:
+                nbr_moved = jax.ops.segment_max(
+                    moved_any[src].astype(jnp.int32), dst, num_segments=nv
+                )
+                nbr_moved = col.pmax(nbr_moved, axis) > 0
             active = nbr_moved | want  # schedule-blocked desire stays awake
         else:
             active = jnp.ones((nv,), bool)
@@ -255,7 +401,7 @@ def local_move(
         # can stall purely because of an unlucky parity roll
         warmup = state.it < 2
         progress = (state.dQ_iter > tau) | (state.dQ_prev > tau)
-        return (warmup | progress) & (state.it < max_iters)
+        return (warmup | progress) & (state.it < max_iters) & ~no_skip
 
     C_init = C0.astype(jnp.int32).at[ghost].set(ghost)
     q0 = realized_modularity(src, dst, w, C_init, Sigma0, two_m, owned, axis)

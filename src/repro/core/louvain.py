@@ -68,7 +68,7 @@ def _split_mode(split: str) -> str:
 
 
 def refine_labels(src, dst, w, C, two_m, *, tau, max_iters=10, axis=None,
-                  owned=None):
+                  owned=None, scan="sort", skip=None):
     """Leiden refinement: local-move from singletons restricted to each
     community's bound — implemented as local_move over the community-masked
     edge set (cross-community weights zeroed), scored against the full-graph
@@ -83,39 +83,57 @@ def refine_labels(src, dst, w, C, two_m, *, tau, max_iters=10, axis=None,
     C0 = jnp.arange(nv, dtype=jnp.int32)
     R, _, _ = local_move(
         src, dst, w_in, C0, K_in, K_in, two_m,
-        tau=tau, max_iters=max_iters, axis=axis, owned=owned,
+        tau=tau, max_iters=max_iters, axis=axis, owned=owned, scan=scan,
+        skip=skip,
     )
     return R
 
 
-@partial(jax.jit, static_argnames=("cfg", "axis"))
-def louvain(g: Graph, cfg: LouvainConfig = LouvainConfig(), *, axis=None, owned=None):
-    """Run GSP-Louvain. Returns (C int32[nv] dense top-level membership,
-    stats dict). Ghost/padding vertices map to the trailing community ids;
-    mask with ``g.node_mask()`` downstream."""
+def louvain_impl(g: Graph, cfg: LouvainConfig = LouvainConfig(), *, axis=None,
+                 owned=None, scan: str = "sort"):
+    """Run GSP-Louvain (unjitted — vmap/jit-compose freely).
+
+    Returns (C int32[nv] dense top-level membership, stats dict).
+    Ghost/padding vertices map to the trailing community ids; mask with
+    ``g.node_mask()`` downstream.
+
+    ``scan`` selects the phase implementations: 'sort' is the general
+    sortscan formulation; 'dense' routes local-move/split/aggregate through
+    the small-``nv`` dense community-matrix kernels (bit-identical results,
+    single-device only — the batched service engine's path).
+    """
     nv = g.nv
     two_m = g.total_weight_2m()
     do_sp = cfg.split.startswith("sp")
     mode = _split_mode(cfg.split)
+    split_impl = "dense" if scan == "dense" else "coo"
+    agg_impl = "dense" if scan == "dense" else "sort"
 
     def body(st: PassState) -> PassState:
         node_valid = jnp.arange(nv) < st.n_cur
         K = jax.ops.segment_sum(st.ew, st.esrc, num_segments=nv)
         C0 = jnp.arange(nv, dtype=jnp.int32)
+        # one adjacency scatter per pass, shared by local-move pruning and
+        # the split fixpoint (dense scan only)
+        adj = (jnp.zeros((nv, nv), bool).at[st.esrc, st.edst].set(True)
+               if scan == "dense" else None)
         C, _, li = local_move(
             st.esrc, st.edst, st.ew, C0, K, K, two_m,
             tau=st.tau, max_iters=cfg.max_iters, sync=cfg.sync,
-            prune=cfg.prune, axis=axis, owned=owned,
+            prune=cfg.prune, axis=axis, owned=owned, scan=scan,
+            skip=st.done, adj=adj,
         )
         if cfg.split == "refine":
             labels = refine_labels(
                 st.esrc, st.edst, st.ew, C, two_m,
                 tau=st.tau, max_iters=cfg.max_iters, axis=axis, owned=owned,
+                scan=scan, skip=st.done,
             )
         elif do_sp:
             labels, _ = split_labels(
                 st.esrc, st.edst, st.ew, C,
                 mode=mode, max_iters=cfg.split_max_iters, axis=axis,
+                impl=split_impl, skip=st.done, adj=adj,
             )
         else:
             labels = C
@@ -128,7 +146,8 @@ def louvain(g: Graph, cfg: LouvainConfig = LouvainConfig(), *, axis=None, owned=
         )
         done = converged | low_shrink
 
-        nsrc, ndst, nw = aggregate(st.esrc, st.edst, st.ew, C_dense)
+        nsrc, ndst, nw = aggregate(st.esrc, st.edst, st.ew, C_dense,
+                                   impl=agg_impl)
         # freeze the graph if we're done (avoids dead aggregation writes)
         esrc = jnp.where(done, st.esrc, nsrc)
         edst = jnp.where(done, st.edst, ndst)
@@ -157,12 +176,15 @@ def louvain(g: Graph, cfg: LouvainConfig = LouvainConfig(), *, axis=None, owned=
     if cfg.split.startswith("sl"):
         labels, _ = split_labels(
             g.src, g.dst, g.w, Ctop, mode=mode,
-            max_iters=cfg.split_max_iters, axis=axis,
+            max_iters=cfg.split_max_iters, axis=axis, impl=split_impl,
         )
         Ctop, _ = seg.renumber(labels, g.node_mask(), nv)
     n_final = seg.count_communities(Ctop, g.node_mask(), nv)
     stats = dict(passes=out.lp, li_last=out.li_last, n_communities=n_final)
     return Ctop, stats
+
+
+louvain = partial(jax.jit, static_argnames=("cfg", "axis", "scan"))(louvain_impl)
 
 
 # --------------------------------------------------------------------------

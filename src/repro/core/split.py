@@ -39,7 +39,7 @@ class SplitState(NamedTuple):
     it: jax.Array       # int32[]
 
 
-@partial(jax.jit, static_argnames=("mode", "max_iters", "axis"))
+@partial(jax.jit, static_argnames=("mode", "max_iters", "axis", "impl"))
 def split_labels(
     src,
     dst,
@@ -49,6 +49,9 @@ def split_labels(
     mode: str = "pj",
     max_iters: int = 0,
     axis=None,
+    impl: str = "coo",
+    skip=None,
+    adj=None,
 ):
     """Label every vertex with its (component ∩ community) representative.
 
@@ -57,6 +60,15 @@ def split_labels(
       C: int32[nv] community membership.
       mode: 'lp' | 'lpp' | 'pj'.
       max_iters: 0 = run to fixpoint bound nv (safe upper bound).
+      impl: 'coo' (segment reductions over edges) or 'dense' (same-community
+        adjacency as a [nv, nv] boolean matrix, row-min per round — the
+        small-``nv`` service specialization; label math is integer min, so
+        both implementations are exactly equal).  'dense' is single-device
+        only.
+      skip: traced bool[] or None — when True, exit before the first round
+        (vmap'd pass drivers pass their done flag; see local_move).
+      adj: optional precomputed bool[nv, nv] edge adjacency (dense impl);
+        masked down to same-community pairs here, saving the scatter.
 
     Returns:
       (labels int32[nv], iterations int32).  ``labels`` refines ``C``.
@@ -66,13 +78,29 @@ def split_labels(
     limit = max_iters if max_iters > 0 else nv
     same = (C[src] == C[dst]) & (src < ghost) & (dst < ghost)
     INT_MAX = jnp.iinfo(jnp.int32).max
+    no_skip = jnp.bool_(False) if skip is None else skip
+    if impl == "dense":
+        if axis is not None:
+            raise ValueError("impl='dense' is single-device only (axis=None)")
+        # C is fixed for the whole fixpoint, so the masked adjacency is
+        # loop-invariant: one scatter (or a mask of the caller's adjacency),
+        # then every round is a row reduction.
+        if adj is not None:
+            ids = jnp.arange(nv, dtype=jnp.int32)
+            A_same = (adj & (C[:, None] == C[None, :])
+                      & (ids[:, None] < ghost) & (ids[None, :] < ghost))
+        else:
+            A_same = jnp.zeros((nv, nv), bool).at[src, dst].max(same)
 
     def body(st: SplitState) -> SplitState:
         L, active, _, it = st
         # candidate: min label over same-community neighbors
-        cand_val = jnp.where(same, L[dst], INT_MAX)
-        cand = jax.ops.segment_min(cand_val, src, num_segments=nv)
-        cand = col.pmin(cand, axis)
+        if impl == "dense":
+            cand = jnp.min(jnp.where(A_same, L[None, :], INT_MAX), axis=1)
+        else:
+            cand_val = jnp.where(same, L[dst], INT_MAX)
+            cand = jax.ops.segment_min(cand_val, src, num_segments=nv)
+            cand = col.pmin(cand, axis)
         L_upd = jnp.minimum(L, cand).astype(jnp.int32)
         if mode == "lpp":
             # pruned vertices are not recomputed this round (paper line 8)
@@ -85,10 +113,13 @@ def split_labels(
         moved = L_new != L
         if mode == "lpp":
             # wake same-community neighbors of changed vertices, sleep rest
-            nbr = jax.ops.segment_max(
-                (moved[src] & same).astype(jnp.int32), dst, num_segments=nv
-            )
-            nbr = col.pmax(nbr, axis) > 0
+            if impl == "dense":
+                nbr = jnp.any(A_same & moved[:, None], axis=0)
+            else:
+                nbr = jax.ops.segment_max(
+                    (moved[src] & same).astype(jnp.int32), dst, num_segments=nv
+                )
+                nbr = col.pmax(nbr, axis) > 0
             active = nbr | moved
         else:
             active = jnp.ones((nv,), bool)
@@ -96,7 +127,7 @@ def split_labels(
         return SplitState(L_new, active, changed, it + 1)
 
     def cond(st: SplitState):
-        return st.changed & (st.it < limit)
+        return st.changed & (st.it < limit) & ~no_skip
 
     init = SplitState(
         L=jnp.arange(nv, dtype=jnp.int32),

@@ -7,7 +7,10 @@ ghost-vertex slot, so that every downstream phase (Louvain local-moving,
 splitting, aggregation, GNN message passing) can run under ``jax.jit`` /
 ``lax.while_loop`` without shape polymorphism.
 """
-from repro.graph.container import Graph, from_coo, from_undirected, ghost_pad
+from repro.graph.container import (
+    Graph, from_coo, from_undirected, ghost_pad, repad, stack_graphs,
+    unit_graph,
+)
 from repro.graph.generators import (
     sbm_graph,
     rmat_graph,
@@ -24,6 +27,9 @@ __all__ = [
     "from_coo",
     "from_undirected",
     "ghost_pad",
+    "repad",
+    "stack_graphs",
+    "unit_graph",
     "sbm_graph",
     "rmat_graph",
     "ring_of_cliques",

@@ -192,6 +192,57 @@ def from_undirected(
     return from_coo(n_nodes, s, d, ww, n_cap=n_cap, m_cap=m_cap)
 
 
+def repad(g: Graph, n_cap: int, m_cap: int) -> Graph:
+    """Host-side re-pad of a graph into new capacities (bucket admission).
+
+    Real edges are extracted and re-laid-out against the new ghost index;
+    raises if the graph does not fit.
+    """
+    n = int(g.n_nodes)
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    w = np.asarray(g.w)
+    mask = src < g.n_cap
+    if n > n_cap:
+        raise ValueError(f"n_cap={n_cap} < n_nodes {n}")
+    if int(mask.sum()) > m_cap:
+        raise ValueError(f"m_cap={m_cap} < num edges {int(mask.sum())}")
+    return from_coo(n, src[mask], dst[mask], w[mask], n_cap=n_cap, m_cap=m_cap)
+
+
+def stack_graphs(graphs) -> Graph:
+    """Stack same-capacity graphs into one batched Graph ([B, ...] leaves).
+
+    The result vmaps: static capacities are shared, array leaves gain a
+    leading batch dimension.
+    """
+    graphs = list(graphs)
+    if not graphs:
+        raise ValueError("stack_graphs needs at least one graph")
+    n_cap, m_cap = graphs[0].n_cap, graphs[0].m_cap
+    for g in graphs[1:]:
+        if (g.n_cap, g.m_cap) != (n_cap, m_cap):
+            raise ValueError("stack_graphs requires homogeneous capacities")
+    return Graph(
+        src=jnp.stack([g.src for g in graphs]),
+        dst=jnp.stack([g.dst for g in graphs]),
+        w=jnp.stack([g.w for g in graphs]),
+        n_nodes=jnp.stack([g.n_nodes for g in graphs]),
+        n_cap=n_cap,
+        m_cap=m_cap,
+    )
+
+
+def unit_graph(n_cap: int, m_cap: int) -> Graph:
+    """A 1-vertex graph with a unit self-loop: the batch filler.
+
+    Keeps ``2m > 0`` so padded batch slots never hit division-by-zero in
+    modularity terms; results for filler slots are discarded by callers.
+    """
+    return from_coo(1, np.array([0]), np.array([0]),
+                    np.array([1.0], np.float32), n_cap=n_cap, m_cap=m_cap)
+
+
 def ghost_pad(values: Array, ghost_value=0) -> Array:
     """Append the ghost slot to a per-vertex array of length n_cap."""
     pad = jnp.full((1,) + values.shape[1:], ghost_value, values.dtype)

@@ -1,0 +1,41 @@
+"""Batched community-detection service.
+
+Production traffic is many *concurrent* detection requests over many
+small-to-medium graphs (ego-networks, per-tenant subgraphs), not one giant
+graph.  This package turns the fixed-shape GSP-Louvain core into a serving
+stack:
+
+* :mod:`repro.service.buckets`  — static ``(n_cap, m_cap)`` size buckets;
+  every request is re-padded into the smallest fitting bucket so compiled
+  executables are shared across requests.
+* :mod:`repro.service.engine`   — the batched engine: one jitted
+  ``vmap(louvain_impl)`` call per (bucket, sub-batch) detects communities,
+  disconnected-community stats and modularity for a whole stack of graphs;
+  compiled executables are cached per ``(bucket, batch, LouvainConfig)``.
+* :mod:`repro.service.batcher`  — per-bucket request queues with full-batch
+  or deadline-flush dispatch.
+* :mod:`repro.service.store`    — per-graph partition + stats store with
+  versioned invalidation; edge updates route through the delta-screening
+  warm path (:mod:`repro.core.dynamic`) instead of full recompute.
+* :mod:`repro.service.service`  — the facade gluing the above together and
+  the latency/throughput metrics.
+"""
+from repro.service.buckets import Bucket, DEFAULT_BUCKETS, choose_bucket
+from repro.service.engine import BatchedLouvainEngine, DetectResult
+from repro.service.batcher import DetectRequest, RequestBatcher
+from repro.service.store import ResultStore, StoreEntry
+from repro.service.service import CommunityService, ServiceMetrics
+
+__all__ = [
+    "Bucket",
+    "DEFAULT_BUCKETS",
+    "choose_bucket",
+    "BatchedLouvainEngine",
+    "DetectResult",
+    "DetectRequest",
+    "RequestBatcher",
+    "ResultStore",
+    "StoreEntry",
+    "CommunityService",
+    "ServiceMetrics",
+]

@@ -1,0 +1,73 @@
+"""Per-bucket request batching with deadline flush.
+
+Requests are admitted into a bucket (re-padded to its static shape) and
+queued per bucket.  A bucket dispatches when it has a full batch, or when
+its oldest request has waited longer than ``max_delay_s`` (tail-latency
+bound for cold buckets).  The batcher is clock-injected and synchronous —
+the caller pumps it — so it is trivially testable and embeddable in any
+event loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Dict, Iterator, Optional, Sequence
+
+from repro.graph.container import Graph
+from repro.service.buckets import Bucket, DEFAULT_BUCKETS, admit
+
+
+@dataclasses.dataclass
+class DetectRequest:
+    req_id: str
+    graph: Graph            # bucket-padded
+    bucket: Bucket
+    t_submit: float
+
+
+class RequestBatcher:
+    def __init__(self, buckets: Sequence[Bucket] = DEFAULT_BUCKETS, *,
+                 batch_size: int = 32, max_delay_s: float = 0.05,
+                 clock: Optional[Callable[[], float]] = None):
+        import time
+
+        if batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+        self.buckets = tuple(sorted(buckets))
+        self.batch_size = batch_size
+        self.max_delay_s = max_delay_s
+        self.clock = clock or time.perf_counter
+        self._queues: Dict[Bucket, deque] = {b: deque() for b in self.buckets}
+
+    def submit(self, req_id: str, graph: Graph) -> DetectRequest:
+        """Admit a request graph: bucket-pad and enqueue. Returns the
+        request record (raises ValueError if no bucket fits)."""
+        padded, bucket = admit(graph, self.buckets)
+        req = DetectRequest(req_id, padded, bucket, self.t_submit())
+        self._queues[bucket].append(req)
+        return req
+
+    def t_submit(self) -> float:
+        return self.clock()
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def ready(self, *, force: bool = False
+              ) -> Iterator[tuple[Bucket, list[DetectRequest]]]:
+        """Yield (bucket, requests) batches ready to dispatch.
+
+        A bucket is ready when it holds >= batch_size requests, when its
+        oldest request is past the deadline, or always under ``force``
+        (drain).  Deadline flushes take whatever is queued — a partial
+        batch costs only filler slots in one sub-batch tile.
+        """
+        now = self.clock()
+        for bucket, q in self._queues.items():
+            while q:
+                full = len(q) >= self.batch_size
+                stale = (now - q[0].t_submit) >= self.max_delay_s
+                if not (full or stale or force):
+                    break
+                take = min(self.batch_size, len(q))
+                yield bucket, [q.popleft() for _ in range(take)]

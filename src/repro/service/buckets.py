@@ -1,0 +1,75 @@
+"""Size buckets: the static-shape admission policy of the service.
+
+Every incoming graph is host-side re-padded (:func:`repro.graph.repad`)
+into the smallest bucket that fits it.  Buckets are the compile keys: the
+engine compiles one executable per ``(bucket, batch, config)`` and reuses
+it for every request the bucket ever admits — heterogeneous traffic stops
+re-triggering XLA compilation, at the price of bounded padding waste.
+
+The default ladder covers ego-network-to-subgraph traffic: capacities grow
+by ~4x per rung so waste stays < 4x worst-case, and edge capacities are
+offered at two densities per vertex rung because real traffic mixes sparse
+(road-like) and dense (social ego-net) neighborhoods.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from repro.graph.container import Graph, repad, unit_graph
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Bucket:
+    """A static (vertex, directed-edge) capacity pair; ordering is by
+    (n_cap, m_cap) so sorted ladders try small buckets first."""
+
+    n_cap: int
+    m_cap: int
+
+    @property
+    def nv(self) -> int:
+        return self.n_cap + 1
+
+
+DEFAULT_BUCKETS: tuple[Bucket, ...] = (
+    Bucket(64, 512),
+    Bucket(64, 2048),
+    Bucket(256, 2048),
+    Bucket(256, 8192),
+    Bucket(1024, 16384),
+)
+
+
+def choose_bucket(n_nodes: int, m_directed: int,
+                  buckets: Sequence[Bucket] = DEFAULT_BUCKETS) -> Bucket:
+    """Smallest bucket admitting ``n_nodes`` vertices / ``m_directed``
+    directed edges; raises if nothing fits (callers reject the request)."""
+    for b in sorted(buckets):
+        if n_nodes <= b.n_cap and m_directed <= b.m_cap:
+            return b
+    raise ValueError(
+        f"no bucket fits n={n_nodes}, m={m_directed} "
+        f"(ladder max {max(sorted(buckets))})"
+    )
+
+
+def admit(g: Graph, buckets: Sequence[Bucket] = DEFAULT_BUCKETS
+          ) -> tuple[Graph, Bucket]:
+    """Re-pad a request graph into its bucket. Returns (padded, bucket)."""
+    m = int(np.asarray(g.src < g.n_cap).sum())
+    b = choose_bucket(int(g.n_nodes), m, buckets)
+    if (g.n_cap, g.m_cap) == (b.n_cap, b.m_cap):
+        return g, b
+    return repad(g, b.n_cap, b.m_cap), b
+
+
+def filler(bucket: Bucket) -> Graph:
+    """Bucket-shaped filler graph for padding partial batches."""
+    return unit_graph(bucket.n_cap, bucket.m_cap)
+
+
+def bucket_of(g: Graph) -> Bucket:
+    return Bucket(g.n_cap, g.m_cap)

@@ -1,0 +1,124 @@
+"""Incremental result store: partitions + stats per graph, with versioned
+invalidation and a delta-screening update path.
+
+The store keeps, per graph id, the bucket-padded graph, its current dense
+membership, detection stats, and a monotonically increasing version.  Edge
+updates do NOT trigger a full recompute: they route through the
+delta-screening warm start (:func:`repro.core.dynamic.update_communities`),
+which perturbs only the neighborhood of the changed edges and re-runs the
+split so the no-disconnected-communities guarantee survives updates.  If an
+update overflows the bucket's edge capacity the entry is invalidated and
+the caller falls back to a fresh detect request (re-bucketing).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import modularity
+from repro.core.detect import disconnected_communities
+from repro.core.dynamic import update_communities
+from repro.graph.container import Graph
+from repro.service.buckets import Bucket, bucket_of
+
+
+@dataclasses.dataclass
+class StoreEntry:
+    graph: Graph
+    C: np.ndarray                  # int32[nv] dense membership
+    bucket: Bucket
+    version: int
+    n_communities: int
+    n_disconnected: int
+    q: float
+
+
+class CapacityExceeded(Exception):
+    """Edge update does not fit the entry's bucket; re-bucket + recompute."""
+
+
+class ResultStore:
+    def __init__(self, *, dense_max_nv: int = 1025):
+        self._entries: Dict[str, StoreEntry] = {}
+        # versions survive invalidation so they stay monotone per graph id
+        # across the rebucket path (invalidate -> fresh detect -> put)
+        self._versions: Dict[str, int] = {}
+        self.dense_max_nv = dense_max_nv
+        self.n_warm_updates = 0
+        self.n_invalidations = 0
+
+    # -- basic CRUD -------------------------------------------------------
+    def put(self, graph_id: str, graph: Graph, C: np.ndarray, *,
+            n_communities: int, n_disconnected: int, q: float) -> StoreEntry:
+        version = self._versions.get(graph_id, 0) + 1
+        self._versions[graph_id] = version
+        entry = StoreEntry(
+            graph=graph, C=np.asarray(C), bucket=bucket_of(graph),
+            version=version,
+            n_communities=n_communities, n_disconnected=n_disconnected, q=q,
+        )
+        self._entries[graph_id] = entry
+        return entry
+
+    def get(self, graph_id: str) -> Optional[StoreEntry]:
+        return self._entries.get(graph_id)
+
+    def invalidate(self, graph_id: str) -> bool:
+        self.n_invalidations += 1
+        return self._entries.pop(graph_id, None) is not None
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    # -- incremental update path ------------------------------------------
+    def apply_update(self, graph_id: str, updates, *, tau: float = 1e-3,
+                     max_iters: int = 10) -> StoreEntry:
+        """Route an edge batch through the delta-screening warm path.
+
+        ``updates``: (u, v, w) undirected edge **additions** (parallel
+        entries are equivalent to summed weights for every consumer;
+        true deletions/weight-deltas are not yet supported — see ROADMAP).
+        Returns the refreshed entry; raises KeyError for unknown ids,
+        ValueError for malformed batches (entry untouched), and
+        :class:`CapacityExceeded` when the bucket has no room (the entry
+        is invalidated — the caller should resubmit the updated graph as
+        a fresh detect request).
+        """
+        u, v, w = (np.asarray(x) for x in updates)
+        if not (u.shape == v.shape == w.shape and u.ndim == 1):
+            raise ValueError(
+                f"update arrays must be equal-length 1-D, got shapes "
+                f"{u.shape}, {v.shape}, {w.shape}")
+        if w.size and not (w > 0).all():
+            # the dense kernels' bit-equivalence (and sensible modularity)
+            # is predicated on positive weights; deletions are unsupported
+            raise ValueError(
+                "update weights must be > 0 (additions only; deletions / "
+                "weight-deltas are not supported — see ROADMAP)")
+        entry = self._entries.get(graph_id)
+        if entry is None:
+            raise KeyError(graph_id)
+        scan = "dense" if entry.graph.nv <= self.dense_max_nv else "sort"
+        try:
+            g_new, C_new, stats = update_communities(
+                entry.graph, jnp.asarray(entry.C), (u, v, w),
+                tau=tau, max_iters=max_iters, scan=scan,
+            )
+        except ValueError as e:  # edge capacity exhausted
+            self.invalidate(graph_id)
+            raise CapacityExceeded(str(e)) from e
+        det = disconnected_communities(
+            g_new.src, g_new.dst, g_new.w, C_new, g_new.n_nodes,
+            impl="dense" if scan == "dense" else "coo",
+        )
+        q = float(modularity(g_new.src, g_new.dst, g_new.w, C_new))
+        self.n_warm_updates += 1
+        return self.put(
+            graph_id, g_new, np.asarray(C_new),
+            n_communities=int(stats["n_communities"]),
+            n_disconnected=int(det["n_disconnected"]),
+            q=q,
+        )

@@ -1,0 +1,37 @@
+"""Hypothesis import shim for environments without the package.
+
+The tier-1 suite must collect (and its non-property tests must run) on
+containers where ``hypothesis`` is not installed.  Import ``given``,
+``settings`` and ``st`` from here instead of from ``hypothesis``: with the
+real package present the property tests run unchanged; without it they are
+individually skipped while the rest of the module still executes.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on minimal containers
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategies:
+        """Placeholder strategy factory: values are only ever consumed by
+        the real ``@given``, so inert objects suffice."""
+
+        def __getattr__(self, name):
+            return lambda *args, **kwargs: None
+
+    st = _Strategies()
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+        return deco
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+
+        return deco

