@@ -14,3 +14,6 @@ python -m pytest -x -q
 
 echo "== service smoke =="
 python -m repro.launch.serve_communities --smoke
+
+echo "== async service smoke =="
+python -m repro.launch.serve_communities --async --smoke

@@ -1,24 +1,36 @@
-"""Community-detection service entrypoint + synthetic traffic driver.
+"""Community-detection service entrypoint + synthetic traffic drivers.
 
-Generates mixed-size request traffic (three graph families landing in
-three different size buckets), interleaves edge-update requests against
-already-served graphs (exercising the delta-screening warm path), pumps
-the service, and reports latency percentiles and throughput.
+Two drivers share the synthetic request families (three graph sizes
+landing in three buckets, plus warm edge updates):
+
+* default (sync pump): PR-1 style closed-loop traffic through the
+  ``CommunityService`` adapter — submit, pump, drain, report latency
+  percentiles and throughput.
+* ``--async``: a multi-tenant **open-loop** load generator against
+  ``AsyncCommunityService``.  Tenants submit at skewed rates with
+  ``block=False`` — arrivals do not slow down because the service is
+  busy, so queue overflow is *rejected* (counted per tenant), heavy
+  tenants cannot starve light ones (weighted DRR), and the report breaks
+  served/rejected/latency down per tenant.
 
   PYTHONPATH=src python -m repro.launch.serve_communities --smoke
+  PYTHONPATH=src python -m repro.launch.serve_communities --async --smoke
   PYTHONPATH=src python -m repro.launch.serve_communities \
-      --requests 200 --update-frac 0.3 --batch 32 --max-delay-ms 30
+      --async --tenants 4 --requests 200 --max-pending 12 --batch 16
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import time
 
 import numpy as np
 
 from repro.core import LouvainConfig
 from repro.graph import grid_graph, sbm_graph
-from repro.service import CommunityService
+from repro.service import (
+    AsyncCommunityService, CommunityService, QueueFull, ServiceConfig,
+)
 
 
 FAMILIES = ("ego_small", "ego_dense", "road")
@@ -50,6 +62,10 @@ def synth_updates(entry, seed: int, n_edges: int = 4):
     return u[keep], v[keep], np.ones(int(keep.sum()), np.float32)
 
 
+# ---------------------------------------------------------------------------
+# sync pump driver (PR-1 API, now a thin adapter over the front end)
+# ---------------------------------------------------------------------------
+
 def run_traffic(svc: CommunityService, *, n_requests: int, update_frac: float,
                 seed: int, warmup: bool = True, verbose: bool = True):
     """Feed the request mix, pumping as traffic arrives; returns the report.
@@ -67,8 +83,8 @@ def run_traffic(svc: CommunityService, *, n_requests: int, update_frac: float,
             e = svc.result(f"warm-{fam}")
             svc.submit_update(f"warm-{fam}", synth_updates(e, 1))
             # pre-compile the dispatch-size ladder each bucket will see
-            svc.engine.warm(e.bucket, svc.batcher.batch_size)
-        svc.metrics.__init__()          # reset counters after warmup
+            svc.engine.warm(e.bucket, svc.config.batch_size)
+        svc.metrics.reset()             # reset counters after warmup
 
     served_ids: list[str] = []
     n_updates = 0
@@ -102,11 +118,157 @@ def run_traffic(svc: CommunityService, *, n_requests: int, update_frac: float,
     return report
 
 
+# ---------------------------------------------------------------------------
+# async driver: multi-tenant open-loop load generator
+# ---------------------------------------------------------------------------
+
+def tenant_specs(n_tenants: int, n_requests: int):
+    """Skewed open-loop mix: tenant 0 is a burst-heavy whale submitting
+    ~2^i x the rate of tenant i.  Returns (name, n, burst, gap_s)."""
+    weights = [2 ** (n_tenants - 1 - i) for i in range(n_tenants)]
+    total = sum(weights)
+    specs = []
+    for i, w in enumerate(weights):
+        n = max(4, round(n_requests * w / total))
+        burst = 12 if i == 0 else 1       # the whale slams, others trickle
+        gap = 0.004 * (i + 1)
+        specs.append((f"t{i}", n, burst, gap))
+    return specs
+
+
+async def run_async_traffic(svc: AsyncCommunityService, specs, *,
+                            update_frac: float = 0.25, seed: int = 0,
+                            verbose: bool = True):
+    """Open-loop multi-tenant generator against the futures front end.
+
+    Each tenant submits with ``block=False`` — overflow of its bounded
+    queue is REJECTED and counted, never buffered, because open-loop
+    arrivals don't slow down for a busy service.  A fraction of traffic
+    becomes warm edge updates against that tenant's already-served
+    graphs.  Returns per-tenant (name, submitted, accepted, rejected,
+    updates) rows after a full drain.
+    """
+    async def one_tenant(idx, spec):
+        name, n, burst, gap = spec
+        rng = np.random.default_rng(seed + idx)
+        futs, rejected, updates = [], 0, 0
+        for i in range(n):
+            done = [f.graph_id for f in futs
+                    if f.done() and f.exception() is None]
+            if done and rng.random() < update_frac:
+                gid = done[int(rng.integers(0, len(done)))]
+                entry = svc.result(gid)
+                if entry is not None:
+                    await svc.submit_update(
+                        gid, synth_updates(entry, seed + i), tenant=name)
+                    updates += 1
+            else:
+                fam = FAMILIES[int(rng.integers(0, len(FAMILIES)))]
+                gid = f"{name}-g{i}-{fam}"
+                try:
+                    futs.append(await svc.submit_detect(
+                        gid, synth_graph(fam, seed + 131 * idx + i),
+                        tenant=name, block=False))
+                except QueueFull:
+                    rejected += 1
+            if burst == 1 or (i + 1) % burst == 0:
+                await asyncio.sleep(gap)
+        return name, n, futs, rejected, updates
+
+    outs = await asyncio.gather(
+        *(one_tenant(i, s) for i, s in enumerate(specs)))
+    await svc.drain()
+    rows = []
+    for name, n, futs, rejected, updates in outs:
+        for f in futs:
+            await f                       # every accepted request resolves
+        rows.append((name, n, len(futs), rejected, updates))
+
+    if verbose:
+        rep = svc.metrics.report()
+        print(f"{'tenant':<8}{'submitted':>10}{'accepted':>10}"
+              f"{'rejected':>10}{'served':>8}{'p50_ms':>9}")
+        for name, n, accepted, rejected, updates in rows:
+            t = rep["tenants"][name]
+            print(f"{name:<8}{n:>10}{accepted + updates:>10}"
+                  f"{rejected:>10}{t['served']:>8}{t['p50_ms']:>9.1f}")
+        print(f"aggregate: {rep['n_detect']} detect + {rep['n_update']} "
+              f"updates, {rep['n_rejected']} rejected, "
+              f"{rep['n_rebucketed']} re-bucketed, "
+              f"{rep['graphs_per_s']:.1f} graphs/s")
+    return rows
+
+
+async def warm_async(svc: AsyncCommunityService):
+    """Compile per-bucket executables + the update path before traffic."""
+    for i, fam in enumerate(FAMILIES):
+        await svc.submit_detect(f"warm-{fam}", synth_graph(fam, 10_000 + i),
+                                tenant="warm")
+    await svc.drain()
+    for fam in FAMILIES:
+        e = svc.result(f"warm-{fam}")
+        await svc.submit_update(f"warm-{fam}", synth_updates(e, 1),
+                                tenant="warm")
+        svc.engine.warm(e.bucket, svc.config.batch_size)
+    svc.metrics.reset()
+
+
+async def main_async(args):
+    if args.smoke:
+        # whale bursts 12 > bound 8: rejections are guaranteed; light
+        # tenants keep >= bound accepted, so served ratio <= 40/8 = 5
+        specs = [("whale", 40, 12, 0.004), ("mid", 24, 1, 0.004),
+                 ("light", 12, 1, 0.008)]
+    else:
+        specs = tenant_specs(args.tenants, args.requests)
+    config = ServiceConfig(
+        louvain=LouvainConfig(), batch_size=args.batch,
+        max_delay_s=args.max_delay_ms / 1e3, sub_batch=args.sub_batch,
+        max_pending_per_tenant=args.max_pending,
+    )
+    async with AsyncCommunityService(config) as svc:
+        await warm_async(svc)
+        t0 = time.perf_counter()
+        rows = await run_async_traffic(svc, specs,
+                                       update_frac=args.update_frac,
+                                       seed=args.seed)
+        dt = time.perf_counter() - t0
+        rep = svc.metrics.report()
+        print(f"wall time {dt:.1f}s (excl. warmup compile)")
+
+        if args.smoke:
+            served = {name: rep["tenants"][name]["served"]
+                      for name, *_ in rows}
+            assert len(served) >= 3, f"expected >= 3 tenants, saw {served}"
+            assert min(served.values()) > 0, f"starved tenant: {served}"
+            ratio = max(served.values()) / min(served.values())
+            assert ratio <= 6.0, f"served skew {ratio:.1f} > 6: {served}"
+            assert rep["n_rejected"] > 0, "queue bound never enforced"
+            assert svc.pending() == 0, "drain left work queued"
+            # the paper's guarantee must survive the whole mixed workload
+            bad = [gid for gid in list(svc.store._entries)
+                   if svc.store.get(gid).n_disconnected != 0]
+            assert not bad, f"disconnected communities served: {bad}"
+            print(f"ASYNC SMOKE OK (served skew {ratio:.1f}x, "
+                  f"{rep['n_rejected']} rejections)")
+    return rep
+
+
+# ---------------------------------------------------------------------------
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small fixed workload + invariant checks (CI)")
+    ap.add_argument("--async", dest="async_", action="store_true",
+                    help="futures front end + multi-tenant open-loop load")
     ap.add_argument("--requests", type=int, default=120)
+    ap.add_argument("--tenants", type=int, default=3,
+                    help="tenant count for the --async load mix")
+    ap.add_argument("--max-pending", type=int, default=12,
+                    help="per-tenant queue bound (--async only; the sync "
+                         "pump driver is closed-loop and keeps the "
+                         "ServiceConfig default)")
     ap.add_argument("--update-frac", type=float, default=0.3)
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--max-delay-ms", type=float, default=25.0)
@@ -115,9 +277,15 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     if args.smoke:
-        args.requests = 36
         args.batch = 6
         args.update_frac = 0.35
+        if not args.async_:
+            args.requests = 36
+
+    if args.async_:
+        if args.smoke:
+            args.max_pending = 8    # whale bursts of 12 must overflow
+        return asyncio.run(main_async(args))
 
     svc = CommunityService(
         LouvainConfig(), batch_size=args.batch,

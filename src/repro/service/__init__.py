@@ -5,37 +5,64 @@ small-to-medium graphs (ego-networks, per-tenant subgraphs), not one giant
 graph.  This package turns the fixed-shape GSP-Louvain core into a serving
 stack:
 
-* :mod:`repro.service.buckets`  — static ``(n_cap, m_cap)`` size buckets;
+* :mod:`repro.service.buckets`   — static ``(n_cap, m_cap)`` size buckets;
   every request is re-padded into the smallest fitting bucket so compiled
-  executables are shared across requests.
-* :mod:`repro.service.engine`   — the batched engine: one jitted
+  executables are shared across requests; plus the dense/sort scan
+  crossover model (:func:`choose_scan`).
+* :mod:`repro.service.engine`    — the batched engine: one jitted
   ``vmap(louvain_impl)`` call per (bucket, sub-batch) detects communities,
   disconnected-community stats and modularity for a whole stack of graphs;
   compiled executables are cached per ``(bucket, batch, LouvainConfig)``.
-* :mod:`repro.service.batcher`  — per-bucket request queues with full-batch
-  or deadline-flush dispatch.
-* :mod:`repro.service.store`    — per-graph partition + stats store with
-  versioned invalidation; edge updates route through the delta-screening
-  warm path (:mod:`repro.core.dynamic`) instead of full recompute.
-* :mod:`repro.service.service`  — the facade gluing the above together and
-  the latency/throughput metrics.
+* :mod:`repro.service.admission` — the front door: :class:`ServiceConfig`,
+  bounded per-tenant queues with explicit backpressure (:class:`QueueFull`)
+  and weighted deficit-round-robin fairness when composing bucket batches.
+* :mod:`repro.service.frontend`  — futures-based front end:
+  :class:`ServiceFrontend` (the one sync core) and
+  :class:`AsyncCommunityService` (asyncio dispatcher task; submissions
+  return awaitable :class:`DetectionFuture`\\ s).
+* :mod:`repro.service.store`     — per-graph partition + stats store with
+  versioned invalidation and LRU/TTL eviction; edge updates route through
+  the delta-screening warm path (:mod:`repro.core.dynamic`) instead of
+  full recompute.
+* :mod:`repro.service.service`   — :class:`CommunityService`, the thin
+  synchronous pump adapter over the front end (PR-1 API preserved).
+* :mod:`repro.service.metrics`   — latency/throughput metrics with
+  per-tenant served/rejected breakdowns.
 """
-from repro.service.buckets import Bucket, DEFAULT_BUCKETS, choose_bucket
+from repro.service.admission import (
+    AdmissionController, DEFAULT_TENANT, PendingRequest, QueueFull,
+    ServiceConfig,
+)
+from repro.service.buckets import (
+    Bucket, DEFAULT_BUCKETS, choose_bucket, choose_scan,
+)
 from repro.service.engine import BatchedLouvainEngine, DetectResult
-from repro.service.batcher import DetectRequest, RequestBatcher
-from repro.service.store import ResultStore, StoreEntry
-from repro.service.service import CommunityService, ServiceMetrics
+from repro.service.frontend import (
+    AsyncCommunityService, DetectionFuture, ServiceFrontend,
+)
+from repro.service.metrics import ServiceMetrics, TenantMetrics
+from repro.service.service import CommunityService
+from repro.service.store import CapacityExceeded, ResultStore, StoreEntry
 
 __all__ = [
-    "Bucket",
-    "DEFAULT_BUCKETS",
-    "choose_bucket",
+    "AdmissionController",
+    "AsyncCommunityService",
     "BatchedLouvainEngine",
-    "DetectResult",
-    "DetectRequest",
-    "RequestBatcher",
-    "ResultStore",
-    "StoreEntry",
+    "Bucket",
+    "CapacityExceeded",
     "CommunityService",
+    "DEFAULT_BUCKETS",
+    "DEFAULT_TENANT",
+    "DetectResult",
+    "DetectionFuture",
+    "PendingRequest",
+    "QueueFull",
+    "ResultStore",
+    "ServiceConfig",
+    "ServiceFrontend",
     "ServiceMetrics",
+    "StoreEntry",
+    "TenantMetrics",
+    "choose_bucket",
+    "choose_scan",
 ]

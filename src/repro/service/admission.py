@@ -1,0 +1,277 @@
+"""Admission control: the service front door.
+
+Three pieces:
+
+* :class:`ServiceConfig` — every service-layer knob in one dataclass
+  (engine, dispatch, scan crossover, admission, store eviction), replacing
+  the sprawl of constructor kwargs that PR 1 threaded through
+  ``CommunityService``.
+* bounded per-tenant queues — each tenant may hold at most
+  ``max_pending_per_tenant`` undispatched requests across all buckets;
+  overflow raises :class:`QueueFull` (explicit backpressure: the sync path
+  rejects, the async front end awaits a slot).
+* :class:`AdmissionController` — composes per-bucket batches with
+  **weighted deficit round robin** across tenants, so a tenant flooding
+  its queue cannot starve light tenants: every compose cycle credits each
+  active tenant ``weight`` units of deficit and takes requests only
+  against accumulated credit.  Within a tenant, higher ``priority``
+  dispatches first (FIFO inside a priority level); a request ``deadline``
+  forces its bucket to flush even before ``max_delay_s``.
+
+The controller is clock-injected and thread-safe: the async front end
+submits re-bucketed updates from its compute thread while the event loop
+collects batches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core import LouvainConfig
+from repro.graph.container import Graph
+from repro.service.buckets import Bucket, DEFAULT_BUCKETS
+
+
+DEFAULT_TENANT = "default"
+
+
+class QueueFull(Exception):
+    """A tenant's queue is at its bound: reject (sync) or await a slot
+    (async front end with ``block=True``)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """All service-layer configuration in one place.
+
+    Engine/dispatch:
+      louvain:     the one LouvainConfig the engine serves.
+      buckets:     static (n_cap, m_cap) admission ladder (sorted).
+      batch_size:  dispatch width per bucket batch.
+      max_delay_s: tail-latency bound — a bucket flushes a partial batch
+                   once its oldest request has waited this long.
+      sub_batch:   engine tile width; None = backend-keyed auto.
+
+    Dense/sort scan crossover (see :func:`repro.service.buckets.choose_scan`):
+      dense_max_nv / dense_small_nv / dense_min_density.
+
+    Admission:
+      max_pending_per_tenant: queue bound per tenant (backpressure).
+      tenant_weights: (tenant, weight) pairs for DRR fairness; unlisted
+                      tenants weigh 1.0.
+
+    Store eviction:
+      store_max_entries: LRU cap on resident entries (None = unbounded).
+      store_ttl_s:       entry time-to-live (None = no expiry).
+    """
+
+    louvain: LouvainConfig = dataclasses.field(default_factory=LouvainConfig)
+    buckets: Tuple[Bucket, ...] = DEFAULT_BUCKETS
+    batch_size: int = 32
+    max_delay_s: float = 0.05
+    sub_batch: Optional[int] = None
+    dense_max_nv: int = 1025
+    dense_small_nv: int = 129
+    dense_min_density: float = 0.02
+    max_pending_per_tenant: int = 64
+    tenant_weights: Tuple[Tuple[str, float], ...] = ()
+    store_max_entries: Optional[int] = None
+    store_ttl_s: Optional[float] = None
+
+    def __post_init__(self):
+        if self.batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {self.batch_size}")
+        if self.max_pending_per_tenant < 1:
+            raise ValueError("max_pending_per_tenant must be >= 1, got "
+                             f"{self.max_pending_per_tenant}")
+        for tenant, weight in self.tenant_weights:
+            if weight <= 0:
+                raise ValueError(
+                    f"tenant {tenant!r} weight must be > 0, got {weight}")
+        object.__setattr__(self, "buckets", tuple(sorted(self.buckets)))
+
+
+@dataclasses.dataclass
+class PendingRequest:
+    """A bucketed detect request waiting for dispatch."""
+
+    req_id: str
+    tenant: str
+    graph_id: str
+    graph: Graph                 # bucket-padded
+    bucket: Bucket
+    priority: int                # higher dispatches earlier within tenant
+    t_submit: float
+    deadline: Optional[float]    # absolute clock time forcing a flush
+    future: object = None        # DetectionFuture (set by the frontend)
+
+
+class AdmissionController:
+    """Bounded per-tenant queues + weighted-DRR bucket-batch composition."""
+
+    def __init__(self, buckets=DEFAULT_BUCKETS, *, batch_size: int = 32,
+                 max_delay_s: float = 0.05, max_pending_per_tenant: int = 64,
+                 weights: Optional[Dict[str, float]] = None,
+                 clock: Optional[Callable[[], float]] = None):
+        if batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+        self.buckets = tuple(sorted(buckets))
+        self.batch_size = int(batch_size)
+        self.max_delay_s = float(max_delay_s)
+        self.max_pending_per_tenant = int(max_pending_per_tenant)
+        self.clock = clock or time.perf_counter
+        self._weights: Dict[str, float] = dict(weights or {})
+        # bucket -> tenant -> heap of (-priority, seq, req)
+        self._queues: Dict[Bucket, Dict[str, list]] = {
+            b: {} for b in self.buckets}
+        self._pending_by_tenant: Dict[str, int] = {}
+        self._deficit: Dict[Tuple[Bucket, str], float] = {}
+        self._rr: Dict[Bucket, int] = {b: 0 for b in self.buckets}
+        self._order: List[str] = []       # stable first-seen tenant order
+        self._known = set()               # O(1) membership for _order
+        self._seq = itertools.count()     # FIFO tiebreak within a priority
+        self._lock = threading.Lock()
+
+    # -- weights ----------------------------------------------------------
+    def weight(self, tenant: str) -> float:
+        return self._weights.get(tenant, 1.0)
+
+    def set_weight(self, tenant: str, weight: float):
+        if weight <= 0:
+            raise ValueError(f"weight must be > 0, got {weight}")
+        self._weights[tenant] = float(weight)
+
+    # -- queueing ---------------------------------------------------------
+    def submit(self, req: PendingRequest, *, exempt_bound: bool = False):
+        """Enqueue; raises :class:`QueueFull` at the tenant's bound.
+
+        ``exempt_bound`` admits past the bound but still counts toward it
+        — for internal continuations (a re-bucketed update whose store
+        entry is already invalidated) that must not be droppable.
+        """
+        with self._lock:
+            n = self._pending_by_tenant.get(req.tenant, 0)
+            if n >= self.max_pending_per_tenant and not exempt_bound:
+                raise QueueFull(
+                    f"tenant {req.tenant!r} has {n} pending requests "
+                    f"(bound {self.max_pending_per_tenant})")
+            if req.tenant not in self._known:
+                self._known.add(req.tenant)
+                self._order.append(req.tenant)
+            q = self._queues[req.bucket].setdefault(req.tenant, [])
+            heapq.heappush(q, (-req.priority, next(self._seq), req))
+            self._pending_by_tenant[req.tenant] = n + 1
+
+    def pending(self, tenant: Optional[str] = None) -> int:
+        with self._lock:
+            if tenant is not None:
+                return self._pending_by_tenant.get(tenant, 0)
+            return sum(self._pending_by_tenant.values())
+
+    def tenants(self) -> List[str]:
+        with self._lock:
+            return list(self._order)
+
+    # -- dispatch decisions -----------------------------------------------
+    def ready_buckets(self, now: Optional[float] = None, *,
+                      force: bool = False) -> List[Bucket]:
+        """Buckets with a full batch, a stale oldest request, a passed
+        deadline, or anything at all under ``force``."""
+        now = self.clock() if now is None else now
+        out = []
+        with self._lock:
+            for b in self.buckets:
+                reqs = [item[2] for q in self._queues[b].values()
+                        for item in q]
+                if not reqs:
+                    continue
+                if force or len(reqs) >= self.batch_size:
+                    out.append(b)
+                    continue
+                t_oldest = min(r.t_submit for r in reqs)
+                d_min = min((r.deadline for r in reqs
+                             if r.deadline is not None), default=None)
+                if (now - t_oldest >= self.max_delay_s
+                        or (d_min is not None and now >= d_min)):
+                    out.append(b)
+        return out
+
+    def compose(self, bucket: Bucket, *,
+                max_n: Optional[int] = None) -> List[PendingRequest]:
+        """Pop up to ``max_n`` requests for ``bucket`` by weighted DRR.
+
+        Each cycle over tenants with queued work credits ``weight(t)``
+        deficit and serves requests against it; an emptied queue forfeits
+        its remaining credit (no banking while idle), so a returning
+        heavy tenant cannot burst past its share.
+        """
+        max_n = self.batch_size if max_n is None else max_n
+        batch: List[PendingRequest] = []
+        with self._lock:
+            queues = self._queues[bucket]
+            if self._order:
+                start = self._rr[bucket] % len(self._order)
+                self._rr[bucket] = start + 1
+                order = (self._order[start:] + self._order[:start])
+            else:
+                order = []
+            while len(batch) < max_n:
+                if not any(queues.get(t) for t in order):
+                    break
+                for t in order:
+                    q = queues.get(t)
+                    if not q:
+                        continue
+                    key = (bucket, t)
+                    self._deficit[key] = (self._deficit.get(key, 0.0)
+                                          + self.weight(t))
+                    while q and self._deficit[key] >= 1.0 and len(batch) < max_n:
+                        _, _, req = heapq.heappop(q)
+                        self._deficit[key] -= 1.0
+                        self._pending_by_tenant[req.tenant] -= 1
+                        batch.append(req)
+                    if not q:
+                        self._deficit[key] = 0.0
+                        del queues[t]
+                        if self._pending_by_tenant.get(t, 0) == 0:
+                            self._prune_idle(t)
+                    if len(batch) >= max_n:
+                        break
+        return batch
+
+    def evict_all(self) -> List[PendingRequest]:
+        """Pop every queued request (service shutdown) so the caller can
+        fail or cancel the attached futures — nothing may be left
+        awaiting a dispatcher that no longer runs."""
+        with self._lock:
+            out: List[PendingRequest] = []
+            for b in self.buckets:
+                for q in self._queues[b].values():
+                    out.extend(item[2] for item in q)
+                self._queues[b].clear()
+            self._pending_by_tenant.clear()
+            self._deficit.clear()
+            self._order.clear()
+            self._known.clear()
+            return out
+
+    def _prune_idle(self, tenant: str):
+        """Drop an idle tenant's bookkeeping (caller holds the lock).
+
+        DRR never banks deficit while idle, so a returning tenant starts
+        fresh anyway — pruning keeps per-submit and per-compose cost
+        independent of how many tenants have EVER submitted (the service
+        targets per-user tenant ids, so that set only grows)."""
+        self._known.discard(tenant)
+        try:
+            self._order.remove(tenant)
+        except ValueError:
+            pass
+        self._pending_by_tenant.pop(tenant, None)
+        for b in self.buckets:
+            self._deficit.pop((b, tenant), None)
+            self._queues[b].pop(tenant, None)

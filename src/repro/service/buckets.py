@@ -56,14 +56,48 @@ def choose_bucket(n_nodes: int, m_directed: int,
     )
 
 
+def choose_scan(nv: int, m_cap: int, *, dense_max_nv: int = 1025,
+                dense_small_nv: int = 129,
+                dense_min_density: float = 0.02) -> str:
+    """Dense-vs-sortscan crossover from a bucket density model.
+
+    Per local-move iteration the dense community-matrix sweep does
+    O(nv^2) work on the padded ``[nv, nv]`` matrix no matter how many
+    edge slots are live, while the sortscan does O(m_cap log m_cap) on
+    the padded edge arrays.  Dense wins when the matrix is small outright
+    (``nv <= dense_small_nv``: the sweep state stays cache-resident and
+    the sort's constant factors dominate) or when the bucket is dense
+    enough that the matrix does proportionate work
+    (``m_cap / nv^2 >= dense_min_density``).  Sparse large buckets —
+    road-like traffic in a (1024, 16384) bucket, density ~0.016 — fall
+    back to the sortscan, which scales with edges, not vertices^2.
+    Above ``dense_max_nv`` the ``[nv, nv]`` intermediates blow the
+    memory budget and the sortscan is always used.  Both formulations
+    are bit-equivalent (core/local_move.py), so this is purely a cost
+    choice — results are identical either way.
+    """
+    if nv > dense_max_nv:
+        return "sort"
+    if nv <= dense_small_nv:
+        return "dense"
+    return "dense" if m_cap >= dense_min_density * (nv * nv) else "sort"
+
+
 def admit(g: Graph, buckets: Sequence[Bucket] = DEFAULT_BUCKETS
           ) -> tuple[Graph, Bucket]:
     """Re-pad a request graph into its bucket. Returns (padded, bucket)."""
-    m = int(np.asarray(g.src < g.n_cap).sum())
+    m = live_edges(g)
     b = choose_bucket(int(g.n_nodes), m, buckets)
     if (g.n_cap, g.m_cap) == (b.n_cap, b.m_cap):
         return g, b
     return repad(g, b.n_cap, b.m_cap), b
+
+
+def live_edges(g: Graph) -> int:
+    """Directed live-edge count, on the host.  The numpy compare on the
+    (zero-copy on CPU) edge array beats dispatching a jax op + device
+    sync per request — this sits on the per-submit hot path."""
+    return int((np.asarray(g.src) < g.n_cap).sum())
 
 
 def filler(bucket: Bucket) -> Graph:

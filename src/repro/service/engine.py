@@ -35,7 +35,7 @@ from repro.core import (
     LouvainConfig, disconnected_communities_impl, louvain_impl, modularity,
 )
 from repro.graph.container import Graph, stack_graphs
-from repro.service.buckets import Bucket, bucket_of, filler
+from repro.service.buckets import Bucket, bucket_of, choose_scan, filler
 
 
 @dataclasses.dataclass
@@ -54,18 +54,24 @@ class BatchedLouvainEngine:
     """Vmapped GSP-Louvain over stacked same-bucket graphs."""
 
     def __init__(self, cfg: LouvainConfig = LouvainConfig(), *,
-                 dense_max_nv: int = 1025,
+                 dense_max_nv: int = 1025, dense_small_nv: int = 129,
+                 dense_min_density: float = 0.02,
                  sub_batch: Optional[int] = None):
         """Args:
           cfg: the one Louvain config this engine serves (part of the
             compile key; run several engines for several configs).
-          dense_max_nv: buckets with ``nv <= dense_max_nv`` use the dense
-            scan kernels; larger buckets fall back to the sortscan.
+          dense_max_nv / dense_small_nv / dense_min_density: the dense-vs-
+            sortscan crossover model (:func:`repro.service.buckets.
+            choose_scan`): dense kernels for small or dense buckets,
+            sortscan for sparse large buckets where m_cap / nv^2 falls
+            under ``dense_min_density``.
           sub_batch: dispatch width; None = auto (cache-sized on CPU, wide
             on accelerators).
         """
         self.cfg = cfg
         self.dense_max_nv = dense_max_nv
+        self.dense_small_nv = dense_small_nv
+        self.dense_min_density = dense_min_density
         if sub_batch is None:
             sub_batch = 1 if jax.default_backend() == "cpu" else 8
         self.sub_batch = max(1, int(sub_batch))
@@ -73,7 +79,10 @@ class BatchedLouvainEngine:
 
     # -- compile cache ----------------------------------------------------
     def scan_for(self, bucket: Bucket) -> str:
-        return "dense" if bucket.nv <= self.dense_max_nv else "sort"
+        return choose_scan(
+            bucket.nv, bucket.m_cap, dense_max_nv=self.dense_max_nv,
+            dense_small_nv=self.dense_small_nv,
+            dense_min_density=self.dense_min_density)
 
     def _one(self, g: Graph, scan: str):
         C, stats = louvain_impl(g, self.cfg, scan=scan)

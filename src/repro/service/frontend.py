@@ -1,0 +1,448 @@
+"""Futures-based service front end: tenants, admission, dispatch.
+
+Two layers, ONE code path:
+
+* :class:`ServiceFrontend` — the synchronous core.  ``submit_detect`` /
+  ``submit_update`` take a tenant id plus optional priority/deadline and
+  return a :class:`DetectionFuture`; ``collect()`` composes ready bucket
+  batches by weighted DRR (:mod:`repro.service.admission`); ``execute()``
+  runs the batched engine, writes the store, and resolves futures.
+  Everything the sync adapter (:class:`repro.service.service.
+  CommunityService`) and the async front end do funnels through these
+  methods — there is no behavior fork between the two.
+* :class:`AsyncCommunityService` — the asyncio front end: a dispatcher
+  task wakes on submissions (or a poll tick for deadline/max-delay
+  flushes), offloads engine/update compute to a single-worker executor so
+  the event loop keeps accepting traffic, and implements backpressure as
+  either ``QueueFull`` rejection (``block=False``) or await-until-slot
+  (``block=True``).
+
+Thread discipline: admission is internally locked; all JAX compute and
+store writes run on the one compute thread; futures are
+``concurrent.futures``-backed so resolution is thread-safe and awaitable
+from any running loop.
+"""
+from __future__ import annotations
+
+import asyncio
+import concurrent.futures
+import itertools
+import time
+from functools import partial
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.graph.container import Graph, from_coo
+from repro.service.admission import (
+    DEFAULT_TENANT, AdmissionController, PendingRequest, QueueFull,
+    ServiceConfig,
+)
+from repro.service.buckets import Bucket, admit, live_edges
+from repro.service.engine import BatchedLouvainEngine
+from repro.service.metrics import ServiceMetrics
+from repro.service.store import CapacityExceeded, ResultStore
+
+
+class DetectionFuture:
+    """Awaitable handle for a submitted request.
+
+    Wraps a :class:`concurrent.futures.Future` so one object serves both
+    worlds: ``result()`` blocks a sync caller, ``await fut`` suspends a
+    coroutine on any running loop, and the dispatcher resolves it from
+    whatever thread ran the engine.  Resolves to the
+    :class:`repro.service.store.StoreEntry` written for the request (or
+    raises the engine's exception).  ``kind`` is ``"detect"`` for queued
+    detections (including re-bucketed updates) and ``"update"`` for
+    warm-path updates, which resolve immediately.
+    """
+
+    __slots__ = ("req_id", "tenant", "graph_id", "kind", "t_submit", "_fut")
+
+    def __init__(self, req_id: str, tenant: str, graph_id: str, kind: str,
+                 t_submit: float):
+        self.req_id = req_id
+        self.tenant = tenant
+        self.graph_id = graph_id
+        self.kind = kind
+        self.t_submit = t_submit
+        self._fut: concurrent.futures.Future = concurrent.futures.Future()
+
+    # caller side
+    def done(self) -> bool:
+        return self._fut.done()
+
+    def result(self, timeout: Optional[float] = None):
+        return self._fut.result(timeout)
+
+    def exception(self, timeout: Optional[float] = None):
+        return self._fut.exception(timeout)
+
+    def add_done_callback(self, fn):
+        self._fut.add_done_callback(lambda _: fn(self))
+
+    def __await__(self):
+        return asyncio.wrap_future(self._fut).__await__()
+
+    # dispatcher side
+    def set_result(self, entry):
+        self._fut.set_result(entry)
+
+    def set_exception(self, exc: BaseException):
+        self._fut.set_exception(exc)
+
+    def cancel(self) -> bool:
+        return self._fut.cancel()
+
+    def __repr__(self):
+        state = "done" if self.done() else "pending"
+        return (f"DetectionFuture({self.req_id!r}, tenant={self.tenant!r}, "
+                f"kind={self.kind}, {state})")
+
+
+Batch = Tuple[Bucket, List[PendingRequest]]
+
+
+class ServiceFrontend:
+    """The synchronous core every service entry point funnels through."""
+
+    def __init__(self, config: Optional[ServiceConfig] = None, *, clock=None):
+        self.config = config or ServiceConfig()
+        c = self.config
+        self.clock = clock or time.perf_counter
+        self.engine = BatchedLouvainEngine(
+            c.louvain, dense_max_nv=c.dense_max_nv,
+            dense_small_nv=c.dense_small_nv,
+            dense_min_density=c.dense_min_density, sub_batch=c.sub_batch)
+        self.admission = AdmissionController(
+            c.buckets, batch_size=c.batch_size, max_delay_s=c.max_delay_s,
+            max_pending_per_tenant=c.max_pending_per_tenant,
+            weights=dict(c.tenant_weights), clock=self.clock)
+        self.store = ResultStore(
+            dense_max_nv=c.dense_max_nv, dense_small_nv=c.dense_small_nv,
+            dense_min_density=c.dense_min_density,
+            max_entries=c.store_max_entries, ttl_s=c.store_ttl_s,
+            clock=self.clock)
+        self.metrics = ServiceMetrics()
+        # monotonic request ids: never reuses after a dispatch (the old
+        # n_detect + pending() scheme collided once requests were served)
+        self._seq = itertools.count()
+
+    # -- request entry points ---------------------------------------------
+    def submit_detect(self, graph_id: str, graph: Graph, *,
+                      tenant: str = DEFAULT_TENANT, priority: int = 0,
+                      deadline_s: Optional[float] = None,
+                      count_reject: bool = True,
+                      exempt_bound: bool = False) -> DetectionFuture:
+        """Queue a detection; returns a future resolving to the store
+        entry.  Raises ValueError when no bucket fits and
+        :class:`QueueFull` at the tenant's bound (counted per tenant
+        unless ``count_reject=False`` — the async await-until-slot path
+        retries, and a blocked-then-served request is not a rejection).
+        ``exempt_bound`` is for internal continuations that must not be
+        droppable (see :meth:`submit_update`'s rebucket path)."""
+        t0 = self.clock()
+        # advisory bound pre-check: the authoritative (locked) check is in
+        # admission.submit, but overload is exactly when rejections fire,
+        # and a rejected request should not pay the bucket repad first
+        if (not exempt_bound and self.admission.pending(tenant)
+                >= self.config.max_pending_per_tenant):
+            if count_reject:
+                self.metrics.reject(tenant)
+            raise QueueFull(
+                f"tenant {tenant!r} is at its pending bound "
+                f"({self.config.max_pending_per_tenant})")
+        padded, bucket = admit(graph, self.config.buckets)
+        fut = DetectionFuture(
+            f"d{next(self._seq)}-{graph_id}", tenant, graph_id, "detect", t0)
+        req = PendingRequest(
+            req_id=fut.req_id, tenant=tenant, graph_id=graph_id,
+            graph=padded, bucket=bucket, priority=priority, t_submit=t0,
+            deadline=None if deadline_s is None else t0 + float(deadline_s),
+            future=fut)
+        try:
+            self.admission.submit(req, exempt_bound=exempt_bound)
+        except QueueFull:
+            if count_reject:
+                self.metrics.reject(tenant)
+            raise
+        return fut
+
+    def submit_update(self, graph_id: str, updates, *,
+                      tenant: str = DEFAULT_TENANT) -> DetectionFuture:
+        """Apply an edge-update batch through the warm path, immediately.
+
+        Returns an already-resolved ``kind="update"`` future, or — when
+        the update overflows its bucket — the pending ``kind="detect"``
+        future of the re-bucketed request.  Raises KeyError for unknown
+        (or evicted/expired) graph ids.
+        """
+        t0 = self.clock()
+        entry = self.store.get(graph_id)
+        if entry is None:
+            raise KeyError(f"no stored partition for {graph_id!r}")
+        try:
+            new = self.store.apply_update(graph_id, updates)
+        except CapacityExceeded:
+            # rebuild the updated graph at full precision and re-detect.
+            # The old entry is already invalidated, so this continuation
+            # is exempt from the tenant queue bound: a QueueFull here
+            # would lose the graph's result with nothing queued to
+            # replace it.
+            g = _graph_with_updates(entry.graph, updates)
+            self.metrics.n_rebucketed += 1
+            return self.submit_detect(graph_id, g, tenant=tenant,
+                                      exempt_bound=True)
+        now = self.clock()
+        self.metrics.observe("update", now - t0, now, tenant=tenant)
+        self.metrics.edges_processed += float(live_edges(new.graph))
+        fut = DetectionFuture(
+            f"u{next(self._seq)}-{graph_id}", tenant, graph_id, "update", t0)
+        fut.set_result(new)
+        return fut
+
+    # -- dispatch ---------------------------------------------------------
+    def collect(self, *, force: bool = False) -> List[Batch]:
+        """Compose every ready bucket batch (weighted DRR across tenants);
+        loops until no bucket is ready, so a backlog drains in
+        batch-size-wide slices."""
+        batches: List[Batch] = []
+        while True:
+            got = 0
+            for bucket in self.admission.ready_buckets(self.clock(),
+                                                       force=force):
+                reqs = self.admission.compose(bucket)
+                if reqs:
+                    batches.append((bucket, reqs))
+                    got += len(reqs)
+            if not got:
+                break
+        return batches
+
+    def execute(self, batches: List[Batch]) -> int:
+        """Run composed batches through the engine, store results, resolve
+        futures.  An engine failure fails that batch's futures (counted)
+        and the remaining batches still run — the dispatcher survives."""
+        served = 0
+        for bucket, reqs in batches:
+            try:
+                results = self.engine.detect_batch([r.graph for r in reqs])
+            except Exception as e:
+                for r in reqs:
+                    self.metrics.fail(r.tenant)
+                    r.future.set_exception(e)
+                continue
+            now = self.clock()
+            for req, res in zip(reqs, results):
+                entry = self.store.put(
+                    req.graph_id, req.graph, res.C,
+                    n_communities=res.n_communities,
+                    n_disconnected=res.n_disconnected, q=res.q,
+                )
+                self.metrics.observe("detect", now - req.t_submit, now,
+                                     tenant=req.tenant)
+                self.metrics.edges_processed += float(live_edges(req.graph))
+                req.future.set_result(entry)
+                served += 1
+        return served
+
+    def dispatch(self, *, force: bool = False) -> int:
+        """Collect + execute every ready batch; returns served count."""
+        return self.execute(self.collect(force=force))
+
+    def drain(self) -> int:
+        """Flush every queue regardless of batch fill / deadlines."""
+        served = 0
+        while self.admission.pending():
+            served += self.dispatch(force=True)
+        return served
+
+    # -- introspection -----------------------------------------------------
+    def result(self, graph_id: str):
+        return self.store.get(graph_id)
+
+    def pending(self, tenant: Optional[str] = None) -> int:
+        return self.admission.pending(tenant)
+
+
+class AsyncCommunityService:
+    """Asyncio front end: dispatcher task + executor-offloaded compute.
+
+    Usage::
+
+        async with AsyncCommunityService(ServiceConfig(...)) as svc:
+            fut = await svc.submit_detect("g", graph, tenant="alice",
+                                          priority=1, deadline_s=0.1)
+            entry = await fut
+
+    Backpressure: with ``block=True`` (default) a submission against a
+    full tenant queue awaits a freed slot; with ``block=False`` it raises
+    :class:`QueueFull` immediately (the rejection is counted per tenant).
+    The dispatcher wakes on every submission and on a poll tick
+    (``poll_s``, default ``max_delay_s / 4``) that bounds how late a
+    deadline/max-delay flush can fire.
+    """
+
+    def __init__(self, config: Optional[ServiceConfig] = None, *,
+                 clock=None, poll_s: Optional[float] = None):
+        self.frontend = ServiceFrontend(config, clock=clock)
+        cfg = self.frontend.config
+        self._poll_s = (poll_s if poll_s is not None
+                        else max(cfg.max_delay_s / 4, 1e-3))
+        self._compute = concurrent.futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="community-svc")
+        self._work: Optional[asyncio.Event] = None
+        self._task: Optional[asyncio.Task] = None
+        self._running = False
+        self._inflight = 0
+        self._slot_waiters: List[asyncio.Future] = []
+
+    # -- delegation --------------------------------------------------------
+    @property
+    def config(self) -> ServiceConfig:
+        return self.frontend.config
+
+    @property
+    def engine(self) -> BatchedLouvainEngine:
+        return self.frontend.engine
+
+    @property
+    def store(self) -> ResultStore:
+        return self.frontend.store
+
+    @property
+    def metrics(self) -> ServiceMetrics:
+        return self.frontend.metrics
+
+    def result(self, graph_id: str):
+        return self.frontend.result(graph_id)
+
+    def pending(self, tenant: Optional[str] = None) -> int:
+        return self.frontend.pending(tenant)
+
+    # -- lifecycle ---------------------------------------------------------
+    async def start(self) -> "AsyncCommunityService":
+        if self._task is None:
+            loop = asyncio.get_running_loop()
+            self._work = asyncio.Event()
+            self._running = True
+            self._task = loop.create_task(self._dispatch_loop())
+        return self
+
+    async def __aenter__(self) -> "AsyncCommunityService":
+        return await self.start()
+
+    async def __aexit__(self, *exc):
+        await self.close(drain=all(e is None for e in exc))
+
+    async def close(self, *, drain: bool = True):
+        if self._task is not None:
+            if drain:
+                await self.drain()
+            self._running = False
+            self._work.set()
+            await self._task
+            self._task = None
+        # nothing may be left awaiting a dispatcher that no longer runs:
+        # cancel every future still queued (empty set after a drain)
+        for req in self.frontend.admission.evict_all():
+            if req.future is not None:
+                req.future.cancel()
+        for w in self._slot_waiters:
+            if not w.done():
+                w.cancel()
+        self._slot_waiters.clear()
+        self._compute.shutdown(wait=True)
+
+    # -- dispatcher --------------------------------------------------------
+    async def _execute(self, batches) -> int:
+        loop = asyncio.get_running_loop()
+        self._inflight += 1
+        try:
+            return await loop.run_in_executor(
+                self._compute, self.frontend.execute, batches)
+        finally:
+            self._inflight -= 1
+            self._wake_slot_waiters()
+
+    async def _dispatch_loop(self):
+        while self._running:
+            batches = self.frontend.collect()
+            if batches:
+                await self._execute(batches)
+                continue
+            try:
+                await asyncio.wait_for(self._work.wait(),
+                                       timeout=self._poll_s)
+            except asyncio.TimeoutError:
+                pass
+            self._work.clear()
+
+    def _wake_slot_waiters(self):
+        waiters, self._slot_waiters = self._slot_waiters, []
+        for w in waiters:
+            if not w.done():
+                w.set_result(None)
+
+    # -- request entry points ----------------------------------------------
+    async def submit_detect(self, graph_id: str, graph: Graph, *,
+                            tenant: str = DEFAULT_TENANT, priority: int = 0,
+                            deadline_s: Optional[float] = None,
+                            block: bool = True) -> DetectionFuture:
+        loop = asyncio.get_running_loop()
+        while True:
+            try:
+                fut = self.frontend.submit_detect(
+                    graph_id, graph, tenant=tenant, priority=priority,
+                    deadline_s=deadline_s, count_reject=not block)
+            except QueueFull:
+                if not block:
+                    raise
+                waiter = loop.create_future()
+                self._slot_waiters.append(waiter)
+                self._work.set()            # nudge the dispatcher
+                await waiter
+                continue
+            self._work.set()
+            return fut
+
+    async def submit_update(self, graph_id: str, updates, *,
+                            tenant: str = DEFAULT_TENANT) -> DetectionFuture:
+        loop = asyncio.get_running_loop()
+        fut = await loop.run_in_executor(
+            self._compute,
+            partial(self.frontend.submit_update, graph_id, updates,
+                    tenant=tenant))
+        self._work.set()     # a rebucketed update enqueued a detect
+        return fut
+
+    async def drain(self) -> int:
+        """Force-flush everything queued and wait for in-flight batches."""
+        served = 0
+        while True:
+            batches = self.frontend.collect(force=True)
+            if batches:
+                served += await self._execute(batches)
+            elif self._inflight or self.frontend.pending():
+                await asyncio.sleep(self._poll_s / 4)
+            else:
+                break
+        return served
+
+
+def _graph_with_updates(g: Graph, updates) -> Graph:
+    """Rebuild a plain (unpadded-capacity) graph with an edge batch merged
+    in — the re-bucketing fallback when updates overflow a bucket."""
+    u, v, w = (np.asarray(x) for x in updates)
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    ww = np.asarray(g.w)
+    mask = src < g.n_cap
+    loops = u == v
+    new_src = np.concatenate(
+        [src[mask], u[~loops], v[~loops], u[loops]]).astype(np.int32)
+    new_dst = np.concatenate(
+        [dst[mask], v[~loops], u[~loops], u[loops]]).astype(np.int32)
+    new_w = np.concatenate(
+        [ww[mask], w[~loops], w[~loops], w[loops]]).astype(np.float32)
+    return from_coo(int(g.n_nodes), new_src, new_dst, new_w)

@@ -1,0 +1,107 @@
+"""Service metrics: aggregate latency/throughput plus per-tenant
+served/rejected breakdowns (the numbers admission fairness is judged by).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+
+def percentile(xs, p: float) -> float:
+    if not len(xs):
+        return float("nan")
+    return float(np.percentile(np.asarray(xs), p))
+
+
+@dataclasses.dataclass
+class TenantMetrics:
+    n_detect: int = 0
+    n_update: int = 0
+    n_rejected: int = 0
+    n_failed: int = 0
+    latency_s: list = dataclasses.field(default_factory=list)
+
+    @property
+    def served(self) -> int:
+        return self.n_detect + self.n_update
+
+    def report(self) -> dict:
+        return dict(
+            served=self.served,
+            n_detect=self.n_detect,
+            n_update=self.n_update,
+            n_rejected=self.n_rejected,
+            n_failed=self.n_failed,
+            p50_ms=percentile(self.latency_s, 50) * 1e3,
+            p99_ms=percentile(self.latency_s, 99) * 1e3,
+        )
+
+
+@dataclasses.dataclass
+class ServiceMetrics:
+    detect_latency_s: list = dataclasses.field(default_factory=list)
+    update_latency_s: list = dataclasses.field(default_factory=list)
+    n_detect: int = 0
+    n_update: int = 0
+    n_rebucketed: int = 0
+    n_rejected: int = 0
+    n_failed: int = 0
+    edges_processed: float = 0.0     # directed edges through the engine
+    t_first: Optional[float] = None
+    t_last: Optional[float] = None
+    tenants: Dict[str, TenantMetrics] = dataclasses.field(
+        default_factory=dict)
+
+    def reset(self):
+        self.__init__()
+
+    def tenant(self, name: str) -> TenantMetrics:
+        return self.tenants.setdefault(name, TenantMetrics())
+
+    def observe(self, kind: str, latency_s: float, now: float,
+                tenant: str = "default"):
+        (self.detect_latency_s if kind == "detect"
+         else self.update_latency_s).append(latency_s)
+        tm = self.tenant(tenant)
+        if kind == "detect":
+            self.n_detect += 1
+            tm.n_detect += 1
+        else:
+            self.n_update += 1
+            tm.n_update += 1
+        tm.latency_s.append(latency_s)
+        self.t_first = now if self.t_first is None else self.t_first
+        self.t_last = now
+
+    def reject(self, tenant: str = "default"):
+        self.n_rejected += 1
+        self.tenant(tenant).n_rejected += 1
+
+    def fail(self, tenant: str = "default"):
+        self.n_failed += 1
+        self.tenant(tenant).n_failed += 1
+
+    def report(self) -> dict:
+        lat = self.detect_latency_s + self.update_latency_s
+        span = ((self.t_last - self.t_first)
+                if (self.t_first is not None and self.t_last > self.t_first)
+                else float("nan"))
+        served = self.n_detect + self.n_update
+        return dict(
+            n_detect=self.n_detect,
+            n_update=self.n_update,
+            n_rebucketed=self.n_rebucketed,
+            n_rejected=self.n_rejected,
+            n_failed=self.n_failed,
+            p50_ms=percentile(lat, 50) * 1e3,
+            p99_ms=percentile(lat, 99) * 1e3,
+            p50_detect_ms=percentile(self.detect_latency_s, 50) * 1e3,
+            p50_update_ms=percentile(self.update_latency_s, 50) * 1e3,
+            graphs_per_s=served / span if span == span else float("nan"),
+            edges_per_s=(self.edges_processed / span
+                         if span == span else float("nan")),
+            tenants={name: tm.report()
+                     for name, tm in sorted(self.tenants.items())},
+        )

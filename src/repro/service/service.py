@@ -1,177 +1,124 @@
-"""Community-detection service facade.
+"""Synchronous adapter over the futures front end.
 
-Synchronous pump model: callers ``submit_detect`` / ``submit_update`` and
-then ``pump()`` (or ``drain()``).  Detect requests flow
+``CommunityService`` keeps PR 1's pump-model API (``submit_detect`` ->
+req id, ``submit_update`` -> bool, ``pump()``/``drain()``) but is now a
+thin facade over :class:`repro.service.frontend.ServiceFrontend` — the
+same admission control, DRR fairness, monotonic request ids, store
+eviction, and metrics the async front end uses.  One code path, no
+behavior fork.
 
-    submit -> bucket admission -> per-bucket queue -> full-batch/deadline
-    dispatch -> batched engine -> result store
+Migration (sync pump -> futures):
 
-while edge-update requests for graphs already in the store bypass batching
-entirely and run the single-graph delta-screening warm path (latency beats
-throughput for updates: the warm pass converges in a handful of sweeps).
-An update that overflows its bucket re-enters the detect path with the
-updated edge set (re-bucketing).
+    # before                              # after
+    svc.submit_detect(gid, g)             fut = await svc.submit_detect(
+    svc.pump(); svc.drain()                   gid, g, tenant="alice")
+    entry = svc.result(gid)               entry = await fut
 
-Metrics record per-request wall latency (submit -> result stored) and
-aggregate throughput, the numbers the launch driver and benchmarks report.
+New code should use :class:`repro.service.frontend.AsyncCommunityService`;
+this adapter exists so embedders without an event loop (and the existing
+tests/benchmarks) keep a one-thread, caller-pumped service.  Note the
+adapter inherits the front end's per-tenant queue bound: callers that
+submit more than ``max_pending_per_tenant`` requests without pumping now
+see :class:`repro.service.admission.QueueFull` instead of unbounded
+memory growth.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Dict, Optional, Sequence
-
-import numpy as np
+from typing import Optional, Sequence
 
 from repro.core import LouvainConfig
-from repro.graph.container import Graph, from_coo
-from repro.service.batcher import RequestBatcher
+from repro.graph.container import Graph
+from repro.service.admission import (
+    DEFAULT_TENANT, QueueFull, ServiceConfig,
+)
 from repro.service.buckets import Bucket, DEFAULT_BUCKETS
-from repro.service.engine import BatchedLouvainEngine
-from repro.service.store import CapacityExceeded, ResultStore
-
-
-def percentile(xs, p: float) -> float:
-    if not len(xs):
-        return float("nan")
-    return float(np.percentile(np.asarray(xs), p))
-
-
-@dataclasses.dataclass
-class ServiceMetrics:
-    detect_latency_s: list = dataclasses.field(default_factory=list)
-    update_latency_s: list = dataclasses.field(default_factory=list)
-    n_detect: int = 0
-    n_update: int = 0
-    n_rebucketed: int = 0
-    edges_processed: float = 0.0     # directed edges through the engine
-    t_first: Optional[float] = None
-    t_last: Optional[float] = None
-
-    def observe(self, kind: str, latency_s: float, now: float):
-        (self.detect_latency_s if kind == "detect"
-         else self.update_latency_s).append(latency_s)
-        if kind == "detect":
-            self.n_detect += 1
-        else:
-            self.n_update += 1
-        self.t_first = now if self.t_first is None else self.t_first
-        self.t_last = now
-
-    def report(self) -> dict:
-        lat = self.detect_latency_s + self.update_latency_s
-        span = ((self.t_last - self.t_first)
-                if (self.t_first is not None and self.t_last > self.t_first)
-                else float("nan"))
-        served = self.n_detect + self.n_update
-        return dict(
-            n_detect=self.n_detect,
-            n_update=self.n_update,
-            n_rebucketed=self.n_rebucketed,
-            p50_ms=percentile(lat, 50) * 1e3,
-            p99_ms=percentile(lat, 99) * 1e3,
-            p50_detect_ms=percentile(self.detect_latency_s, 50) * 1e3,
-            p50_update_ms=percentile(self.update_latency_s, 50) * 1e3,
-            graphs_per_s=served / span if span == span else float("nan"),
-            edges_per_s=(self.edges_processed / span
-                         if span == span else float("nan")),
-        )
+from repro.service.frontend import DetectionFuture, ServiceFrontend
+from repro.service.metrics import ServiceMetrics, percentile  # re-export
 
 
 class CommunityService:
+    """Thin sync facade: every call funnels into ServiceFrontend."""
+
     def __init__(self, cfg: LouvainConfig = LouvainConfig(), *,
+                 config: Optional[ServiceConfig] = None,
                  buckets: Sequence[Bucket] = DEFAULT_BUCKETS,
                  batch_size: int = 32, max_delay_s: float = 0.05,
                  sub_batch: Optional[int] = None,
                  dense_max_nv: int = 1025, clock=None):
-        self.clock = clock or time.perf_counter
-        self.engine = BatchedLouvainEngine(
-            cfg, dense_max_nv=dense_max_nv, sub_batch=sub_batch)
-        self.batcher = RequestBatcher(
-            buckets, batch_size=batch_size, max_delay_s=max_delay_s,
-            clock=self.clock)
-        self.store = ResultStore(dense_max_nv=dense_max_nv)
-        self.metrics = ServiceMetrics()
-        self._req_graph: Dict[str, str] = {}     # req_id -> graph_id
+        """Either pass a full ``config=ServiceConfig(...)`` or the legacy
+        kwargs (which build one); ``config`` wins when both are given."""
+        if config is None:
+            config = ServiceConfig(
+                louvain=cfg, buckets=tuple(buckets), batch_size=batch_size,
+                max_delay_s=max_delay_s, sub_batch=sub_batch,
+                dense_max_nv=dense_max_nv)
+        self.frontend = ServiceFrontend(config, clock=clock)
+
+    # -- delegation --------------------------------------------------------
+    @property
+    def config(self) -> ServiceConfig:
+        return self.frontend.config
+
+    @property
+    def engine(self):
+        return self.frontend.engine
+
+    @property
+    def store(self):
+        return self.frontend.store
+
+    @property
+    def metrics(self) -> ServiceMetrics:
+        return self.frontend.metrics
+
+    @property
+    def admission(self):
+        return self.frontend.admission
+
+    @property
+    def clock(self):
+        return self.frontend.clock
 
     # -- request entry points ---------------------------------------------
-    def submit_detect(self, graph_id: str, graph: Graph) -> str:
-        """Queue a detection request; returns the request id."""
-        req_id = f"d{self.metrics.n_detect + self.batcher.pending()}-{graph_id}"
-        req = self.batcher.submit(req_id, graph)
-        self._req_graph[req_id] = graph_id
-        return req_id
+    def submit_detect(self, graph_id: str, graph: Graph, *,
+                      tenant: str = DEFAULT_TENANT, priority: int = 0,
+                      deadline_s: Optional[float] = None) -> str:
+        """Queue a detection request; returns the (monotonic) request id.
+        Raises :class:`QueueFull` at the tenant's queue bound."""
+        fut = self.frontend.submit_detect(
+            graph_id, graph, tenant=tenant, priority=priority,
+            deadline_s=deadline_s)
+        return fut.req_id
 
-    def submit_update(self, graph_id: str, updates) -> bool:
+    def submit_update(self, graph_id: str, updates, *,
+                      tenant: str = DEFAULT_TENANT) -> bool:
         """Apply an edge-update batch through the warm path, immediately.
 
         Returns True if served warm; False if the entry had to be
         re-bucketed (a fresh detect request was queued with the updated
         edge set).  Raises KeyError for unknown graph ids.
         """
-        t0 = self.clock()
-        entry = self.store.get(graph_id)
-        if entry is None:
-            raise KeyError(f"no stored partition for {graph_id!r}")
-        try:
-            new = self.store.apply_update(graph_id, updates)
-        except CapacityExceeded:
-            # rebuild the updated graph at full precision and re-detect
-            g = _graph_with_updates(entry.graph, updates)
-            self.submit_detect(graph_id, g)
-            self.metrics.n_rebucketed += 1
-            return False
-        now = self.clock()
-        self.metrics.observe("update", now - t0, now)
-        self.metrics.edges_processed += float(
-            np.asarray(new.graph.src < new.graph.n_cap).sum())
-        return True
+        return self.frontend.submit_update(
+            graph_id, updates, tenant=tenant).kind == "update"
+
+    def detect(self, graph_id: str, graph: Graph, *,
+               tenant: str = DEFAULT_TENANT) -> DetectionFuture:
+        """Futures variant of ``submit_detect`` for sync callers that want
+        the handle; pump/drain still drives dispatch."""
+        return self.frontend.submit_detect(graph_id, graph, tenant=tenant)
 
     # -- dispatch ---------------------------------------------------------
     def pump(self, *, force: bool = False) -> int:
         """Dispatch every ready batch; returns the number of served
         detect requests."""
-        served = 0
-        for bucket, reqs in self.batcher.ready(force=force):
-            results = self.engine.detect_batch([r.graph for r in reqs])
-            now = self.clock()
-            for req, res in zip(reqs, results):
-                graph_id = self._req_graph.pop(req.req_id, req.req_id)
-                self.store.put(
-                    graph_id, req.graph, res.C,
-                    n_communities=res.n_communities,
-                    n_disconnected=res.n_disconnected, q=res.q,
-                )
-                self.metrics.observe("detect", now - req.t_submit, now)
-                self.metrics.edges_processed += float(
-                    np.asarray(req.graph.src < req.graph.n_cap).sum())
-                served += 1
-        return served
+        return self.frontend.dispatch(force=force)
 
     def drain(self) -> int:
         """Flush every queue regardless of batch fill / deadlines."""
-        served = 0
-        while self.batcher.pending():
-            served += self.pump(force=True)
-        return served
+        return self.frontend.drain()
 
     def result(self, graph_id: str):
-        return self.store.get(graph_id)
+        return self.frontend.result(graph_id)
 
-
-def _graph_with_updates(g: Graph, updates) -> Graph:
-    """Rebuild a plain (unpadded-capacity) graph with an edge batch merged
-    in — the re-bucketing fallback when updates overflow a bucket."""
-    u, v, w = (np.asarray(x) for x in updates)
-    src = np.asarray(g.src)
-    dst = np.asarray(g.dst)
-    ww = np.asarray(g.w)
-    mask = src < g.n_cap
-    loops = u == v
-    new_src = np.concatenate(
-        [src[mask], u[~loops], v[~loops], u[loops]]).astype(np.int32)
-    new_dst = np.concatenate(
-        [dst[mask], v[~loops], u[~loops], u[loops]]).astype(np.int32)
-    new_w = np.concatenate(
-        [ww[mask], w[~loops], w[~loops], w[loops]]).astype(np.float32)
-    return from_coo(int(g.n_nodes), new_src, new_dst, new_w)
+    def pending(self, tenant: Optional[str] = None) -> int:
+        return self.frontend.pending(tenant)

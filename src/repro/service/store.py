@@ -1,5 +1,5 @@
 """Incremental result store: partitions + stats per graph, with versioned
-invalidation and a delta-screening update path.
+invalidation, a delta-screening update path, and LRU/TTL eviction.
 
 The store keeps, per graph id, the bucket-padded graph, its current dense
 membership, detection stats, and a monotonically increasing version.  Edge
@@ -9,10 +9,24 @@ which perturbs only the neighborhood of the changed edges and re-runs the
 split so the no-disconnected-communities guarantee survives updates.  If an
 update overflows the bucket's edge capacity the entry is invalidated and
 the caller falls back to a fresh detect request (re-bucketing).
+
+Eviction (the store used to be unbounded — a ROADMAP item):
+
+* ``max_entries`` caps residency with LRU order — ``get``/``apply_update``
+  refresh recency, ``put`` evicts the least-recently-used entry past the
+  cap (``n_evicted``).
+* ``ttl_s`` expires entries at read time relative to their last ``put``
+  (``n_expired``).
+
+Version counters intentionally survive eviction (they are one int per
+graph id ever seen) so a re-detected graph keeps monotone versions.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
+import time
+from collections import OrderedDict
 from typing import Dict, Optional
 
 import jax.numpy as jnp
@@ -22,7 +36,7 @@ from repro.core import modularity
 from repro.core.detect import disconnected_communities
 from repro.core.dynamic import update_communities
 from repro.graph.container import Graph
-from repro.service.buckets import Bucket, bucket_of
+from repro.service.buckets import Bucket, bucket_of, choose_scan
 
 
 @dataclasses.dataclass
@@ -34,6 +48,7 @@ class StoreEntry:
     n_communities: int
     n_disconnected: int
     q: float
+    t_stored: float = 0.0          # clock time of the last put (TTL basis)
 
 
 class CapacityExceeded(Exception):
@@ -41,37 +56,72 @@ class CapacityExceeded(Exception):
 
 
 class ResultStore:
-    def __init__(self, *, dense_max_nv: int = 1025):
-        self._entries: Dict[str, StoreEntry] = {}
-        # versions survive invalidation so they stay monotone per graph id
-        # across the rebucket path (invalidate -> fresh detect -> put)
+    def __init__(self, *, dense_max_nv: int = 1025,
+                 dense_small_nv: int = 129, dense_min_density: float = 0.02,
+                 max_entries: Optional[int] = None,
+                 ttl_s: Optional[float] = None, clock=None):
+        if max_entries is not None and max_entries < 1:
+            raise ValueError(f"max_entries must be >= 1, got {max_entries}")
+        self._entries: "OrderedDict[str, StoreEntry]" = OrderedDict()
+        # versions survive invalidation AND eviction so they stay monotone
+        # per graph id across rebucket/evict -> fresh detect -> put
         self._versions: Dict[str, int] = {}
+        # LRU made get() a writer (move_to_end / TTL expiry), and the async
+        # front end reads results on the event loop while the compute
+        # thread puts — every OrderedDict mutation takes this lock
+        self._lock = threading.RLock()
         self.dense_max_nv = dense_max_nv
+        self.dense_small_nv = dense_small_nv
+        self.dense_min_density = dense_min_density
+        self.max_entries = max_entries
+        self.ttl_s = ttl_s
+        self.clock = clock or time.perf_counter
         self.n_warm_updates = 0
         self.n_invalidations = 0
+        self.n_evicted = 0
+        self.n_expired = 0
 
     # -- basic CRUD -------------------------------------------------------
     def put(self, graph_id: str, graph: Graph, C: np.ndarray, *,
             n_communities: int, n_disconnected: int, q: float) -> StoreEntry:
-        version = self._versions.get(graph_id, 0) + 1
-        self._versions[graph_id] = version
-        entry = StoreEntry(
-            graph=graph, C=np.asarray(C), bucket=bucket_of(graph),
-            version=version,
-            n_communities=n_communities, n_disconnected=n_disconnected, q=q,
-        )
-        self._entries[graph_id] = entry
-        return entry
+        with self._lock:
+            version = self._versions.get(graph_id, 0) + 1
+            self._versions[graph_id] = version
+            entry = StoreEntry(
+                graph=graph, C=np.asarray(C), bucket=bucket_of(graph),
+                version=version,
+                n_communities=n_communities, n_disconnected=n_disconnected,
+                q=q, t_stored=self.clock(),
+            )
+            self._entries[graph_id] = entry
+            self._entries.move_to_end(graph_id)
+            if self.max_entries is not None:
+                while len(self._entries) > self.max_entries:
+                    self._entries.popitem(last=False)
+                    self.n_evicted += 1
+            return entry
 
     def get(self, graph_id: str) -> Optional[StoreEntry]:
-        return self._entries.get(graph_id)
+        with self._lock:
+            entry = self._entries.get(graph_id)
+            if entry is None:
+                return None
+            if (self.ttl_s is not None
+                    and self.clock() - entry.t_stored > self.ttl_s):
+                del self._entries[graph_id]
+                self.n_expired += 1
+                return None
+            self._entries.move_to_end(graph_id)
+            return entry
 
     def invalidate(self, graph_id: str) -> bool:
-        self.n_invalidations += 1
-        return self._entries.pop(graph_id, None) is not None
+        with self._lock:
+            self.n_invalidations += 1
+            return self._entries.pop(graph_id, None) is not None
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     # -- incremental update path ------------------------------------------
     def apply_update(self, graph_id: str, updates, *, tau: float = 1e-3,
@@ -81,11 +131,11 @@ class ResultStore:
         ``updates``: (u, v, w) undirected edge **additions** (parallel
         entries are equivalent to summed weights for every consumer;
         true deletions/weight-deltas are not yet supported — see ROADMAP).
-        Returns the refreshed entry; raises KeyError for unknown ids,
-        ValueError for malformed batches (entry untouched), and
-        :class:`CapacityExceeded` when the bucket has no room (the entry
-        is invalidated — the caller should resubmit the updated graph as
-        a fresh detect request).
+        Returns the refreshed entry; raises KeyError for unknown (or
+        evicted/expired) ids, ValueError for malformed batches (entry
+        untouched), and :class:`CapacityExceeded` when the bucket has no
+        room (the entry is invalidated — the caller should resubmit the
+        updated graph as a fresh detect request).
         """
         u, v, w = (np.asarray(x) for x in updates)
         if not (u.shape == v.shape == w.shape and u.ndim == 1):
@@ -98,10 +148,14 @@ class ResultStore:
             raise ValueError(
                 "update weights must be > 0 (additions only; deletions / "
                 "weight-deltas are not supported — see ROADMAP)")
-        entry = self._entries.get(graph_id)
+        entry = self.get(graph_id)       # TTL-aware; refreshes recency
         if entry is None:
             raise KeyError(graph_id)
-        scan = "dense" if entry.graph.nv <= self.dense_max_nv else "sort"
+        scan = choose_scan(
+            entry.graph.nv, entry.graph.m_cap,
+            dense_max_nv=self.dense_max_nv,
+            dense_small_nv=self.dense_small_nv,
+            dense_min_density=self.dense_min_density)
         try:
             g_new, C_new, stats = update_communities(
                 entry.graph, jnp.asarray(entry.C), (u, v, w),

@@ -1,12 +1,15 @@
-"""Service subsystem: buckets, engine exactness, batcher, store, end-to-end."""
+"""Service subsystem: buckets, scan crossover, engine exactness, admission
+(bounds, DRR fairness, priorities, deadlines), store eviction + warm
+updates, and the sync-adapter end-to-end path."""
 import numpy as np
 import pytest
 
 from repro.core import LouvainConfig, louvain
 from repro.graph import sbm_graph
 from repro.service import (
-    Bucket, BatchedLouvainEngine, CommunityService, RequestBatcher,
-    ResultStore, choose_bucket,
+    AdmissionController, BatchedLouvainEngine, Bucket, CommunityService,
+    PendingRequest, QueueFull, ResultStore, ServiceConfig, ServiceFrontend,
+    choose_bucket, choose_scan,
 )
 from repro.service.buckets import admit
 from repro.service.store import CapacityExceeded
@@ -20,8 +23,16 @@ def _ego(seed, n=30):
                      seed=seed)[0]
 
 
+def _req(tenant, i, g=None, priority=0, deadline=None, t=0.0):
+    padded, bucket = admit(g if g is not None else _ego(1), BUCKETS)
+    return PendingRequest(
+        req_id=f"{tenant}-{i}", tenant=tenant, graph_id=f"{tenant}-{i}",
+        graph=padded, bucket=bucket, priority=priority, t_submit=t,
+        deadline=deadline, future=None)
+
+
 # ---------------------------------------------------------------------------
-# buckets
+# buckets + scan crossover
 # ---------------------------------------------------------------------------
 
 def test_bucket_choice_smallest_fit():
@@ -39,6 +50,15 @@ def test_admit_repads_and_preserves_edges():
     assert int(padded.n_nodes) == int(g.n_nodes)
     assert float(padded.total_weight_2m()) == float(g.total_weight_2m())
     assert int(padded.num_edges()) == int(g.num_edges())
+
+
+def test_choose_scan_density_crossover():
+    assert choose_scan(65, 512) == "dense"       # small: always dense
+    assert choose_scan(257, 2048) == "dense"     # dense enough (0.031)
+    assert choose_scan(257, 1024) == "sort"      # sparse mid (0.016)
+    assert choose_scan(1025, 16384) == "sort"    # sparse large (0.016)
+    assert choose_scan(1025, 65536) == "dense"   # dense large (0.062)
+    assert choose_scan(2049, 10**6) == "sort"    # above dense_max_nv
 
 
 # ---------------------------------------------------------------------------
@@ -67,6 +87,20 @@ def test_engine_matches_sequential_louvain_exactly():
         assert r.q == r.q                # modularity computed
 
 
+def test_engine_sortscan_bucket_matches_louvain():
+    # (256, 1024): density 0.016 < 0.02 -> the crossover picks sortscan
+    b = Bucket(256, 1024)
+    g = sbm_graph(n_nodes=96, n_blocks=3, p_in=0.08, p_out=0.01, seed=5)[0]
+    padded, bb = admit(g, [b])
+    assert bb == b
+    engine = BatchedLouvainEngine(CFG)
+    assert engine.scan_for(b) == "sort"
+    r = engine.detect_one(padded)
+    C, stats = louvain(padded, CFG)
+    assert np.array_equal(r.C, np.asarray(C))
+    assert r.n_communities == int(stats["n_communities"])
+
+
 def test_engine_compile_cache_reuse():
     graphs = [admit(_ego(s), BUCKETS)[0] for s in range(3)]
     engine = BatchedLouvainEngine(CFG)
@@ -77,32 +111,112 @@ def test_engine_compile_cache_reuse():
 
 
 # ---------------------------------------------------------------------------
-# batcher
+# admission: batching, deadlines, bounds, fairness
 # ---------------------------------------------------------------------------
 
-def test_batcher_full_batch_and_deadline_flush():
+def test_admission_full_batch_and_deadline_flush():
     t = [0.0]
-    batcher = RequestBatcher(BUCKETS, batch_size=3, max_delay_s=1.0,
-                             clock=lambda: t[0])
+    adm = AdmissionController(BUCKETS, batch_size=3, max_delay_s=1.0,
+                              clock=lambda: t[0])
     g = _ego(1)
-    batcher.submit("a", g)
-    batcher.submit("b", g)
-    assert list(batcher.ready()) == []          # not full, not stale
+    adm.submit(_req("a", 0, g))
+    adm.submit(_req("a", 1, g))
+    assert adm.ready_buckets(t[0]) == []        # not full, not stale
     t[0] = 0.5
-    assert list(batcher.ready()) == []
-    batcher.submit("c", g)                      # full batch -> ready now
-    [(bucket, reqs)] = list(batcher.ready())
-    assert [r.req_id for r in reqs] == ["a", "b", "c"]
-    # deadline flush of a partial batch
-    batcher.submit("d", g)
+    assert adm.ready_buckets(t[0]) == []
+    adm.submit(_req("a", 2, g))                 # full batch -> ready now
+    [bucket] = adm.ready_buckets(t[0])
+    assert [r.req_id for r in adm.compose(bucket)] == ["a-0", "a-1", "a-2"]
+    # max_delay flush of a partial batch
+    adm.submit(_req("a", 3, g, t=0.5))
     t[0] = 2.0
-    [(bucket, reqs)] = list(batcher.ready())
-    assert [r.req_id for r in reqs] == ["d"]
-    assert batcher.pending() == 0
+    [bucket] = adm.ready_buckets(t[0])
+    assert [r.req_id for r in adm.compose(bucket)] == ["a-3"]
+    # an explicit deadline flushes before max_delay would
+    adm.submit(_req("a", 4, g, t=2.0, deadline=2.1))
+    assert adm.ready_buckets(2.05) == []
+    [bucket] = adm.ready_buckets(2.15)
+    assert [r.req_id for r in adm.compose(bucket)] == ["a-4"]
+    assert adm.pending() == 0
+
+
+def test_admission_queue_bound_per_tenant():
+    adm = AdmissionController(BUCKETS, batch_size=4,
+                              max_pending_per_tenant=2)
+    g = _ego(1)
+    adm.submit(_req("a", 0, g))
+    adm.submit(_req("a", 1, g))
+    with pytest.raises(QueueFull):
+        adm.submit(_req("a", 2, g))
+    adm.submit(_req("b", 0, g))                 # other tenants unaffected
+    assert adm.pending("a") == 2 and adm.pending("b") == 1
+
+
+def test_admission_drr_fairness_and_weights():
+    g = _ego(1)
+    adm = AdmissionController(BUCKETS, batch_size=8, max_delay_s=0.0,
+                              max_pending_per_tenant=64)
+    for i in range(30):
+        adm.submit(_req("heavy", i, g))
+    for i in range(4):
+        adm.submit(_req("light", i, g))
+    [bucket] = adm.ready_buckets(0.0, force=True)
+    batch = adm.compose(bucket)
+    counts = {t: sum(r.tenant == t for r in batch) for t in
+              ("heavy", "light")}
+    assert counts == {"heavy": 4, "light": 4}   # equal weights: 50/50
+
+    adm2 = AdmissionController(BUCKETS, batch_size=8, max_delay_s=0.0,
+                               weights={"heavy": 3.0})
+    for i in range(30):
+        adm2.submit(_req("heavy", i, g))
+    for i in range(4):
+        adm2.submit(_req("light", i, g))
+    [bucket] = adm2.ready_buckets(0.0, force=True)
+    batch = adm2.compose(bucket)
+    counts = {t: sum(r.tenant == t for r in batch) for t in
+              ("heavy", "light")}
+    assert counts == {"heavy": 6, "light": 2}   # 3:1 weighted DRR
+
+
+def test_admission_prunes_idle_tenants():
+    # bookkeeping must not grow with every tenant that EVER submitted
+    adm = AdmissionController(BUCKETS, batch_size=4)
+    g = _ego(1)
+    adm.submit(_req("a", 0, g))
+    adm.submit(_req("b", 0, g))
+    [bucket] = adm.ready_buckets(0.0, force=True)
+    assert len(adm.compose(bucket)) == 2
+    assert adm.pending() == 0
+    assert adm.tenants() == []              # idle tenants pruned
+    adm.submit(_req("a", 1, g))             # returning tenant starts fresh
+    assert adm.tenants() == ["a"] and adm.pending("a") == 1
+
+
+def test_admission_priority_within_tenant():
+    adm = AdmissionController(BUCKETS, batch_size=4)
+    g = _ego(1)
+    adm.submit(_req("a", 0, g, priority=0))
+    adm.submit(_req("a", 1, g, priority=5))
+    adm.submit(_req("a", 2, g, priority=5))
+    [bucket] = adm.ready_buckets(0.0, force=True)
+    order = [r.req_id for r in adm.compose(bucket)]
+    assert order == ["a-1", "a-2", "a-0"]       # priority, FIFO within
+
+
+def test_service_config_validation():
+    with pytest.raises(ValueError):
+        ServiceConfig(batch_size=0)
+    with pytest.raises(ValueError):
+        ServiceConfig(max_pending_per_tenant=0)
+    with pytest.raises(ValueError):
+        ServiceConfig(tenant_weights=(("a", 0.0),))
+    cfg = ServiceConfig(buckets=(Bucket(256, 2048), Bucket(64, 512)))
+    assert cfg.buckets == (Bucket(64, 512), Bucket(256, 2048))  # sorted
 
 
 # ---------------------------------------------------------------------------
-# store + warm update path
+# store: warm update path + eviction
 # ---------------------------------------------------------------------------
 
 def test_store_update_routes_through_warm_path():
@@ -141,8 +255,36 @@ def test_store_capacity_overflow_invalidates():
     assert store.get("g") is None               # invalidated
 
 
+def test_store_lru_eviction_and_ttl():
+    t = [0.0]
+    store = ResultStore(max_entries=2, ttl_s=10.0, clock=lambda: t[0])
+    g, _ = admit(_ego(1), BUCKETS)
+    C = np.zeros(g.nv, np.int32)
+
+    def put(gid):
+        return store.put(gid, g, C, n_communities=1, n_disconnected=0,
+                         q=0.0)
+
+    put("a")
+    put("b")
+    store.get("a")                      # refresh a's recency
+    put("c")                            # evicts b (LRU), not a
+    assert store.get("b") is None and store.get("a") is not None
+    assert store.n_evicted == 1 and len(store) == 2
+    t[0] = 11.0                         # past ttl for both residents
+    assert store.get("a") is None
+    assert store.n_expired == 1
+    # versions stay monotone across eviction
+    assert put("b").version == 2
+    # apply_update on an expired entry is KeyError, not a stale compute
+    t[0] = 30.0
+    with pytest.raises(KeyError):
+        store.apply_update("b", (np.array([0]), np.array([1]),
+                                 np.ones(1, np.float32)))
+
+
 # ---------------------------------------------------------------------------
-# service end to end
+# sync adapter end to end (same code path as the async front end)
 # ---------------------------------------------------------------------------
 
 def test_service_mixed_buckets_and_updates():
@@ -173,3 +315,43 @@ def test_service_mixed_buckets_and_updates():
     assert rep["n_detect"] == 6 and rep["n_update"] == 2
     assert rep["p50_ms"] <= rep["p99_ms"]
     assert rep["graphs_per_s"] > 0
+    assert rep["tenants"]["default"]["served"] == 8
+
+
+def test_rebucket_update_exempt_from_queue_bound():
+    # an overflowing update invalidates its store entry; the re-detect it
+    # queues must be admitted even when the tenant queue is at its bound,
+    # or the graph's result would be lost with nothing queued to replace it
+    cfg = ServiceConfig(louvain=CFG, buckets=BUCKETS, batch_size=2,
+                        max_delay_s=10.0, max_pending_per_tenant=1)
+    fe = ServiceFrontend(cfg)
+    fe.submit_detect("g", _ego(9), tenant="a")
+    fe.dispatch(force=True)
+    e = fe.result("g")
+    fe.submit_detect("other", _ego(1), tenant="a")    # queue now at bound
+    with pytest.raises(QueueFull):
+        fe.submit_detect("third", _ego(2), tenant="a")
+    n = int(e.graph.n_nodes)
+    free = int(np.asarray(e.graph.src >= e.graph.n_cap).sum())
+    k = free // 2 + 1
+    u = np.zeros(k, np.int64)
+    v = 1 + np.arange(k) % (n - 1)
+    fut = fe.submit_update("g", (u, v, np.ones(k, np.float32)), tenant="a")
+    assert fut.kind == "detect"                       # queued, not dropped
+    fe.drain()
+    assert fut.result().version == 2                  # monotone after rebucket
+    assert fe.result("g").n_disconnected == 0
+
+
+def test_request_ids_monotonic_across_dispatch():
+    # regression: the old n_detect + pending() scheme could collide after
+    # a pump; ids must stay unique across submit/dispatch interleavings
+    svc = CommunityService(CFG, buckets=BUCKETS, batch_size=1,
+                           max_delay_s=10.0)
+    ids = [svc.submit_detect("g", _ego(0))]
+    svc.drain()
+    ids.append(svc.submit_detect("g", _ego(0)))
+    svc.pump(force=True)
+    ids.append(svc.submit_detect("g", _ego(0)))
+    svc.drain()
+    assert len(set(ids)) == len(ids)

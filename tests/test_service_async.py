@@ -1,0 +1,243 @@
+"""Async futures front end: resolution, backpressure (reject + block),
+fairness under skewed load, deadline dispatch, and sync/async parity
+(one code path)."""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core import LouvainConfig, louvain
+from repro.graph import sbm_graph
+from repro.service import (
+    AsyncCommunityService, Bucket, CommunityService, QueueFull,
+    ServiceConfig,
+)
+from repro.service.buckets import admit
+
+CFG = LouvainConfig()
+BUCKETS = (Bucket(64, 512), Bucket(64, 2048), Bucket(256, 2048))
+
+
+def _ego(seed, n=30):
+    return sbm_graph(n_nodes=n, n_blocks=3, p_in=0.4, p_out=0.04,
+                     seed=seed)[0]
+
+
+def _cfg(**kw):
+    kw.setdefault("louvain", CFG)
+    kw.setdefault("buckets", BUCKETS)
+    return ServiceConfig(**kw)
+
+
+def _run(coro):
+    return asyncio.run(coro)
+
+
+# ---------------------------------------------------------------------------
+# futures resolve to store entries
+# ---------------------------------------------------------------------------
+
+def test_futures_resolve_to_store_entries():
+    async def go():
+        cfg = _cfg(batch_size=4, max_delay_s=0.01)
+        async with AsyncCommunityService(cfg) as svc:
+            futs = [await svc.submit_detect(f"g{i}", _ego(i), tenant="t0")
+                    for i in range(4)]
+            entries = await asyncio.gather(*futs)
+            for i, e in enumerate(entries):
+                assert e.n_disconnected == 0
+                assert e.version == 1
+                assert svc.result(f"g{i}") is e
+            assert all(f.done() for f in futs)
+            assert len({f.req_id for f in futs}) == 4
+    _run(go())
+
+
+# ---------------------------------------------------------------------------
+# backpressure
+# ---------------------------------------------------------------------------
+
+def test_backpressure_reject_counted_no_deadlock():
+    async def go():
+        cfg = _cfg(batch_size=2, max_delay_s=0.01, max_pending_per_tenant=2)
+        async with AsyncCommunityService(cfg) as svc:
+            futs, rejected = [], 0
+            # no awaits between submissions -> the dispatcher cannot drain,
+            # so exactly bound=2 are accepted and 4 are rejected
+            for i in range(6):
+                try:
+                    futs.append(await svc.submit_detect(
+                        f"a{i}", _ego(i), tenant="a", block=False))
+                except QueueFull:
+                    rejected += 1
+            assert rejected == 4
+            assert svc.metrics.tenants["a"].n_rejected == 4
+            entries = await asyncio.gather(*futs)   # accepted still served
+            assert all(e.n_disconnected == 0 for e in entries)
+            assert svc.pending() == 0               # no deadlock, all drained
+    _run(go())
+
+
+def test_backpressure_block_awaits_slot():
+    async def go():
+        cfg = _cfg(batch_size=2, max_delay_s=0.01, max_pending_per_tenant=2)
+        async with AsyncCommunityService(cfg) as svc:
+            # 6 blocking submissions through a bound-2 queue: each overflow
+            # awaits a freed slot instead of raising
+            futs = [await svc.submit_detect(f"b{i}", _ego(i), tenant="b")
+                    for i in range(6)]
+            entries = await asyncio.gather(*futs)
+            assert len(entries) == 6
+            assert all(e.n_disconnected == 0 for e in entries)
+            # blocked-then-served submissions are not rejections
+            assert svc.metrics.n_rejected == 0
+    _run(go())
+
+
+# ---------------------------------------------------------------------------
+# fairness: a flooding tenant cannot starve a light one
+# ---------------------------------------------------------------------------
+
+def test_fairness_light_tenant_not_starved():
+    async def go():
+        cfg = _cfg(batch_size=4, max_delay_s=0.005,
+                   max_pending_per_tenant=8)
+        async with AsyncCommunityService(cfg) as svc:
+            done_order = []
+
+            def record(f):
+                done_order.append(f.req_id)
+
+            async def heavy():
+                futs = []
+                for i in range(20):
+                    f = await svc.submit_detect(f"h{i}", _ego(i),
+                                                tenant="heavy")
+                    f.add_done_callback(record)
+                    futs.append(f)
+                return futs
+
+            async def light():
+                futs = []
+                for i in range(5):
+                    f = await svc.submit_detect(f"l{i}", _ego(100 + i),
+                                                tenant="light")
+                    f.add_done_callback(record)
+                    futs.append(f)
+                    await asyncio.sleep(0.002)
+                return futs
+
+            hf, lf = await asyncio.gather(heavy(), light())
+            await asyncio.gather(*(hf + lf))
+            served = {t: m.n_detect for t, m in svc.metrics.tenants.items()}
+            assert served == {"heavy": 20, "light": 5}  # nobody starves
+            # DRR interleaves the light tenant: it finishes before the
+            # flooding tenant's tail, not after it
+            last_light = max(i for i, r in enumerate(done_order)
+                             if r.startswith("d") and "-l" in r)
+            last_heavy = max(i for i, r in enumerate(done_order)
+                             if r.startswith("d") and "-h" in r)
+            assert last_light < last_heavy
+    _run(go())
+
+
+# ---------------------------------------------------------------------------
+# deadline dispatch
+# ---------------------------------------------------------------------------
+
+def test_deadline_forces_partial_flush():
+    async def go():
+        # batch never fills (64) and max_delay is far away (30s): only the
+        # request's own deadline can flush it
+        cfg = _cfg(batch_size=64, max_delay_s=30.0)
+        async with AsyncCommunityService(cfg, poll_s=0.005) as svc:
+            t0 = asyncio.get_running_loop().time()
+            fut = await svc.submit_detect("g", _ego(0), deadline_s=0.05)
+            entry = await asyncio.wait_for(asyncio.ensure_future(
+                _await(fut)), timeout=60.0)
+            dt = asyncio.get_running_loop().time() - t0
+            assert entry.version == 1
+            assert dt < 25.0      # flushed by deadline, not max_delay
+    _run(go())
+
+
+async def _await(fut):
+    return await fut
+
+
+# ---------------------------------------------------------------------------
+# parity: sync adapter and async front end serve identical results
+# ---------------------------------------------------------------------------
+
+def test_sync_adapter_and_async_parity_with_louvain():
+    graphs = {f"g{i}": _ego(i) for i in range(4)}
+
+    svc = CommunityService(CFG, buckets=BUCKETS, batch_size=4,
+                           max_delay_s=10.0)
+    ids = [svc.submit_detect(gid, g) for gid, g in graphs.items()]
+    assert len(set(ids)) == len(ids)
+    svc.drain()
+
+    async def go():
+        cfg = _cfg(batch_size=4, max_delay_s=10.0)
+        async with AsyncCommunityService(cfg) as svc2:
+            futs = [await svc2.submit_detect(gid, g)
+                    for gid, g in graphs.items()]
+            return list(await asyncio.gather(*futs))
+
+    entries = _run(go())
+    for (gid, g), e in zip(graphs.items(), entries):
+        padded, _ = admit(g, BUCKETS)
+        C_ref, stats = louvain(padded, CFG)
+        # async == sync == the public single-graph API, exactly
+        assert np.array_equal(e.C, np.asarray(C_ref))
+        assert np.array_equal(svc.result(gid).C, e.C)
+        assert e.n_communities == int(stats["n_communities"])
+
+
+def test_close_without_drain_cancels_queued_futures():
+    async def go():
+        # batch never fills and max_delay is far away: the request is
+        # still queued when the service shuts down without draining
+        cfg = _cfg(batch_size=64, max_delay_s=30.0)
+        svc = await AsyncCommunityService(cfg).start()
+        fut = await svc.submit_detect("g", _ego(0), tenant="a")
+        await svc.close(drain=False)
+        assert fut.done()                   # not left hanging forever
+        with pytest.raises(asyncio.CancelledError):
+            await fut
+    _run(go())
+
+
+def test_async_updates_and_rebucket_future():
+    async def go():
+        cfg = _cfg(batch_size=2, max_delay_s=0.01)
+        async with AsyncCommunityService(cfg) as svc:
+            futs = [await svc.submit_detect(f"g{i}", _ego(i), tenant="u")
+                    for i in range(2)]
+            await asyncio.gather(*futs)
+            e = svc.result("g0")
+            n = int(e.graph.n_nodes)
+            rng = np.random.default_rng(3)
+            upd = await svc.submit_update(
+                "g0", (rng.integers(0, n, 4), rng.integers(0, n, 4),
+                       np.ones(4, np.float32)), tenant="u")
+            assert upd.kind == "update" and upd.done()
+            assert (await upd).version == 2
+            # overflow the bucket -> the returned future is the queued
+            # re-detect, resolving to a fresh (larger-bucket) entry
+            e = svc.result("g0")
+            free = int(np.asarray(e.graph.src >= e.graph.n_cap).sum())
+            k = free // 2 + 1
+            u = np.zeros(k, np.int64)
+            v = 1 + np.arange(k) % (n - 1)
+            fut = await svc.submit_update(
+                "g0", (u, v, np.ones(k, np.float32)), tenant="u")
+            assert fut.kind == "detect"
+            e3 = await fut
+            assert e3.version == 3          # monotone across rebucket
+            assert svc.metrics.n_rebucketed == 1
+            with pytest.raises(KeyError):
+                await svc.submit_update("nope", (u, v,
+                                                 np.ones(k, np.float32)))
+    _run(go())
