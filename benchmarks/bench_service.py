@@ -1,6 +1,6 @@
 """Service benchmark: batched engine vs sequential single-graph calls.
 
-Three sections:
+Four sections:
 
 1. **Engine throughput, one bucket** — an ego-net workload in the
    (64, 2048) bucket.  The sequential baseline is the repo's public
@@ -15,7 +15,15 @@ Three sections:
    sequential and still matches ``louvain()`` partitions exactly — the
    front end must not eat the engine's win.
 
-3. **Bucket mixes through the full service** — the mixed three-bucket
+3. **Batched warm updates** — 32 mixed add/delete edge batches against
+   the detected graphs, served by the vmapped warm path
+   (``engine.update_batch``) vs serving each update as its own request
+   through the staged per-request warm path (what a service without the
+   batched update engine runs — see ``bench_update_path``).  All sides
+   include the host-side COO rewrite.  Acceptance: batch-32 warm updates
+   >= 3x sequential with exact per-graph partition match.
+
+4. **Bucket mixes through the full service** — the mixed three-bucket
    traffic of launch/serve_communities.py at service batch 32 vs a
    batch-1 service (per-request dispatch), reporting graphs/s and
    aggregate directed edges/s.  The closed-loop driver submits faster
@@ -23,7 +31,9 @@ Three sections:
    is head-of-line queueing behind full batches (throughput mode, ~4x
    the graphs/s), while the batch-1 row shows the latency mode.
 
-CSV rows use the suite convention ``name,us_per_call,derived`` (run.py).
+CSV rows use the suite convention ``name,us_per_call,derived`` (run.py);
+``scripts/check_bench.py`` parses the ``# <metric>,<value>`` lines into
+``benchmarks/BENCH_service.json`` and enforces the regression gate.
 """
 from __future__ import annotations
 
@@ -203,6 +213,142 @@ def bench_async_frontend(graphs, t_seq, seq):
     return ratio
 
 
+def bench_update_path(graphs):
+    """Batch-32 warm updates: the vmapped engine path vs serving updates
+    one request at a time.
+
+    Mixed fully-dynamic batches (delete two live edges, add two new ones)
+    against each detected graph, three implementations:
+
+    * **sequential** — the per-request warm path a service *without* the
+      batched update engine runs (and what ``store.apply_update`` ran
+      before batching existed): per request, the host COO rewrite, then
+      warm local-move / split / renumber / detector / modularity as
+      separate jitted stages with the per-request host syncs the store
+      needs for its entry fields.  The update analogue of section 1's
+      per-request ``louvain()`` baseline.
+    * **immediate** — the current single-request path
+      (``store.apply_update``): same host rewrite, ONE fused
+      ``warm_update`` call per request.  Reported for transparency: the
+      fusion is where most of the win lives on a 2-core CPU host.
+    * **batched** — the service's queued path: all host rewrites, then
+      ONE vmapped engine call (``engine.update_batch``).
+
+    All three produce bit-identical partitions (asserted).  Acceptance:
+    batched >= 3x sequential.  On accelerator backends the batched call
+    additionally gains lane parallelism over immediate (same argument as
+    the engine sub_batch policy); on CPU it mostly amortizes dispatch.
+    """
+    from functools import partial
+
+    import jax.numpy as jnp
+
+    from repro.core import _segments as seg
+    from repro.core.dynamic import (
+        affected_mask, apply_edge_updates, directed_deltas, touched_mask,
+        warm_local_move, warm_update,
+    )
+    from repro.core.split import split_labels
+
+    cfg = LouvainConfig()
+    engine = BatchedLouvainEngine(cfg)
+    res = engine.detect_batch(graphs)
+    scan = engine.scan_for(BUCKET)
+    impl = "dense" if scan == "dense" else "coo"
+    rng = np.random.default_rng(11)
+    Cs = [np.asarray(r.C) for r in res]
+    upds = []
+    for g in graphs:
+        src = np.asarray(g.src)
+        dst = np.asarray(g.dst)
+        w = np.asarray(g.w)
+        live = (src < g.n_cap) & (src < dst)
+        idx = rng.choice(int(live.sum()), 2, replace=False)
+        n = int(g.n_nodes)
+        au = rng.integers(0, n, 2)
+        av = rng.integers(0, n, 2)
+        u = np.concatenate([src[live][idx], au])
+        v = np.concatenate([dst[live][idx], av])
+        d = np.concatenate([-w[live][idx],
+                            np.ones(2, np.float32)]).astype(np.float32)
+        keep = u != v
+        upds.append((u[keep], v[keep], d[keep]))
+
+    _split = jax.jit(partial(split_labels, impl=impl))
+    _detect = partial(disconnected_communities, impl=impl)
+
+    def one_request_staged(g, C, u, v, d):
+        """The pre-batching per-request warm path (staged dispatches +
+        the host syncs the store's entry fields force per request)."""
+        g_new = apply_edge_updates(g, *directed_deltas(u, v, d))
+        C_prev = jnp.asarray(C)
+        tm = jnp.asarray(touched_mask(g.nv, u, v))
+        active0 = affected_mask(g_new, C_prev, tm)
+        C1, _, it = warm_local_move(
+            g_new.src, g_new.dst, g_new.w, C_prev,
+            g_new.total_weight_2m(), active0, scan=scan)
+        labels, _ = _split(g_new.src, g_new.dst, g_new.w, C1)
+        C_new, n_comms = seg.renumber(labels, g_new.node_mask(), g_new.nv)
+        det = _detect(g_new.src, g_new.dst, g_new.w, C_new, g_new.n_nodes)
+        q = float(modularity(g_new.src, g_new.dst, g_new.w, C_new))
+        return (np.asarray(C_new), int(n_comms),
+                int(det["n_disconnected"]), q)
+
+    def sequential_update():
+        return [one_request_staged(g, C, *upd)
+                for g, C, upd in zip(graphs, Cs, upds)]
+
+    def immediate_update():
+        outs = []
+        for g, C, (u, v, d) in zip(graphs, Cs, upds):
+            g_new = apply_edge_updates(g, *directed_deltas(u, v, d))
+            out = warm_update(g_new, jnp.asarray(C),
+                              jnp.asarray(touched_mask(g.nv, u, v)),
+                              scan=scan)
+            outs.append((np.asarray(out["C"]), int(out["n_communities"]),
+                         int(out["n_disconnected"]), float(out["q"])))
+        return outs
+
+    def batched_update():
+        items = []
+        for g, C, (u, v, d) in zip(graphs, Cs, upds):
+            g_new = apply_edge_updates(g, *directed_deltas(u, v, d))
+            items.append((g_new, C, touched_mask(g.nv, u, v)))
+        return engine.update_batch(items)
+
+    # -- exactness: all three paths agree bit for bit --------------------
+    seq = sequential_update()
+    imm = immediate_update()
+    bat = batched_update()
+    for i, (s, m, b) in enumerate(zip(seq, imm, bat)):
+        assert np.array_equal(s[0], b.C), f"update C @{i}"
+        assert np.array_equal(m[0], b.C), f"immediate C @{i}"
+        # immediate and batched run the same jitted compute: bit equal.
+        # The staged baseline's eager modularity sum may differ by ulps.
+        assert m[3] == b.q, f"update q @{i}"
+        assert abs(s[3] - b.q) <= 1e-6, f"staged q @{i}"
+        assert b.n_disconnected == 0
+    print("# batched warm updates match the sequential warm path exactly "
+          f"({B}/{B})")
+
+    t_seq = timeit_best(sequential_update)
+    row("service_update_sequential_32", t_seq, f"{B / t_seq:.1f} graphs/s")
+    t_imm = timeit_best(immediate_update)
+    row("service_update_immediate_32", t_imm,
+        f"{B / t_imm:.1f} graphs/s,{t_seq / t_imm:.2f}x_vs_sequential")
+
+    def attempt():
+        t_s = timeit_best(sequential_update, repeats=3)
+        t_b = timeit_best(batched_update)
+        return t_s / t_b
+
+    ratio = accept_speedup("speedup_update_batch32", attempt, bar=3.0)
+    t_bat = timeit_best(batched_update)
+    row("service_update_batch32", t_bat,
+        f"{B / t_bat:.1f} graphs/s,{ratio:.2f}x_vs_sequential,"
+        f"{t_imm / t_bat:.2f}x_vs_immediate")
+
+
 def bench_bucket_mix():
     from repro.launch.serve_communities import run_traffic
     from repro.service import CommunityService
@@ -225,6 +371,7 @@ def main():
     print("name,us_per_call,derived")
     graphs, t_seq, seq = bench_engine()
     bench_async_frontend(graphs, t_seq, seq)
+    bench_update_path(graphs)
     bench_bucket_mix()
 
 

@@ -1,10 +1,13 @@
 """Scenario: streaming graph — incremental community maintenance.
 
-A production service rarely re-clusters from scratch: edges arrive in
-batches.  This example maintains a GSP-Louvain partition across update
-batches with delta-screening (core/dynamic.py): each batch warm-starts the
-local-moving phase with only the affected region active, then re-splits —
-so the paper's no-disconnected-communities guarantee holds continuously.
+A production service rarely re-clusters from scratch: edges arrive (and
+disappear) in batches.  This example maintains a GSP-Louvain partition
+across fully-dynamic update batches with delta-screening
+(core/dynamic.py): each batch of signed weight-deltas rewrites the padded
+COO in place (deletions free capacity), warm-starts the local-moving
+phase with only the affected region active, then re-splits — so the
+paper's no-disconnected-communities guarantee holds continuously, even
+when a deletion disconnects a community internally.
 
   PYTHONPATH=src python examples/dynamic_updates.py
 """
@@ -27,10 +30,23 @@ def main():
     q = float(modularity(g.src, g.dst, g.w, C))
     print(f"initial: |E|={int(g.num_edges())} Q={q:.4f}")
 
-    for batch in range(4):
-        u = rng.integers(0, 400, 40)
-        v = rng.integers(0, 400, 40)
-        w = np.ones(40, np.float32)
+    for batch in range(6):
+        if batch < 4:
+            # growth phase: 40 random insertions
+            u = rng.integers(0, 400, 40)
+            v = rng.integers(0, 400, 40)
+            w = np.ones(40, np.float32)
+            label = "+40 edges"
+        else:
+            # churn phase: delete 30 random live edges (negative deltas
+            # remove entries in place and free their capacity slots)
+            src = np.asarray(g.src)
+            dst = np.asarray(g.dst)
+            ww = np.asarray(g.w)
+            live = (src < g.n_cap) & (src < dst)
+            idx = rng.choice(int(live.sum()), 30, replace=False)
+            u, v, w = src[live][idx], dst[live][idx], -ww[live][idx]
+            label = "-30 edges"
         t0 = time.perf_counter()
         g, C, stats = update_communities(g, C, (u, v, w))
         dt = time.perf_counter() - t0
@@ -40,7 +56,7 @@ def main():
         C_full, _ = louvain(g, LouvainConfig())
         q_full = float(modularity(g.src, g.dst, g.w, C_full))
         print(
-            f"batch {batch}: +40 edges | affected={int(stats['n_affected']):4d}"
+            f"batch {batch}: {label} | affected={int(stats['n_affected']):4d}"
             f"/{int(g.n_nodes)} vertices | warm sweeps={int(stats['iterations'])}"
             f" | Q={q_inc:.4f} (full recompute {q_full:.4f})"
             f" | disconnected={int(det['n_disconnected'])} | {dt*1e3:.0f} ms"

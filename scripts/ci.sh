@@ -1,19 +1,56 @@
 #!/usr/bin/env bash
-# Pre-merge check: tier-1 suite + service smoke.
+# Tiered pre-merge gate.
 #
-#   scripts/ci.sh
+#   scripts/ci.sh [tier1|smoke|bench|all]     (default: all)
 #
-# Keep this the documented gate: it is what CHANGES.md entries are
-# validated against.
+# Tiers:
+#   tier1  — the full pytest suite (ROADMAP's tier-1 verify).  Fast-ish,
+#            deterministic; runs on every push/PR (.github/workflows/ci.yml).
+#   smoke  — the three serve_communities end-to-end smokes: the sync pump
+#            driver, the async multi-tenant driver, and the fully-dynamic
+#            churn driver (deletions through the batched warm path).  Also
+#            in the GitHub workflow.
+#   bench  — acceptance benchmarks + regression check: scripts/check_bench.py
+#            runs benchmarks/bench_service.py, enforces the speedup bars,
+#            writes benchmarks/BENCH_service.json and fails on a >20%
+#            regression of any paired-speedup metric vs the committed
+#            snapshot (absolute graphs/s is informational).  Local-only
+#            (shared-CPU runners are too noisy); the workflow only lints
+#            that the committed snapshot parses.
+#   all    — every tier above.  THIS is the documented pre-merge gate: it
+#            is what CHANGES.md entries are validated against.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1: pytest =="
-python -m pytest -x -q
+tier="${1:-all}"
 
-echo "== service smoke =="
-python -m repro.launch.serve_communities --smoke
+run_tier1() {
+  echo "== tier-1: pytest =="
+  python -m pytest -x -q
+}
 
-echo "== async service smoke =="
-python -m repro.launch.serve_communities --async --smoke
+run_smoke() {
+  echo "== service smoke =="
+  python -m repro.launch.serve_communities --smoke
+  echo "== async service smoke =="
+  python -m repro.launch.serve_communities --async --smoke
+  echo "== churn (dynamic deletions) smoke =="
+  python -m repro.launch.serve_communities --churn --smoke
+}
+
+run_bench() {
+  echo "== bench: acceptance + regression check =="
+  python scripts/check_bench.py
+}
+
+case "$tier" in
+  tier1) run_tier1 ;;
+  smoke) run_smoke ;;
+  bench) run_bench ;;
+  all)   run_tier1; run_smoke; run_bench ;;
+  *)
+    echo "usage: scripts/ci.sh [tier1|smoke|bench|all]" >&2
+    exit 2
+    ;;
+esac

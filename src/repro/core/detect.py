@@ -20,7 +20,7 @@ from repro.core.split import split_labels
 
 
 def disconnected_communities_impl(src, dst, w, C, n_nodes, *, axis=None,
-                                  impl: str = "coo"):
+                                  impl: str = "coo", adj=None):
     """Flags + counts of internally-disconnected communities (unjitted).
 
     Returns a dict with:
@@ -28,13 +28,16 @@ def disconnected_communities_impl(src, dst, w, C, n_nodes, *, axis=None,
       n_disconnected: int32, n_communities: int32, fraction: f32.
 
     ``impl`` selects the split fixpoint implementation ('coo' | 'dense' —
-    see :func:`repro.core.split.split_labels`).
+    see :func:`repro.core.split.split_labels`); ``adj`` optionally shares
+    a precomputed bool[nv, nv] adjacency with the dense fixpoint (the
+    warm-update path amortizes one scatter across its phases).
     """
     nv = C.shape[0]
     ghost = nv - 1
     node_valid = jnp.arange(nv) < n_nodes
 
-    L, _ = split_labels(src, dst, w, C, mode="pj", axis=axis, impl=impl)
+    L, _ = split_labels(src, dst, w, C, mode="pj", axis=axis, impl=impl,
+                        adj=adj)
     # count distinct (C, L) pairs per community: sort pairs, count run starts
     c_key = jnp.where(node_valid, C, ghost).astype(jnp.int32)
     l_key = jnp.where(node_valid, L, ghost).astype(jnp.int32)

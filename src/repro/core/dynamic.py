@@ -1,20 +1,34 @@
-"""Incremental community updates for dynamic graphs (delta-screening).
+"""Incremental community updates for fully-dynamic graphs (delta-screening).
 
 Production graphs change; recomputing Louvain from scratch per batch of
 edge updates wastes the previous solution.  Following the Delta-Screening
 idea (Zarayeneh & Kalyanaraman 2021 — the paper's citation [47]), an edge
 batch only perturbs communities *near* the endpoints:
 
-  1. apply the edge deltas to the padded COO (capacity permitting),
+  1. apply the signed edge weight-deltas to the padded COO in place
+     (additions fill free slots, decreases rewrite existing entries,
+     deletions free their slots for reuse),
   2. mark affected vertices: endpoints of changed edges, their same- and
-     adjacent-community neighbors,
+     adjacent-community neighbors — and for weight *decreases* the whole
+     community of each endpoint, because removing an intra-community edge
+     can disconnect or dissolve the community,
   3. warm-start the local-moving phase from the previous membership with
      ONLY affected vertices active (the pruning mask doubles as the
      screening set — the paper's own pruning machinery, reused),
-  4. run the SP split + renumber as usual (the guarantee survives updates).
+  4. run the SP split + renumber as usual.  The split pass is what makes
+     deletions safe: a community disconnected by a removed bridge is
+     relabeled per connected component, so the paper's
+     no-internally-disconnected-communities guarantee survives every
+     update (asserted by the service smoke and the planted tests).
 
 The warm-started pass converges in a handful of sweeps when the update
 touches a small region, versus full passes from singletons.
+
+Batching: :func:`warm_update_impl` is the jit/vmap-composable form of
+steps 2-4 (the host-side COO rewrite of step 1 stays per graph).  The
+service engine vmaps it across same-bucket graphs so update-dominated
+traffic gets the same batching win as detection traffic
+(:meth:`repro.service.engine.BatchedLouvainEngine.update_batch`).
 """
 from __future__ import annotations
 
@@ -22,67 +36,147 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import _segments as seg
+from repro.core.detect import disconnected_communities_impl
 from repro.core.local_move import MoveState, _half_sweep, _half_sweep_dense, \
     _hash_parity, realized_modularity
+from repro.core.modularity import modularity
 from repro.core.split import split_labels
 from repro.graph.container import Graph
 
 
-def apply_edge_updates(g: Graph, new_src, new_dst, new_w):
-    """Append directed edges into the padded capacity (host-side numpy).
+def merge_edge_deltas(g: Graph, new_src, new_dst, new_dw):
+    """Merge directed signed weight-deltas into ``g``'s live edge set.
 
-    Returns a new Graph; raises if capacity is exhausted.  Additions only:
-    a duplicate of an existing edge appends a parallel entry, which every
-    downstream consumer treats as summed weight.  True deletions /
-    weight-deltas (rewriting existing entries in place) are future work —
-    see ROADMAP open items.
+    Host-side numpy.  Per directed pair ``(u, v)`` the net delta of the
+    batch is added to the existing entry's weight (parallel live entries,
+    a legacy of the old append-only path, are coalesced first).  Pairs
+    whose resulting weight is ``<= 0`` are **deleted** — so passing
+    ``-w`` for an existing weight-``w`` edge removes it, and deleting an
+    edge that does not exist is a no-op (idempotent).  New pairs with a
+    positive net delta are insertions.
+
+    Returns ``(src, dst, w)`` of the merged live entries, sorted by
+    ``(src, dst)`` — unpadded, so callers choose the output capacity.
     """
-    import numpy as np
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    w = np.asarray(g.w)
+    live = src < g.n_cap
+    u = np.concatenate([src[live], np.asarray(new_src, np.int32)])
+    v = np.concatenate([dst[live], np.asarray(new_dst, np.int32)])
+    vals = np.concatenate([w[live].astype(np.float32),
+                           np.asarray(new_dw, np.float32)])
+    # group by directed pair; float64 accumulation so an exact add-then-
+    # delete round-trip cancels to 0.0
+    key = u.astype(np.int64) * (g.n_cap + 1) + v.astype(np.int64)
+    order = np.argsort(key, kind="stable")
+    key, u, v, vals = key[order], u[order], v[order], vals[order]
+    first = np.ones(key.shape, bool)
+    first[1:] = key[1:] != key[:-1]
+    run = np.cumsum(first) - 1
+    w_net = np.bincount(run, weights=vals).astype(np.float32)
+    keep = w_net > 0.0
+    return u[first][keep], v[first][keep], w_net[keep]
 
-    src = np.asarray(g.src).copy()
-    dst = np.asarray(g.dst).copy()
-    w = np.asarray(g.w).copy()
-    free = np.where(src >= g.n_cap)[0]
-    need = len(new_src)
-    if need > len(free):
-        raise ValueError(f"edge capacity exhausted ({need} > {len(free)})")
-    src[free[:need]] = np.asarray(new_src, np.int32)
-    dst[free[:need]] = np.asarray(new_dst, np.int32)
-    w[free[:need]] = np.asarray(new_w, np.float32)
-    order = np.lexsort((dst, src))
+
+def apply_edge_updates(g: Graph, new_src, new_dst, new_dw):
+    """Apply directed signed weight-deltas in place (host-side numpy).
+
+    Fully dynamic: positive deltas on new pairs append into free padded
+    slots, deltas on existing pairs rewrite the entry's weight in place,
+    and entries driven to ``<= 0`` are removed — their slots return to
+    the padding pool, so capacity freed by deletions is reusable by later
+    additions (compaction: the edge list is re-sorted every update, which
+    pushes the ghost-keyed padding back to the tail).
+
+    Returns a new Graph; raises ``ValueError`` if the merged live edge
+    set exceeds ``m_cap`` (the service maps this to re-bucketing).
+    """
+    u, v, w = merge_edge_deltas(g, new_src, new_dst, new_dw)
+    n_live = len(u)
+    if n_live > g.m_cap:
+        raise ValueError(
+            f"edge capacity exhausted ({n_live} live edges > m_cap "
+            f"{g.m_cap})")
+    ghost = g.n_cap
+    pad = g.m_cap - n_live
+    # numpy leaves on purpose: the update hot path prepares many graphs
+    # host-side before one batched device call, and eager per-graph
+    # host->device copies here measurably dominate prepare time; jit/vmap
+    # convert the leaves exactly once at dispatch.
     return Graph(
-        src=jnp.asarray(src[order]), dst=jnp.asarray(dst[order]),
-        w=jnp.asarray(w[order]), n_nodes=g.n_nodes,
-        n_cap=g.n_cap, m_cap=g.m_cap,
+        src=np.concatenate([u, np.full(pad, ghost, np.int32)]).astype(
+            np.int32),
+        dst=np.concatenate([v, np.full(pad, ghost, np.int32)]).astype(
+            np.int32),
+        w=np.concatenate([w, np.zeros(pad, np.float32)]),
+        n_nodes=g.n_nodes, n_cap=g.n_cap, m_cap=g.m_cap,
     )
 
 
-def affected_vertices(g: Graph, C, touched):
-    """Screening set: touched vertices, plus neighbors sharing or adjacent
-    to their communities (one segment_max over edges)."""
+def directed_deltas(u, v, dw):
+    """Expand undirected update pairs to the container convention: each
+    ``u != v`` pair in both directions, self-loops once (full weight)."""
+    u, v, dw = (np.asarray(x) for x in (u, v, dw))
+    loops = u == v
+    src = np.concatenate([u[~loops], v[~loops], u[loops]]).astype(np.int32)
+    dst = np.concatenate([v[~loops], u[~loops], u[loops]]).astype(np.int32)
+    ww = np.concatenate([dw[~loops], dw[~loops],
+                         dw[loops]]).astype(np.float32)
+    return src, dst, ww
+
+
+def touched_mask(nv: int, u, v) -> np.ndarray:
+    """bool[nv] host-side mask of update endpoints (vmappable screening
+    input — index lists have data-dependent shapes, masks do not)."""
+    t = np.zeros((nv,), bool)
+    t[np.asarray(u, np.int64)] = True
+    t[np.asarray(v, np.int64)] = True
+    return t
+
+
+def affected_mask(g: Graph, C, touched):
+    """Screening set from a touched-endpoint mask (jit/vmap-composable).
+
+    Marks (a) the touched endpoints, (b) their neighbors, and (c) every
+    member of a community containing a touched endpoint.  (c) is what
+    extends delta-screening to weight *decreases*: a decreased or removed
+    intra-community edge re-evaluates both endpoints' communities in
+    full, so members can re-bind after the split pass breaks the
+    community apart (Zarayeneh & Kalyanaraman's deletion rule).  For pure
+    increases (c) is the same community-adjacency superset the additions
+    path always used.
+    """
     nv = g.nv
-    t = jnp.zeros((nv,), bool).at[touched].set(True)
-    # neighbors of touched vertices
+    t = touched
     nbr = jax.ops.segment_max(
         t[g.src].astype(jnp.int32), g.dst, num_segments=nv) > 0
-    # members of communities containing touched vertices
     comm_touched = jax.ops.segment_max(
         jnp.where(t, 1, 0), C, num_segments=nv) > 0
     member = comm_touched[C]
     return t | nbr | member
 
 
-@partial(jax.jit, static_argnames=("max_iters", "sync", "scan"))
-def warm_local_move(src, dst, w, C_prev, two_m, active0, *, tau=1e-3,
-                    max_iters: int = 10, sync: str = "handshake",
-                    scan: str = "sort"):
+def affected_vertices(g: Graph, C, touched):
+    """Index-list façade over :func:`affected_mask` (legacy API)."""
+    t = jnp.zeros((g.nv,), bool).at[touched].set(True)
+    return affected_mask(g, C, t)
+
+
+def warm_local_move_impl(src, dst, w, C_prev, two_m, active0, *, tau=1e-3,
+                         max_iters: int = 10, sync: str = "handshake",
+                         scan: str = "sort", adj=None):
     """Local-moving warm-started from C_prev with a restricted active set.
 
     Mirrors local_move but (a) starts from the previous membership instead
     of singletons and (b) seeds the pruning mask with the screening set.
-    ``scan`` selects the sweep implementation exactly as in local_move.
+    ``scan`` selects the sweep implementation exactly as in local_move;
+    ``adj`` optionally shares a precomputed bool[nv, nv] adjacency (dense
+    scan) so callers amortize the scatter across phases.
+    Unjitted — vmap/jit-compose freely (the batched update path vmaps it).
     Returns (C, Sigma, iterations).
     """
     nv = C_prev.shape[0]
@@ -95,7 +189,8 @@ def warm_local_move(src, dst, w, C_prev, two_m, active0, *, tau=1e-3,
     sweep_kw = {}
     if scan == "dense":
         sweep = _half_sweep_dense
-        adj = jnp.zeros((nv, nv), bool).at[src, dst].set(True)
+        if adj is None:
+            adj = jnp.zeros((nv, nv), bool).at[src, dst].set(True)
         sweep_kw["valid_cell"] = (ids[:, None] < ghost) & (ids[None, :] < ghost)
     else:
         sweep = _half_sweep
@@ -143,41 +238,82 @@ def warm_local_move(src, dst, w, C_prev, two_m, active0, *, tau=1e-3,
     return out.C_best, out.Sigma_best, out.it
 
 
+warm_local_move = partial(
+    jax.jit, static_argnames=("max_iters", "sync", "scan")
+)(warm_local_move_impl)
+
+
+def warm_update_impl(g: Graph, C_prev, touched, *, tau=1e-3,
+                     max_iters: int = 10, scan: str = "sort"):
+    """One warm update on an already-rewritten graph (jit/vmap-composable).
+
+    screening -> warm local move -> split -> renumber -> detector ->
+    modularity, all on device.  This is the ONE compute path both the
+    store's immediate update (:meth:`repro.service.store.ResultStore.
+    apply_update`) and the engine's batched update path run, so their
+    partitions agree exactly.
+
+    Returns a dict: ``C`` (dense int32[nv] membership), ``n_communities``,
+    ``n_disconnected``, ``fraction``, ``q``, ``iterations``,
+    ``n_affected``.
+    """
+    impl = "dense" if scan == "dense" else "coo"
+    active0 = affected_mask(g, C_prev, touched)
+    two_m = g.total_weight_2m()
+    # one adjacency scatter shared by the warm sweep, the split fixpoint,
+    # and the detector (dense scan) — mirrors louvain_impl's per-pass
+    # sharing; booleans, so every formulation is exact
+    adj = (jnp.zeros((g.nv, g.nv), bool).at[g.src, g.dst].set(True)
+           if scan == "dense" else None)
+    C, _, it = warm_local_move_impl(
+        g.src, g.dst, g.w, C_prev, two_m, active0,
+        tau=tau, max_iters=max_iters, scan=scan, adj=adj,
+    )
+    labels, _ = split_labels(g.src, g.dst, g.w, C, impl=impl, adj=adj)
+    C_new, n_comms = seg.renumber(labels, g.node_mask(), g.nv)
+    det = disconnected_communities_impl(
+        g.src, g.dst, g.w, C_new, g.n_nodes, impl=impl, adj=adj)
+    q = modularity(g.src, g.dst, g.w, C_new)
+    return dict(
+        C=C_new,
+        n_communities=n_comms,
+        n_disconnected=det["n_disconnected"],
+        fraction=det["fraction"],
+        q=q,
+        iterations=it,
+        n_affected=jnp.sum(active0.astype(jnp.int32)),
+    )
+
+
+warm_update = partial(
+    jax.jit, static_argnames=("max_iters", "scan")
+)(warm_update_impl)
+
+
 def update_communities(g_old: Graph, C_prev, updates, *, tau=1e-3,
                        max_iters: int = 10, scan: str = "sort"):
     """Incrementally update a partition after an edge batch.
 
-    updates: (u int32[], v int32[], w f32[]) undirected additions (each
-    pair is inserted in both directions; self-loops once, per the
-    container convention).  Returns (g_new, C_new dense, stats).
-    ``scan='dense'`` routes the warm local-move and the split through the
-    small-graph dense kernels (the service's low-latency update path).
+    updates: (u int32[], v int32[], dw f32[]) undirected **signed**
+    weight-deltas (each pair is applied in both directions; self-loops
+    once, per the container convention).  Positive deltas add weight or
+    insert edges; negative deltas decrease weight, and an entry driven to
+    ``<= 0`` is deleted — its capacity slot becomes reusable.  Returns
+    (g_new, C_new dense, stats).  ``scan='dense'`` routes the warm
+    local-move and the split through the small-graph dense kernels (the
+    service's low-latency update path).
     """
-    import numpy as np
-
-    u, v, wts = (np.asarray(x) for x in updates)
-    # container convention: each undirected pair appears in both
-    # directions, self-loops once with their full weight
-    loops = u == v
-    src = np.concatenate([u[~loops], v[~loops], u[loops]]).astype(np.int32)
-    dst = np.concatenate([v[~loops], u[~loops], u[loops]]).astype(np.int32)
-    ww = np.concatenate([wts[~loops], wts[~loops],
-                         wts[loops]]).astype(np.float32)
+    u, v, dw = (np.asarray(x) for x in updates)
+    src, dst, ww = directed_deltas(u, v, dw)
     g = apply_edge_updates(g_old, src, dst, ww)
-
-    touched = jnp.asarray(np.unique(np.concatenate([u, v])).astype(np.int32))
-    active0 = affected_vertices(g, C_prev, touched)
-    two_m = g.total_weight_2m()
-    C, _, it = warm_local_move(
-        g.src, g.dst, g.w, C_prev, two_m, active0,
-        tau=tau, max_iters=max_iters, scan=scan,
-    )
-    labels, _ = split_labels(g.src, g.dst, g.w, C,
-                             impl="dense" if scan == "dense" else "coo")
-    C_new, n_comms = seg.renumber(labels, g.node_mask(), g.nv)
+    t = jnp.asarray(touched_mask(g.nv, u, v))
+    out = warm_update(g, jnp.asarray(C_prev), t,
+                      tau=tau, max_iters=max_iters, scan=scan)
     stats = dict(
-        iterations=it,
-        n_communities=n_comms,
-        n_affected=jnp.sum(active0.astype(jnp.int32)),
+        iterations=out["iterations"],
+        n_communities=out["n_communities"],
+        n_affected=out["n_affected"],
+        n_disconnected=out["n_disconnected"],
+        q=out["q"],
     )
-    return g, C_new, stats
+    return g, out["C"], stats

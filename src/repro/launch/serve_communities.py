@@ -1,6 +1,6 @@
 """Community-detection service entrypoint + synthetic traffic drivers.
 
-Two drivers share the synthetic request families (three graph sizes
+Three drivers share the synthetic request families (three graph sizes
 landing in three buckets, plus warm edge updates):
 
 * default (sync pump): PR-1 style closed-loop traffic through the
@@ -12,9 +12,18 @@ landing in three buckets, plus warm edge updates):
   busy, so queue overflow is *rejected* (counted per tenant), heavy
   tenants cannot starve light ones (weighted DRR), and the report breaks
   served/rejected/latency down per tenant.
+* ``--churn``: a fully-dynamic update-dominated workload — every graph
+  is detected once, then churned with mixed batches of edge additions,
+  weight deltas and **deletions** served through the *batched* warm path
+  (``update_batch_size > 1``).  ``--churn --smoke`` asserts the dynamic
+  invariants: zero internally-disconnected communities across the whole
+  store after every delete, update batches actually dispatched vmapped,
+  deletions freeing capacity, and an add-then-delete round trip
+  restoring the original partition stats.
 
   PYTHONPATH=src python -m repro.launch.serve_communities --smoke
   PYTHONPATH=src python -m repro.launch.serve_communities --async --smoke
+  PYTHONPATH=src python -m repro.launch.serve_communities --churn --smoke
   PYTHONPATH=src python -m repro.launch.serve_communities \
       --async --tenants 4 --requests 200 --max-pending 12 --batch 16
 """
@@ -60,6 +69,38 @@ def synth_updates(entry, seed: int, n_edges: int = 4):
     v = rng.integers(0, n, n_edges)
     keep = u != v
     return u[keep], v[keep], np.ones(int(keep.sum()), np.float32)
+
+
+def live_pairs(graph):
+    """Host-side (u, v, w) of the live undirected pairs (u < v)."""
+    src = np.asarray(graph.src)
+    dst = np.asarray(graph.dst)
+    w = np.asarray(graph.w)
+    mask = (src < graph.n_cap) & (src < dst)
+    return src[mask], dst[mask], w[mask]
+
+
+def synth_churn_updates(entry, seed: int):
+    """A mixed fully-dynamic batch: delete 1-2 live edges outright
+    (negative full weight), halve another's weight, add 1-2 new edges."""
+    rng = np.random.default_rng(seed)
+    n = int(entry.graph.n_nodes)
+    lu, lv, lw = live_pairs(entry.graph)
+    us, vs, ws = [], [], []
+    if len(lu) > 8:
+        idx = rng.choice(len(lu), int(rng.integers(2, 4)), replace=False)
+        dele, half = idx[:-1], idx[-1:]
+        us += [lu[dele], lu[half]]
+        vs += [lv[dele], lv[half]]
+        ws += [-lw[dele], -lw[half] / 2]
+    au = rng.integers(0, n, int(rng.integers(1, 3)))
+    av = rng.integers(0, n, len(au))
+    keep = au != av
+    us.append(au[keep])
+    vs.append(av[keep])
+    ws.append(np.ones(int(keep.sum()), np.float32))
+    return (np.concatenate(us), np.concatenate(vs),
+            np.concatenate(ws).astype(np.float32))
 
 
 # ---------------------------------------------------------------------------
@@ -116,6 +157,84 @@ def run_traffic(svc: CommunityService, *, n_requests: int, update_frac: float,
         print(f"throughput {report['graphs_per_s']:8.1f} graphs/s   "
               f"{report['edges_per_s']:,.0f} edges/s")
     return report
+
+
+# ---------------------------------------------------------------------------
+# churn driver: fully-dynamic update-dominated traffic (batched warm path)
+# ---------------------------------------------------------------------------
+
+def run_churn_traffic(svc: CommunityService, *, n_graphs: int = 9,
+                      n_rounds: int = 10, seed: int = 0,
+                      verbose: bool = True):
+    """Detect ``n_graphs`` once, then serve ``n_rounds`` churn rounds of
+    mixed add/delta/delete batches through the batched warm path."""
+    rng = np.random.default_rng(seed)
+    gids = []
+    for i in range(n_graphs):
+        fam = FAMILIES[i % len(FAMILIES)]
+        gid = f"c{i}-{fam}"
+        svc.submit_detect(gid, synth_graph(fam, seed + i))
+        gids.append(gid)
+    svc.drain()
+    svc.metrics.reset()          # churn metrics exclude the seeding phase
+
+    for r in range(n_rounds):
+        order = rng.permutation(len(gids))
+        for j in order:
+            gid = gids[int(j)]
+            entry = svc.result(gid)
+            if entry is None:        # evicted/re-bucketing in flight
+                continue
+            svc.submit_update(gid, synth_churn_updates(
+                entry, seed + 997 * r + int(j)))
+        svc.pump()                   # full update batches dispatch vmapped
+    svc.drain()
+
+    report = svc.metrics.report()
+    if verbose:
+        print(f"churn: {report['n_update']} updates in "
+              f"{report['n_update_batches']} vmapped batches "
+              f"(mean width {report['update_batch_mean']:.1f}), "
+              f"{report['n_deletions']} directed deletions, "
+              f"{report['n_rebucketed']} re-bucketed")
+        print(f"update latency p50 {report['p50_update_ms']:8.1f} ms   "
+              f"throughput {report['graphs_per_s']:8.1f} graphs/s")
+    return report
+
+
+def _assert_round_trip(svc: CommunityService, seed: int):
+    """Add a batch, delete the same batch: the graph (and its partition
+    stats) must come back exactly — deletions are true inverses and the
+    freed slots are reusable."""
+    gid = "round-trip"
+    svc.submit_detect(gid, synth_graph("ego_small", seed))
+    svc.drain()
+    e0 = svc.result(gid)
+    n = int(e0.graph.n_nodes)
+    lu, lv, _ = live_pairs(e0.graph)
+    have = set(zip(lu.tolist(), lv.tolist()))
+    # intra-community non-edges: adding them reinforces the partition
+    # (no membership change), so deleting them must restore it exactly
+    C = np.asarray(e0.C)
+    pairs = [(u, v) for u in range(n) for v in range(u + 1, n)
+             if (u, v) not in have and C[u] == C[v]][:5]
+    u = np.array([p[0] for p in pairs])
+    v = np.array([p[1] for p in pairs])
+    w = np.ones(len(pairs), np.float32)
+    svc.submit_update(gid, (u, v, w))
+    svc.drain()
+    assert float(svc.result(gid).graph.total_weight_2m()) \
+        == float(e0.graph.total_weight_2m()) + 2 * len(pairs)
+    svc.submit_update(gid, (u, v, -w))
+    svc.drain()
+    e2 = svc.result(gid)
+    assert float(e2.graph.total_weight_2m()) \
+        == float(e0.graph.total_weight_2m()), "round trip weight drifted"
+    assert np.array_equal(np.asarray(e2.graph.src),
+                          np.asarray(e0.graph.src)), "edge layout drifted"
+    assert e2.n_communities == e0.n_communities
+    assert e2.n_disconnected == 0
+    assert abs(e2.q - e0.q) <= 1e-6, (e2.q, e0.q)
 
 
 # ---------------------------------------------------------------------------
@@ -256,12 +375,57 @@ async def main_async(args):
 
 # ---------------------------------------------------------------------------
 
+def main_churn(args):
+    n_graphs = 9 if args.smoke else max(9, args.requests // 4)
+    n_rounds = 6 if args.smoke else args.rounds
+    update_batch = args.update_batch or args.batch
+    config = ServiceConfig(
+        louvain=LouvainConfig(), batch_size=args.batch,
+        max_delay_s=args.max_delay_ms / 1e3, sub_batch=args.sub_batch,
+        update_batch_size=update_batch,
+    )
+    svc = CommunityService(config=config)
+    t0 = time.perf_counter()
+    report = run_churn_traffic(svc, n_graphs=n_graphs, n_rounds=n_rounds,
+                               seed=args.seed)
+    print(f"wall time {time.perf_counter() - t0:.1f}s "
+          f"(incl. warmup compile)")
+
+    if args.smoke:
+        assert report["n_update"] >= n_graphs * n_rounds * 0.8, \
+            f"churn served too few updates: {report['n_update']}"
+        assert report["n_update_batches"] >= 1, \
+            "no vmapped update batch dispatched"
+        assert report["update_batch_mean"] > 1.0, \
+            "update batches never exceeded width 1"
+        assert report["n_deletions"] > 0, "no deletions applied"
+        assert svc.frontend.pending_updates() == 0, \
+            "drain left updates queued"
+        # the paper's guarantee must survive deletions, not just additions
+        bad = [gid for gid in list(svc.store._entries)
+               if svc.store.get(gid).n_disconnected != 0]
+        assert not bad, f"disconnected communities served: {bad}"
+        _assert_round_trip(svc, seed=args.seed + 10_000)
+        print(f"CHURN SMOKE OK ({report['n_update']} updates, "
+              f"{report['n_deletions']} deletions, "
+              f"{report['n_update_batches']} batches)")
+    return report
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small fixed workload + invariant checks (CI)")
     ap.add_argument("--async", dest="async_", action="store_true",
                     help="futures front end + multi-tenant open-loop load")
+    ap.add_argument("--churn", action="store_true",
+                    help="fully-dynamic update-dominated workload with "
+                         "deletions through the batched warm path")
+    ap.add_argument("--update-batch", type=int, default=None,
+                    help="warm-update batch width (--churn; default: "
+                         "--batch)")
+    ap.add_argument("--rounds", type=int, default=10,
+                    help="churn rounds over the resident graphs (--churn)")
     ap.add_argument("--requests", type=int, default=120)
     ap.add_argument("--tenants", type=int, default=3,
                     help="tenant count for the --async load mix")
@@ -286,6 +450,9 @@ def main(argv=None):
         if args.smoke:
             args.max_pending = 8    # whale bursts of 12 must overflow
         return asyncio.run(main_async(args))
+
+    if args.churn:
+        return main_churn(args)
 
     svc = CommunityService(
         LouvainConfig(), batch_size=args.batch,

@@ -21,9 +21,11 @@ stack:
   :class:`AsyncCommunityService` (asyncio dispatcher task; submissions
   return awaitable :class:`DetectionFuture`\\ s).
 * :mod:`repro.service.store`     — per-graph partition + stats store with
-  versioned invalidation and LRU/TTL eviction; edge updates route through
-  the delta-screening warm path (:mod:`repro.core.dynamic`) instead of
-  full recompute.
+  versioned invalidation and LRU/TTL eviction; edge updates are **signed
+  weight-deltas** (insertions, decreases, deletions with capacity reuse)
+  routed through the delta-screening warm path (:mod:`repro.core.dynamic`)
+  instead of full recompute, immediately or batched through the vmapped
+  engine path (``ServiceConfig.update_batch_size``).
 * :mod:`repro.service.service`   — :class:`CommunityService`, the thin
   synchronous pump adapter over the front end (PR-1 API preserved).
 * :mod:`repro.service.metrics`   — latency/throughput metrics with
@@ -36,13 +38,17 @@ from repro.service.admission import (
 from repro.service.buckets import (
     Bucket, DEFAULT_BUCKETS, choose_bucket, choose_scan,
 )
-from repro.service.engine import BatchedLouvainEngine, DetectResult
+from repro.service.engine import (
+    BatchedLouvainEngine, DetectResult, UpdateResult,
+)
 from repro.service.frontend import (
     AsyncCommunityService, DetectionFuture, ServiceFrontend,
 )
 from repro.service.metrics import ServiceMetrics, TenantMetrics
 from repro.service.service import CommunityService
-from repro.service.store import CapacityExceeded, ResultStore, StoreEntry
+from repro.service.store import (
+    CapacityExceeded, ResultStore, StoreEntry, UpdatePlan,
+)
 
 __all__ = [
     "AdmissionController",
@@ -63,6 +69,8 @@ __all__ = [
     "ServiceMetrics",
     "StoreEntry",
     "TenantMetrics",
+    "UpdatePlan",
+    "UpdateResult",
     "choose_bucket",
     "choose_scan",
 ]

@@ -56,6 +56,14 @@ class ServiceConfig:
                    once its oldest request has waited this long.
       sub_batch:   engine tile width; None = backend-keyed auto.
 
+    Warm updates:
+      update_batch_size: >1 queues edge updates per bucket and dispatches
+                   them through the engine's vmapped warm path (the
+                   update analogue of detect batching); 1 (default) keeps
+                   the immediate per-call path.
+      update_max_delay_s: flush bound for a partial update batch; None
+                   inherits ``max_delay_s``.
+
     Dense/sort scan crossover (see :func:`repro.service.buckets.choose_scan`):
       dense_max_nv / dense_small_nv / dense_min_density.
 
@@ -74,6 +82,8 @@ class ServiceConfig:
     batch_size: int = 32
     max_delay_s: float = 0.05
     sub_batch: Optional[int] = None
+    update_batch_size: int = 1
+    update_max_delay_s: Optional[float] = None
     dense_max_nv: int = 1025
     dense_small_nv: int = 129
     dense_min_density: float = 0.02
@@ -85,6 +95,9 @@ class ServiceConfig:
     def __post_init__(self):
         if self.batch_size < 1:
             raise ValueError(f"batch_size must be >= 1, got {self.batch_size}")
+        if self.update_batch_size < 1:
+            raise ValueError(f"update_batch_size must be >= 1, got "
+                             f"{self.update_batch_size}")
         if self.max_pending_per_tenant < 1:
             raise ValueError("max_pending_per_tenant must be >= 1, got "
                              f"{self.max_pending_per_tenant}")

@@ -11,6 +11,14 @@ batched path reuses the very same pass driver under ``vmap``, and the dense
 scan it selects for small buckets is bit-equivalent to the sortscan (see
 core/local_move.py).
 
+The engine also owns the **batched warm-update path**
+(:meth:`BatchedLouvainEngine.update_batch`): same-bucket delta-screened
+updates — graphs already rewritten host-side by
+:func:`repro.core.dynamic.apply_edge_updates` — run as one jitted
+``lax.map(vmap(warm_update_impl))`` call, the exact compute the store's
+immediate path runs per graph, so batched and sequential partitions
+agree exactly.
+
 Sub-batching: inside the one jitted call, the batch is laid out as
 ``[n_tiles, sub_batch, ...]`` and processed by ``lax.map`` over vmapped
 tiles.  Two reasons: (1) a vmapped ``while_loop`` runs every element for
@@ -26,14 +34,16 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
     LouvainConfig, disconnected_communities_impl, louvain_impl, modularity,
 )
+from repro.core.dynamic import warm_update_impl
 from repro.graph.container import Graph, stack_graphs
 from repro.service.buckets import Bucket, bucket_of, choose_scan, filler
 
@@ -48,6 +58,23 @@ class DetectResult:
     fraction: float              # disconnected fraction (paper metric)
     passes: int
     q: float                     # modularity of the returned partition
+
+
+@dataclasses.dataclass
+class UpdateResult:
+    """Per-graph warm-update output (host-side)."""
+
+    C: np.ndarray                # int32[nv] dense membership after the update
+    n_communities: int
+    n_disconnected: int          # 0 by construction (split pass re-runs)
+    fraction: float
+    iterations: int              # warm local-move sweeps
+    q: float
+
+
+# (bucket-padded updated graph, previous membership int32[nv],
+#  touched-endpoint mask bool[nv]) — see ResultStore.prepare_update
+UpdateItem = Tuple[Graph, np.ndarray, np.ndarray]
 
 
 class BatchedLouvainEngine:
@@ -111,6 +138,25 @@ class BatchedLouvainEngine:
         if fn is None:
             tile = jax.vmap(partial(self._one, scan=scan))
             fn = jax.jit(lambda gt: jax.lax.map(tile, gt))
+            self._compiled[key] = fn
+        return fn
+
+    def update_fn(self, bucket: Bucket, n_tiles: int, *, tau: float = 1e-3,
+                  max_iters: int = 10):
+        """The jitted executable for a (bucket, n_tiles x sub_batch) batch
+        of warm updates: ``lax.map`` of the vmapped
+        :func:`repro.core.dynamic.warm_update_impl` — the same compute the
+        store's immediate path runs, batched."""
+        scan = self.scan_for(bucket)
+        key = (bucket, n_tiles, self.sub_batch, scan, "update",
+               float(tau), int(max_iters))
+        fn = self._compiled.get(key)
+        if fn is None:
+            one = partial(warm_update_impl, tau=tau, max_iters=max_iters,
+                          scan=scan)
+            tile = jax.vmap(lambda g, C, t: one(g, C, t))
+            fn = jax.jit(lambda gt, Ct, Tt: jax.lax.map(
+                lambda args: tile(*args), (gt, Ct, Tt)))
             self._compiled[key] = fn
         return fn
 
@@ -183,3 +229,81 @@ class BatchedLouvainEngine:
 
     def detect_one(self, g: Graph) -> DetectResult:
         return self.detect_batch([g])[0]
+
+    # -- batched warm updates ---------------------------------------------
+    def update_batch(self, items: Sequence[UpdateItem], *, tau: float = 1e-3,
+                     max_iters: int = 10) -> list[UpdateResult]:
+        """Run a homogeneous (same-bucket) batch of delta-screened warm
+        updates with one jitted call.
+
+        ``items``: (updated graph, previous membership int32[nv], touched
+        mask bool[nv]) triples — the graphs already carry the applied edge
+        deltas (:func:`repro.core.dynamic.apply_edge_updates`); this method
+        batches the device side: screening, warm local move, split,
+        renumber, detector, modularity.  Partitions are exactly what the
+        sequential warm path produces per graph.
+        """
+        items = list(items)
+        if not items:
+            return []
+        bucket = bucket_of(items[0][0])
+        b = self.sub_batch
+        n = len(items)
+        n_tiles = 1 << (-(-n // b) - 1).bit_length()
+        if n_tiles * b > n:
+            items = items + [self._filler_update(bucket)] * (n_tiles * b - n)
+        gb = stack_graphs([g for g, _, _ in items])
+        nv = bucket.nv
+        Cb = jnp.asarray(np.stack([np.asarray(C, np.int32)
+                                   for _, C, _ in items]))
+        Tb = jnp.asarray(np.stack([np.asarray(t, bool)
+                                   for _, _, t in items]))
+        tiled_g = Graph(
+            src=gb.src.reshape(n_tiles, b, -1),
+            dst=gb.dst.reshape(n_tiles, b, -1),
+            w=gb.w.reshape(n_tiles, b, -1),
+            n_nodes=gb.n_nodes.reshape(n_tiles, b),
+            n_cap=gb.n_cap, m_cap=gb.m_cap,
+        )
+        out = self.update_fn(bucket, n_tiles, tau=tau, max_iters=max_iters)(
+            tiled_g, Cb.reshape(n_tiles, b, nv), Tb.reshape(n_tiles, b, nv))
+        flat = {k: np.asarray(v).reshape((n_tiles * b,) + v.shape[2:])
+                for k, v in out.items()}
+        return [
+            UpdateResult(
+                C=flat["C"][i],
+                n_communities=int(flat["n_communities"][i]),
+                n_disconnected=int(flat["n_disconnected"][i]),
+                fraction=float(flat["fraction"][i]),
+                iterations=int(flat["iterations"][i]),
+                q=float(flat["q"][i]),
+            )
+            for i in range(n)
+        ]
+
+    def _filler_update(self, bucket: Bucket) -> UpdateItem:
+        """Bucket-shaped no-op update padding a partial batch: the filler
+        graph at its identity partition with nothing touched."""
+        nv = bucket.nv
+        return (filler(bucket), np.arange(nv, dtype=np.int32),
+                np.zeros((nv,), bool))
+
+    def warm_updates(self, bucket: Bucket, max_batch: int, *,
+                     tau: float = 1e-3, max_iters: int = 10) -> int:
+        """Pre-compile the pow2 tile ladder for the batched update path
+        (mirror of :meth:`warm` for detections)."""
+        n = 0
+        scan = self.scan_for(bucket)
+        tiles = 1
+        while True:
+            key = (bucket, tiles, self.sub_batch, scan, "update",
+                   float(tau), int(max_iters))
+            if key not in self._compiled:
+                self.update_batch(
+                    [self._filler_update(bucket)] * (tiles * self.sub_batch),
+                    tau=tau, max_iters=max_iters)
+                n += 1
+            if tiles * self.sub_batch >= max(max_batch, self.sub_batch):
+                break
+            tiles *= 2
+        return n

@@ -10,6 +10,19 @@ Two layers, ONE code path:
   Everything the sync adapter (:class:`repro.service.service.
   CommunityService`) and the async front end do funnels through these
   methods — there is no behavior fork between the two.
+
+  Edge updates are fully dynamic (signed weight-deltas, deletions free
+  capacity) and, with ``ServiceConfig.update_batch_size > 1``, are
+  **batched like detections**: submissions queue per bucket, compose into
+  batches (full, stale past ``update_max_delay_s``, or forced), fold
+  same-graph batches in submit order (batch-wise, so deletion clamping
+  behaves exactly as if each batch had been applied immediately), and
+  dispatch through the engine's vmapped warm path
+  (:meth:`repro.service.engine.BatchedLouvainEngine.update_batch`) —
+  identical partitions to the immediate per-call path, amortized
+  dispatch cost.  Updates never count against the tenant queue
+  bound (like the rebucket continuation, a queued update references store
+  state that a drop would strand).
 * :class:`AsyncCommunityService` — the asyncio front end: a dispatcher
   task wakes on submissions (or a poll tick for deadline/max-delay
   flushes), offloads engine/update compute to a single-worker executor so
@@ -26,13 +39,17 @@ from __future__ import annotations
 
 import asyncio
 import concurrent.futures
+import dataclasses
 import itertools
+import threading
 import time
+from collections import OrderedDict
 from functools import partial
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.dynamic import merge_edge_deltas, directed_deltas
 from repro.graph.container import Graph, from_coo
 from repro.service.admission import (
     DEFAULT_TENANT, AdmissionController, PendingRequest, QueueFull,
@@ -100,7 +117,22 @@ class DetectionFuture:
                 f"kind={self.kind}, {state})")
 
 
-Batch = Tuple[Bucket, List[PendingRequest]]
+@dataclasses.dataclass
+class UpdateRequest:
+    """A queued warm-update awaiting batched dispatch (the deltas are
+    merged with same-graph predecessors at compose time)."""
+
+    graph_id: str
+    tenant: str
+    u: np.ndarray
+    v: np.ndarray
+    w: np.ndarray                # signed weight-deltas
+    t_submit: float
+    future: DetectionFuture
+
+
+# ("detect", bucket, [PendingRequest]) or ("update", bucket, [UpdateRequest])
+Batch = Tuple[str, Bucket, list]
 
 
 class ServiceFrontend:
@@ -127,6 +159,11 @@ class ServiceFrontend:
         # monotonic request ids: never reuses after a dispatch (the old
         # n_detect + pending() scheme collided once requests were served)
         self._seq = itertools.count()
+        # queued warm updates per bucket (update_batch_size > 1); guarded
+        # by its own lock — the async path submits from the event loop
+        # while the compute thread collects
+        self._updates: Dict[Bucket, List[UpdateRequest]] = {}
+        self._upd_lock = threading.Lock()
 
     # -- request entry points ---------------------------------------------
     def submit_detect(self, graph_id: str, graph: Graph, *,
@@ -170,17 +207,34 @@ class ServiceFrontend:
 
     def submit_update(self, graph_id: str, updates, *,
                       tenant: str = DEFAULT_TENANT) -> DetectionFuture:
-        """Apply an edge-update batch through the warm path, immediately.
+        """Route an edge-update batch (signed weight-deltas) to the warm
+        path.
 
-        Returns an already-resolved ``kind="update"`` future, or — when
-        the update overflows its bucket — the pending ``kind="detect"``
-        future of the re-bucketed request.  Raises KeyError for unknown
-        (or evicted/expired) graph ids.
+        With ``update_batch_size == 1`` (default) the update is applied
+        immediately: returns an already-resolved ``kind="update"`` future,
+        or — when the update overflows its bucket — the pending
+        ``kind="detect"`` future of the re-bucketed request.  With
+        ``update_batch_size > 1`` the update is queued for the vmapped
+        batched warm path and the returned ``kind="update"`` future
+        resolves at dispatch (a dispatch-time overflow chains the future
+        to the re-bucketed detect).  Raises KeyError for unknown (or
+        evicted/expired) graph ids.
         """
         t0 = self.clock()
         entry = self.store.get(graph_id)
         if entry is None:
             raise KeyError(f"no stored partition for {graph_id!r}")
+        if self.config.update_batch_size > 1:
+            u, v, w = (np.asarray(x) for x in updates)
+            fut = DetectionFuture(
+                f"u{next(self._seq)}-{graph_id}", tenant, graph_id,
+                "update", t0)
+            with self._upd_lock:
+                self._updates.setdefault(entry.bucket, []).append(
+                    UpdateRequest(graph_id=graph_id, tenant=tenant,
+                                  u=u, v=v, w=w, t_submit=t0, future=fut))
+            return fut
+        n_del0 = self.store.n_deletions
         try:
             new = self.store.apply_update(graph_id, updates)
         except CapacityExceeded:
@@ -189,13 +243,14 @@ class ServiceFrontend:
             # is exempt from the tenant queue bound: a QueueFull here
             # would lose the graph's result with nothing queued to
             # replace it.
-            g = _graph_with_updates(entry.graph, updates)
+            g = _graph_with_updates(entry.graph, [updates])
             self.metrics.n_rebucketed += 1
             return self.submit_detect(graph_id, g, tenant=tenant,
                                       exempt_bound=True)
         now = self.clock()
         self.metrics.observe("update", now - t0, now, tenant=tenant)
         self.metrics.edges_processed += float(live_edges(new.graph))
+        self.metrics.n_deletions += self.store.n_deletions - n_del0
         fut = DetectionFuture(
             f"u{next(self._seq)}-{graph_id}", tenant, graph_id, "update", t0)
         fut.set_result(new)
@@ -203,9 +258,9 @@ class ServiceFrontend:
 
     # -- dispatch ---------------------------------------------------------
     def collect(self, *, force: bool = False) -> List[Batch]:
-        """Compose every ready bucket batch (weighted DRR across tenants);
-        loops until no bucket is ready, so a backlog drains in
-        batch-size-wide slices."""
+        """Compose every ready bucket batch (weighted DRR across tenants)
+        plus every ready warm-update batch; loops until no bucket is
+        ready, so a backlog drains in batch-size-wide slices."""
         batches: List[Batch] = []
         while True:
             got = 0
@@ -213,10 +268,33 @@ class ServiceFrontend:
                                                        force=force):
                 reqs = self.admission.compose(bucket)
                 if reqs:
-                    batches.append((bucket, reqs))
+                    batches.append(("detect", bucket, reqs))
                     got += len(reqs)
             if not got:
                 break
+        batches.extend(self._collect_updates(force=force))
+        return batches
+
+    def _collect_updates(self, *, force: bool = False) -> List[Batch]:
+        """Pop ready per-bucket update batches: full
+        (``update_batch_size``), stale (oldest waited past
+        ``update_max_delay_s``), or anything under ``force``."""
+        size = self.config.update_batch_size
+        if size <= 1:
+            return []
+        max_delay = (self.config.update_max_delay_s
+                     if self.config.update_max_delay_s is not None
+                     else self.config.max_delay_s)
+        now = self.clock()
+        batches: List[Batch] = []
+        with self._upd_lock:
+            for bucket, q in list(self._updates.items()):
+                while q and (force or len(q) >= size
+                             or now - q[0].t_submit >= max_delay):
+                    batches.append(("update", bucket, q[:size]))
+                    del q[:size]
+                if not q:
+                    del self._updates[bucket]
         return batches
 
     def execute(self, batches: List[Batch]) -> int:
@@ -224,7 +302,10 @@ class ServiceFrontend:
         futures.  An engine failure fails that batch's futures (counted)
         and the remaining batches still run — the dispatcher survives."""
         served = 0
-        for bucket, reqs in batches:
+        for kind, bucket, reqs in batches:
+            if kind == "update":
+                served += self._execute_updates(bucket, reqs)
+                continue
             try:
                 results = self.engine.detect_batch([r.graph for r in reqs])
             except Exception as e:
@@ -246,6 +327,73 @@ class ServiceFrontend:
                 served += 1
         return served
 
+    def _execute_updates(self, bucket: Bucket, ureqs) -> int:
+        """Dispatch one composed update batch through the vmapped warm
+        path: fold same-graph batches in submit order (one prepared plan
+        per graph, batch-wise — identical semantics to applying each
+        immediately), run the engine per bucket, commit entries, resolve
+        every queued future with its graph's refreshed entry."""
+        by_gid: "OrderedDict[str, List[UpdateRequest]]" = OrderedDict()
+        for r in ureqs:
+            by_gid.setdefault(r.graph_id, []).append(r)
+        plans, plan_reqs = [], []
+        for gid, rs in by_gid.items():
+            batches = [(r.u, r.v, r.w) for r in rs]
+            entry = self.store.get(gid)
+            try:
+                if entry is None:   # evicted/expired since submit
+                    raise KeyError(gid)
+                plans.append(self.store.prepare_update_seq(gid, batches))
+                plan_reqs.append(rs)
+            except CapacityExceeded:
+                # same continuation as the immediate path: re-detect the
+                # merged graph, exempt from the tenant bound, and chain
+                # the queued futures to the re-bucketed detect
+                g = _graph_with_updates(entry.graph, batches)
+                self.metrics.n_rebucketed += 1
+                fut2 = self.submit_detect(gid, g, tenant=rs[0].tenant,
+                                          exempt_bound=True)
+                for r in rs:
+                    _chain(fut2, r.future)
+            except Exception as e:      # malformed batch, evicted entry, ..
+                for r in rs:
+                    self.metrics.fail(r.tenant)
+                    r.future.set_exception(e)
+        # group by the plans' CURRENT bucket: an interleaved re-detect can
+        # have re-bucketed a graph since its update was queued, and one
+        # stale-bucket plan must not fail the whole engine batch
+        groups: "OrderedDict[Bucket, List[int]]" = OrderedDict()
+        for i, p in enumerate(plans):
+            groups.setdefault(p.bucket, []).append(i)
+        served = 0
+        for idxs in groups.values():
+            try:
+                results = self.engine.update_batch(
+                    [(plans[i].graph, plans[i].C_prev, plans[i].touched)
+                     for i in idxs])
+            except Exception as e:
+                for i in idxs:
+                    for r in plan_reqs[i]:
+                        self.metrics.fail(r.tenant)
+                        r.future.set_exception(e)
+                continue
+            now = self.clock()
+            for i, res in zip(idxs, results):
+                plan = plans[i]
+                entry = self.store.commit_update(
+                    plan, C=res.C, n_communities=res.n_communities,
+                    n_disconnected=res.n_disconnected, q=res.q)
+                self.metrics.edges_processed += float(live_edges(plan.graph))
+                self.metrics.n_deletions += plan.n_deleted
+                for r in plan_reqs[i]:
+                    self.metrics.observe("update", now - r.t_submit, now,
+                                         tenant=r.tenant)
+                    r.future.set_result(entry)
+                    served += 1
+            self.metrics.n_update_batches += 1
+            self.metrics.n_updates_batched += len(idxs)
+        return served
+
     def dispatch(self, *, force: bool = False) -> int:
         """Collect + execute every ready batch; returns served count."""
         return self.execute(self.collect(force=force))
@@ -253,7 +401,7 @@ class ServiceFrontend:
     def drain(self) -> int:
         """Flush every queue regardless of batch fill / deadlines."""
         served = 0
-        while self.admission.pending():
+        while self.admission.pending() or self.pending_updates():
             served += self.dispatch(force=True)
         return served
 
@@ -263,6 +411,19 @@ class ServiceFrontend:
 
     def pending(self, tenant: Optional[str] = None) -> int:
         return self.admission.pending(tenant)
+
+    def pending_updates(self) -> int:
+        """Queued (not yet dispatched) warm updates across buckets."""
+        with self._upd_lock:
+            return sum(len(q) for q in self._updates.values())
+
+    def evict_updates(self) -> List[UpdateRequest]:
+        """Pop every queued update (service shutdown) so the caller can
+        cancel the attached futures."""
+        with self._upd_lock:
+            out = [r for q in self._updates.values() for r in q]
+            self._updates.clear()
+            return out
 
 
 class AsyncCommunityService:
@@ -348,6 +509,8 @@ class AsyncCommunityService:
         for req in self.frontend.admission.evict_all():
             if req.future is not None:
                 req.future.cancel()
+        for ureq in self.frontend.evict_updates():
+            ureq.future.cancel()
         for w in self._slot_waiters:
             if not w.done():
                 w.cancel()
@@ -423,26 +586,40 @@ class AsyncCommunityService:
             batches = self.frontend.collect(force=True)
             if batches:
                 served += await self._execute(batches)
-            elif self._inflight or self.frontend.pending():
+            elif (self._inflight or self.frontend.pending()
+                  or self.frontend.pending_updates()):
                 await asyncio.sleep(self._poll_s / 4)
             else:
                 break
         return served
 
 
-def _graph_with_updates(g: Graph, updates) -> Graph:
-    """Rebuild a plain (unpadded-capacity) graph with an edge batch merged
-    in — the re-bucketing fallback when updates overflow a bucket."""
-    u, v, w = (np.asarray(x) for x in updates)
-    src = np.asarray(g.src)
-    dst = np.asarray(g.dst)
-    ww = np.asarray(g.w)
-    mask = src < g.n_cap
-    loops = u == v
-    new_src = np.concatenate(
-        [src[mask], u[~loops], v[~loops], u[loops]]).astype(np.int32)
-    new_dst = np.concatenate(
-        [dst[mask], v[~loops], u[~loops], u[loops]]).astype(np.int32)
-    new_w = np.concatenate(
-        [ww[mask], w[~loops], w[~loops], w[loops]]).astype(np.float32)
-    return from_coo(int(g.n_nodes), new_src, new_dst, new_w)
+def _graph_with_updates(g: Graph, batches) -> Graph:
+    """Rebuild a plain (unpadded-capacity) graph with edge-delta batches
+    folded in, in order — the re-bucketing fallback when updates overflow
+    a bucket.  Same batch-wise delta semantics as the in-place path
+    (per-batch deletion clamping), without a capacity ceiling."""
+    for updates in batches:
+        u, v, w = (np.asarray(x) for x in updates)
+        src, dst, ww = merge_edge_deltas(g, *directed_deltas(u, v, w))
+        g = from_coo(int(g.n_nodes), src, dst, ww)
+    return g
+
+
+def _chain(src_fut: DetectionFuture, dst_fut: DetectionFuture):
+    """Resolve ``dst_fut`` with ``src_fut``'s outcome when it lands (a
+    queued update whose dispatch re-bucketed into a detect)."""
+    def _copy(f: DetectionFuture):
+        try:
+            exc = f.exception()
+        except concurrent.futures.CancelledError:
+            # service shutdown cancelled the chained detect; a cancelled
+            # Future RAISES from exception(), and letting that escape
+            # the callback would leave dst_fut pending forever
+            dst_fut.cancel()
+            return
+        if exc is not None:
+            dst_fut.set_exception(exc)
+        else:
+            dst_fut.set_result(f.result())
+    src_fut.add_done_callback(_copy)

@@ -48,6 +48,9 @@ class ServiceMetrics:
     n_rebucketed: int = 0
     n_rejected: int = 0
     n_failed: int = 0
+    n_update_batches: int = 0        # vmapped warm-path dispatches
+    n_updates_batched: int = 0       # graphs served via update batches
+    n_deletions: int = 0             # directed edges removed by updates
     edges_processed: float = 0.0     # directed edges through the engine
     t_first: Optional[float] = None
     t_last: Optional[float] = None
@@ -95,6 +98,10 @@ class ServiceMetrics:
             n_rebucketed=self.n_rebucketed,
             n_rejected=self.n_rejected,
             n_failed=self.n_failed,
+            n_update_batches=self.n_update_batches,
+            n_deletions=self.n_deletions,
+            update_batch_mean=(self.n_updates_batched / self.n_update_batches
+                               if self.n_update_batches else float("nan")),
             p50_ms=percentile(lat, 50) * 1e3,
             p99_ms=percentile(lat, 99) * 1e3,
             p50_detect_ms=percentile(self.detect_latency_s, 50) * 1e3,

@@ -92,11 +92,14 @@ class CommunityService:
 
     def submit_update(self, graph_id: str, updates, *,
                       tenant: str = DEFAULT_TENANT) -> bool:
-        """Apply an edge-update batch through the warm path, immediately.
+        """Route an edge batch of signed weight-deltas to the warm path.
 
-        Returns True if served warm; False if the entry had to be
-        re-bucketed (a fresh detect request was queued with the updated
-        edge set).  Raises KeyError for unknown graph ids.
+        Immediate with ``update_batch_size == 1`` (the default); queued
+        for the vmapped batched warm path otherwise (``pump``/``drain``
+        dispatches it).  Returns True if routed warm; False if the entry
+        had to be re-bucketed immediately (a fresh detect request was
+        queued with the updated edge set).  Raises KeyError for unknown
+        graph ids.
         """
         return self.frontend.submit_update(
             graph_id, updates, tenant=tenant).kind == "update"

@@ -1,14 +1,31 @@
 """Incremental result store: partitions + stats per graph, with versioned
-invalidation, a delta-screening update path, and LRU/TTL eviction.
+invalidation, a fully-dynamic delta-screening update path, and LRU/TTL
+eviction.
 
 The store keeps, per graph id, the bucket-padded graph, its current dense
 membership, detection stats, and a monotonically increasing version.  Edge
 updates do NOT trigger a full recompute: they route through the
-delta-screening warm start (:func:`repro.core.dynamic.update_communities`),
-which perturbs only the neighborhood of the changed edges and re-runs the
-split so the no-disconnected-communities guarantee survives updates.  If an
-update overflows the bucket's edge capacity the entry is invalidated and
-the caller falls back to a fresh detect request (re-bucketing).
+delta-screening warm start (:func:`repro.core.dynamic.warm_update`), which
+perturbs only the neighborhood of the changed edges and re-runs the split
+so the no-disconnected-communities guarantee survives updates.  Updates
+are **signed weight-deltas**: positive deltas add weight / insert edges,
+negative deltas decrease weight, and an edge driven to ``<= 0`` is deleted
+(its capacity slot is compacted back into the padding pool for reuse).  If
+an update overflows the bucket's edge capacity the entry is invalidated
+and the caller falls back to a fresh detect request (re-bucketing).
+
+The update path is split in two so the service can batch it:
+
+* :meth:`ResultStore.prepare_update` — host-side: validate, apply the COO
+  rewrite, build the touched mask; returns an :class:`UpdatePlan`.
+* :meth:`ResultStore.commit_update` — write the refreshed entry from the
+  warm-path outputs.
+
+:meth:`ResultStore.apply_update` composes the two around one jitted
+:func:`repro.core.dynamic.warm_update` call (the immediate path); the
+batched path runs the same compute vmapped
+(:meth:`repro.service.engine.BatchedLouvainEngine.update_batch`) between
+the same prepare/commit, so both produce identical partitions.
 
 Eviction (the store used to be unbounded — a ROADMAP item):
 
@@ -32,9 +49,9 @@ from typing import Dict, Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import modularity
-from repro.core.detect import disconnected_communities
-from repro.core.dynamic import update_communities
+from repro.core.dynamic import (
+    apply_edge_updates, directed_deltas, touched_mask, warm_update,
+)
 from repro.graph.container import Graph
 from repro.service.buckets import Bucket, bucket_of, choose_scan
 
@@ -51,8 +68,34 @@ class StoreEntry:
     t_stored: float = 0.0          # clock time of the last put (TTL basis)
 
 
+@dataclasses.dataclass
+class UpdatePlan:
+    """A prepared (host-side) warm update awaiting device compute."""
+
+    graph_id: str
+    graph: Graph                   # bucket-padded, deltas already applied
+    C_prev: np.ndarray             # int32[nv] membership before the update
+    touched: np.ndarray            # bool[nv] update endpoints
+    bucket: Bucket
+    scan: str                      # dense/sort choice for this bucket
+    n_deleted: int                 # directed entries removed by the batch
+
+
 class CapacityExceeded(Exception):
     """Edge update does not fit the entry's bucket; re-bucket + recompute."""
+
+
+def _gross_deleted(g_old: Graph, g_new: Graph) -> int:
+    """Directed entries whose (src, dst) pair left the live set — the
+    GROSS deletion count (a batch that also inserts must still report
+    its removals; the net live-entry delta would hide them)."""
+    K = g_old.n_cap + 1
+    so, do = np.asarray(g_old.src), np.asarray(g_old.dst)
+    sn, dn = np.asarray(g_new.src), np.asarray(g_new.dst)
+    mo, mn = so < g_old.n_cap, sn < g_new.n_cap
+    old = so[mo].astype(np.int64) * K + do[mo]
+    new = sn[mn].astype(np.int64) * K + dn[mn]
+    return int(np.setdiff1d(np.unique(old), new).size)
 
 
 class ResultStore:
@@ -80,6 +123,7 @@ class ResultStore:
         self.n_invalidations = 0
         self.n_evicted = 0
         self.n_expired = 0
+        self.n_deletions = 0          # directed entries removed by updates
 
     # -- basic CRUD -------------------------------------------------------
     def put(self, graph_id: str, graph: Graph, C: np.ndarray, *,
@@ -124,30 +168,46 @@ class ResultStore:
             return len(self._entries)
 
     # -- incremental update path ------------------------------------------
-    def apply_update(self, graph_id: str, updates, *, tau: float = 1e-3,
-                     max_iters: int = 10) -> StoreEntry:
-        """Route an edge batch through the delta-screening warm path.
-
-        ``updates``: (u, v, w) undirected edge **additions** (parallel
-        entries are equivalent to summed weights for every consumer;
-        true deletions/weight-deltas are not yet supported — see ROADMAP).
-        Returns the refreshed entry; raises KeyError for unknown (or
-        evicted/expired) ids, ValueError for malformed batches (entry
-        untouched), and :class:`CapacityExceeded` when the bucket has no
-        room (the entry is invalidated — the caller should resubmit the
-        updated graph as a fresh detect request).
-        """
+    @staticmethod
+    def _validate_batch(updates):
         u, v, w = (np.asarray(x) for x in updates)
         if not (u.shape == v.shape == w.shape and u.ndim == 1):
             raise ValueError(
                 f"update arrays must be equal-length 1-D, got shapes "
                 f"{u.shape}, {v.shape}, {w.shape}")
-        if w.size and not (w > 0).all():
-            # the dense kernels' bit-equivalence (and sensible modularity)
-            # is predicated on positive weights; deletions are unsupported
+        if w.size and not (np.isfinite(w).all() and (w != 0).all()):
             raise ValueError(
-                "update weights must be > 0 (additions only; deletions / "
-                "weight-deltas are not supported — see ROADMAP)")
+                "update weight-deltas must be finite and nonzero "
+                "(positive = add, negative = decrease/delete)")
+        return u, v, w
+
+    def prepare_update(self, graph_id: str, updates) -> UpdatePlan:
+        """Host half of the warm path: validate, rewrite the COO, screen.
+
+        ``updates``: (u, v, dw) undirected **signed** weight-deltas
+        (positive = add weight / insert, negative = decrease, net
+        ``<= 0`` = delete; deleting a missing edge is a no-op).  Raises
+        KeyError for unknown (or evicted/expired) ids, ValueError for
+        malformed batches (entry untouched), and :class:`CapacityExceeded`
+        when the merged edge set overflows the bucket (the entry is
+        invalidated — the caller should resubmit the updated graph as a
+        fresh detect request).
+        """
+        return self.prepare_update_seq(graph_id, [updates])
+
+    def prepare_update_seq(self, graph_id: str, batches) -> UpdatePlan:
+        """Fold several update batches (submit order) into ONE plan.
+
+        Each batch is applied to the COO **sequentially** — per-batch
+        deletion clamping, exactly as if every batch had been an
+        immediate ``apply_update`` call — so the batched dispatch path
+        cannot diverge from immediate semantics (e.g. an over-deleting
+        batch followed by an insertion re-creates the edge instead of
+        netting to a delete).  One warm compute covers the folded result.
+        Validation covers every batch before any state is touched;
+        raises as documented on :meth:`prepare_update`.
+        """
+        batches = [self._validate_batch(b) for b in batches]
         entry = self.get(graph_id)       # TTL-aware; refreshes recency
         if entry is None:
             raise KeyError(graph_id)
@@ -156,23 +216,57 @@ class ResultStore:
             dense_max_nv=self.dense_max_nv,
             dense_small_nv=self.dense_small_nv,
             dense_min_density=self.dense_min_density)
-        try:
-            g_new, C_new, stats = update_communities(
-                entry.graph, jnp.asarray(entry.C), (u, v, w),
-                tau=tau, max_iters=max_iters, scan=scan,
-            )
-        except ValueError as e:  # edge capacity exhausted
-            self.invalidate(graph_id)
-            raise CapacityExceeded(str(e)) from e
-        det = disconnected_communities(
-            g_new.src, g_new.dst, g_new.w, C_new, g_new.n_nodes,
-            impl="dense" if scan == "dense" else "coo",
+        g = entry.graph
+        touched = np.zeros((g.nv,), bool)
+        n_deleted = 0
+        for u, v, w in batches:
+            ds, dd, dw = directed_deltas(u, v, w)
+            try:
+                g_new = apply_edge_updates(g, ds, dd, dw)
+            except ValueError as e:  # edge capacity exhausted
+                self.invalidate(graph_id)
+                raise CapacityExceeded(str(e)) from e
+            n_deleted += _gross_deleted(g, g_new)
+            touched |= touched_mask(g.nv, u, v)
+            g = g_new
+        return UpdatePlan(
+            graph_id=graph_id, graph=g,
+            C_prev=np.asarray(entry.C, np.int32),
+            touched=touched,
+            bucket=entry.bucket, scan=scan,
+            n_deleted=n_deleted,
         )
-        q = float(modularity(g_new.src, g_new.dst, g_new.w, C_new))
-        self.n_warm_updates += 1
+
+    def commit_update(self, plan: UpdatePlan, *, C, n_communities: int,
+                      n_disconnected: int, q: float) -> StoreEntry:
+        """Write the warm-path outputs back as the refreshed entry."""
+        with self._lock:
+            self.n_warm_updates += 1
+            self.n_deletions += plan.n_deleted
         return self.put(
-            graph_id, g_new, np.asarray(C_new),
-            n_communities=int(stats["n_communities"]),
-            n_disconnected=int(det["n_disconnected"]),
+            plan.graph_id, plan.graph, np.asarray(C),
+            n_communities=n_communities, n_disconnected=n_disconnected,
             q=q,
+        )
+
+    def apply_update(self, graph_id: str, updates, *, tau: float = 1e-3,
+                     max_iters: int = 10) -> StoreEntry:
+        """Route one edge batch through the warm path, immediately.
+
+        prepare -> one jitted :func:`repro.core.dynamic.warm_update` call
+        -> commit.  The batched service path runs the identical compute
+        vmapped across graphs (see module docstring); both produce the
+        same partitions.  Returns the refreshed entry; raises as
+        documented on :meth:`prepare_update`.
+        """
+        plan = self.prepare_update(graph_id, updates)
+        out = warm_update(
+            plan.graph, jnp.asarray(plan.C_prev), jnp.asarray(plan.touched),
+            tau=tau, max_iters=max_iters, scan=plan.scan,
+        )
+        return self.commit_update(
+            plan, C=np.asarray(out["C"]),
+            n_communities=int(out["n_communities"]),
+            n_disconnected=int(out["n_disconnected"]),
+            q=float(out["q"]),
         )

@@ -1,0 +1,19 @@
+"""Shared helpers for the service test modules."""
+import numpy as np
+
+
+def overflow_updates(graph):
+    """Enough *distinct new* undirected pairs to overflow the bucket
+    (updates matching existing pairs rewrite in place and never overflow)."""
+    src = np.asarray(graph.src)
+    dst = np.asarray(graph.dst)
+    live = src < graph.n_cap
+    have = set(zip(src[live].tolist(), dst[live].tolist()))
+    need = int((~live).sum()) // 2 + 1
+    n = int(graph.n_nodes)
+    pairs = [(a, b) for a in range(n) for b in range(a + 1, n)
+             if (a, b) not in have][:need]
+    assert len(pairs) == need, "graph too dense to overflow with non-edges"
+    u = np.array([p[0] for p in pairs])
+    v = np.array([p[1] for p in pairs])
+    return u, v, np.ones(need, np.float32)

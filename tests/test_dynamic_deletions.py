@@ -1,0 +1,296 @@
+"""Fully-dynamic updates: deletions, weight-deltas, tombstone compaction,
+and the batched warm path.
+
+The planted scenario is the resolution-limit regime of a ring of cliques
+(30 cliques of 4): modularity merges neighboring cliques, so some
+communities are pairs/triples of cliques held together by single ring
+bridges.  Deleting such a bridge disconnects the community internally —
+exactly the failure mode the paper targets — and the warm path must split
+it (zero disconnected) while matching a cold recompute's modularity.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, st
+
+from repro.core import (
+    LouvainConfig, disconnected_communities, louvain, modularity,
+)
+from repro.core.dynamic import (
+    apply_edge_updates, directed_deltas, merge_edge_deltas, touched_mask,
+    update_communities,
+)
+from repro.graph import ring_of_cliques, sbm_graph
+from repro.service import BatchedLouvainEngine, Bucket, ResultStore
+from repro.service.buckets import admit
+
+pytestmark = pytest.mark.service
+
+CFG = LouvainConfig()
+
+
+def _planted_ring():
+    """ring_of_cliques(30, 4) with edge slack; cold louvain merges cliques
+    (resolution limit), leaving intra-community ring bridges."""
+    k, c = 30, 4
+    m_nat = 2 * k * (c * (c - 1) // 2 + 1)
+    g = ring_of_cliques(k, c, m_cap=m_nat + 64)
+    C, _ = louvain(g, CFG)
+    C = np.asarray(C)
+    bridges = [(ci * c, ((ci + 1) % k) * c) for ci in range(k)]
+    intra = [(u, v) for u, v in bridges if C[u] == C[v]]
+    assert intra, "planted regime must merge cliques across bridges"
+    return g, C, intra
+
+
+# ---------------------------------------------------------------------------
+# planted bridge deletion: the warm path must split the community
+# ---------------------------------------------------------------------------
+
+def test_planted_bridge_deletion_splits_community():
+    g, C0, intra = _planted_ring()
+    u, v = intra[0]
+    n0 = len(set(C0[:int(g.n_nodes)].tolist()))
+    g2, C2, stats = update_communities(
+        g, jnp.asarray(C0),
+        (np.array([u]), np.array([v]), np.array([-1.0], np.float32)))
+    # the deleted bridge's community fell apart -> must be split
+    assert int(stats["n_disconnected"]) == 0
+    assert int(stats["n_communities"]) > n0
+    det = disconnected_communities(g2.src, g2.dst, g2.w, C2, g2.n_nodes)
+    assert int(det["n_disconnected"]) == 0
+    # warm result matches a cold recompute on the updated graph
+    C_cold, _ = louvain(g2, CFG)
+    q_warm = float(stats["q"])
+    q_cold = float(modularity(g2.src, g2.dst, g2.w, C_cold))
+    assert abs(q_warm - q_cold) <= 1e-6, (q_warm, q_cold)
+    # the edge really left the COO (both directions)
+    src, dst = np.asarray(g2.src), np.asarray(g2.dst)
+    assert not (((src == u) & (dst == v)) | ((src == v) & (dst == u))).any()
+
+
+def test_planted_bridge_deletion_through_store():
+    g, C0, intra = _planted_ring()
+    store = ResultStore()
+    det0 = disconnected_communities(g.src, g.dst, g.w, jnp.asarray(C0),
+                                    g.n_nodes)
+    store.put("ring", g, C0,
+              n_communities=len(set(C0[:int(g.n_nodes)].tolist())),
+              n_disconnected=int(det0["n_disconnected"]),
+              q=float(modularity(g.src, g.dst, g.w, jnp.asarray(C0))))
+    u, v = intra[0]
+    entry = store.apply_update(
+        "ring", (np.array([u]), np.array([v]),
+                 np.array([-1.0], np.float32)))
+    assert entry.n_disconnected == 0
+    assert store.n_deletions == 2         # both directed entries freed
+    C_cold, _ = louvain(entry.graph, CFG)
+    q_cold = float(modularity(entry.graph.src, entry.graph.dst,
+                              entry.graph.w, C_cold))
+    assert abs(entry.q - q_cold) <= 1e-6, (entry.q, q_cold)
+
+
+def test_delete_every_intra_bridge_sequentially():
+    g, C0, intra = _planted_ring()
+    C = jnp.asarray(C0)
+    for u, v in intra:
+        g, C, stats = update_communities(
+            g, C, (np.array([u]), np.array([v]),
+                   np.array([-1.0], np.float32)))
+        assert int(stats["n_disconnected"]) == 0, (u, v)
+    # after removing every intra-community bridge the partition must be
+    # all-singleton-clique (no community spans a missing bridge)
+    det = disconnected_communities(g.src, g.dst, g.w, C, g.n_nodes)
+    assert int(det["n_disconnected"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# COO rewrite semantics: in-place deltas, tombstone compaction, reuse
+# ---------------------------------------------------------------------------
+
+def test_weight_delta_rewrites_in_place():
+    g, _ = sbm_graph(n_nodes=30, n_blocks=3, seed=0)
+    src, dst, w = (np.asarray(g.src), np.asarray(g.dst), np.asarray(g.w))
+    live = (src < g.n_cap) & (src < dst)
+    u, v, wv = src[live][0], dst[live][0], w[live][0]
+    n_live = int((src < g.n_cap).sum())
+    # decrease by half: same live count, reduced weight
+    ds, dd, dw = directed_deltas(np.array([u]), np.array([v]),
+                                 np.array([-wv / 2], np.float32))
+    g2 = apply_edge_updates(g, ds, dd, dw)
+    s2, d2, w2 = (np.asarray(g2.src), np.asarray(g2.dst), np.asarray(g2.w))
+    assert int((s2 < g2.n_cap).sum()) == n_live
+    assert w2[(s2 == u) & (d2 == v)] == pytest.approx(wv / 2)
+    # full deletion frees both directed slots
+    ds, dd, dw = directed_deltas(np.array([u]), np.array([v]),
+                                 np.array([-wv], np.float32))
+    g3 = apply_edge_updates(g, ds, dd, dw)
+    s3 = np.asarray(g3.src)
+    assert int((s3 < g3.n_cap).sum()) == n_live - 2
+
+
+def test_delete_missing_edge_is_noop():
+    g, _ = sbm_graph(n_nodes=30, n_blocks=3, seed=0)
+    src, dst = np.asarray(g.src), np.asarray(g.dst)
+    have = set(zip(src[src < g.n_cap].tolist(), dst[src < g.n_cap].tolist()))
+    u, v = next((a, b) for a in range(30) for b in range(a + 1, 30)
+                if (a, b) not in have)
+    ds, dd, dw = directed_deltas(np.array([u]), np.array([v]),
+                                 np.array([-5.0], np.float32))
+    g2 = apply_edge_updates(g, ds, dd, dw)
+    assert np.array_equal(np.asarray(g2.src), src)
+    assert np.array_equal(np.asarray(g2.w), np.asarray(g.w))
+
+
+def test_capacity_reuse_after_deletion():
+    # m_cap == m: no slack at all
+    g, _ = sbm_graph(n_nodes=60, n_blocks=3, seed=3)
+    src, dst, w = (np.asarray(g.src), np.asarray(g.dst), np.asarray(g.w))
+    live = (src < g.n_cap) & (src < dst)
+    have = set(zip(src[src < g.n_cap].tolist(), dst[src < g.n_cap].tolist()))
+    nu, nv_ = next((a, b) for a in range(60) for b in range(a + 1, 60)
+                   if (a, b) not in have)
+    add = directed_deltas(np.array([nu]), np.array([nv_]),
+                          np.array([1.0], np.float32))
+    with pytest.raises(ValueError, match="capacity"):
+        apply_edge_updates(g, *add)
+    # delete one pair first: its two freed slots admit the new pair
+    du, dv, dwv = src[live][0], dst[live][0], w[live][0]
+    ds, dd, dw = directed_deltas(np.array([du, nu]), np.array([dv, nv_]),
+                                 np.array([-dwv, 1.0], np.float32))
+    g2 = apply_edge_updates(g, ds, dd, dw)
+    s2, d2 = np.asarray(g2.src), np.asarray(g2.dst)
+    assert ((s2 == nu) & (d2 == nv_)).any()
+    assert not ((s2 == du) & (d2 == dv)).any()
+    assert int((s2 < g2.n_cap).sum()) == int((src < g.n_cap).sum())
+
+
+def test_add_then_delete_round_trips_graph_and_stats():
+    g, _ = sbm_graph(n_nodes=120, n_blocks=4, p_in=0.3, p_out=0.01, seed=5,
+                     m_cap=2 * 3000)
+    C0, _ = louvain(g, CFG)
+    q0 = float(modularity(g.src, g.dst, g.w, C0))
+    src, dst = np.asarray(g.src), np.asarray(g.dst)
+    have = set(zip(src[src < g.n_cap].tolist(), dst[src < g.n_cap].tolist()))
+    C0h = np.asarray(C0)
+    # intra-community non-edges: additions reinforce the partition, so
+    # deleting them must restore the stats exactly
+    pairs = [(a, b) for a in range(120) for b in range(a + 1, 120)
+             if (a, b) not in have and C0h[a] == C0h[b]][:8]
+    u = np.array([p[0] for p in pairs])
+    v = np.array([p[1] for p in pairs])
+    w = np.full(len(pairs), 0.5, np.float32)
+    g1, C1, _ = update_communities(g, C0, (u, v, w))
+    g2, C2, stats = update_communities(g1, C1, (u, v, -w))
+    assert np.array_equal(np.asarray(g2.src), src)
+    assert np.array_equal(np.asarray(g2.dst), dst)
+    assert np.array_equal(np.asarray(g2.w), np.asarray(g.w))
+    assert int(stats["n_disconnected"]) == 0
+    assert abs(float(stats["q"]) - q0) <= 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_property_add_delete_round_trip(seed):
+    """Any random batch of new edges, added then deleted, restores the
+    padded COO arrays bit for bit (property test; skipped without
+    hypothesis)."""
+    rng = np.random.default_rng(seed)
+    g, _ = sbm_graph(n_nodes=40, n_blocks=3, seed=1, m_cap=1024)
+    src, dst = np.asarray(g.src), np.asarray(g.dst)
+    have = set(zip(src[src < g.n_cap].tolist(), dst[src < g.n_cap].tolist()))
+    non_edges = [(a, b) for a in range(40) for b in range(a, 40)
+                 if (a, b) not in have]
+    k = int(rng.integers(1, 9))
+    idx = rng.choice(len(non_edges), k, replace=False)
+    u = np.array([non_edges[i][0] for i in idx])
+    v = np.array([non_edges[i][1] for i in idx])
+    w = rng.uniform(0.25, 4.0, k).astype(np.float32)
+    g1 = apply_edge_updates(g, *directed_deltas(u, v, w))
+    g2 = apply_edge_updates(g1, *directed_deltas(u, v, -w))
+    assert np.array_equal(np.asarray(g2.src), src)
+    assert np.array_equal(np.asarray(g2.dst), dst)
+    assert np.array_equal(np.asarray(g2.w), np.asarray(g.w))
+
+
+def test_merge_edge_deltas_nets_within_batch():
+    g, _ = sbm_graph(n_nodes=30, n_blocks=3, seed=0)
+    src = np.asarray(g.src)
+    n_live = int((src < g.n_cap).sum())
+    # add and delete the same new pair in ONE batch: net zero -> no-op
+    ds, dd, dw = directed_deltas(np.array([1, 1]), np.array([17, 17]),
+                                 np.array([2.0, -2.0], np.float32))
+    u, v, w = merge_edge_deltas(g, ds, dd, dw)
+    assert len(u) == n_live
+
+
+# ---------------------------------------------------------------------------
+# batched warm path: vmapped updates == sequential updates, exactly
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_engine_update_batch_matches_sequential():
+    bucket = Bucket(64, 2048)
+    engine = BatchedLouvainEngine(CFG)
+    scan = engine.scan_for(bucket)
+    rng = np.random.default_rng(0)
+    items, seq = [], []
+    for s in range(5):
+        g = sbm_graph(n_nodes=56, n_blocks=4, p_in=0.7, p_out=0.08,
+                      seed=s)[0]
+        g, _ = admit(g, [bucket])
+        res = engine.detect_one(g)
+        src, dst, w = (np.asarray(g.src), np.asarray(g.dst),
+                       np.asarray(g.w))
+        live = (src < g.n_cap) & (src < dst)
+        j = int(rng.integers(0, int(live.sum())))
+        n = int(g.n_nodes)
+        au = rng.integers(0, n, 2)
+        av = rng.integers(0, n, 2)
+        u = np.concatenate([[src[live][j]], au])
+        v = np.concatenate([[dst[live][j]], av])
+        d = np.concatenate([[-w[live][j]],
+                            np.ones(2, np.float32)]).astype(np.float32)
+        keep = u != v
+        u, v, d = u[keep], v[keep], d[keep]
+        g_new = apply_edge_updates(g, *directed_deltas(u, v, d))
+        items.append((g_new, np.asarray(res.C), touched_mask(g.nv, u, v)))
+        seq.append(update_communities(g, jnp.asarray(res.C), (u, v, d),
+                                      scan=scan))
+    outs = engine.update_batch(items)
+    for i, (out, (g2, C2, stats)) in enumerate(zip(outs, seq)):
+        assert np.array_equal(out.C, np.asarray(C2)), f"partition @{i}"
+        assert out.n_disconnected == 0
+        assert out.q == float(stats["q"]), f"modularity @{i}"
+        assert out.n_communities == int(stats["n_communities"])
+
+
+def test_engine_warm_updates_precompiles_ladder():
+    bucket = Bucket(64, 512)
+    engine = BatchedLouvainEngine(CFG)
+    n = engine.warm_updates(bucket, 4)
+    assert n >= 1
+    keys = set(engine.cache_keys())
+    engine.warm_updates(bucket, 4)          # replay: nothing new
+    assert set(engine.cache_keys()) == keys
+
+
+# ---------------------------------------------------------------------------
+# store validation under signed deltas
+# ---------------------------------------------------------------------------
+
+def test_store_rejects_zero_and_nonfinite_deltas():
+    g, _ = admit(sbm_graph(n_nodes=30, n_blocks=3, seed=7)[0],
+                 [Bucket(64, 512), Bucket(64, 2048)])
+    engine = BatchedLouvainEngine(CFG)
+    res = engine.detect_one(g)
+    store = ResultStore()
+    store.put("g", g, res.C, n_communities=res.n_communities,
+              n_disconnected=res.n_disconnected, q=res.q)
+    for bad in (np.zeros(1, np.float32),
+                np.array([np.inf], np.float32),
+                np.array([np.nan], np.float32)):
+        with pytest.raises(ValueError):
+            store.apply_update("g", (np.array([0]), np.array([1]), bad))
+    assert store.get("g").version == 1      # entry untouched

@@ -63,7 +63,13 @@ def test_incremental_update_quality_and_connectivity():
 
 def test_capacity_exhaustion_raises():
     g, _ = sbm_graph(n_nodes=60, n_blocks=3, seed=3)  # m_cap == m (no slack)
+    # a *new* pair needs free slots (updates to existing pairs rewrite in
+    # place and would fit) — find a non-edge
+    src, dst = np.asarray(g.src), np.asarray(g.dst)
+    have = set(zip(src[src < g.n_cap].tolist(), dst[src < g.n_cap].tolist()))
+    u, v = next((a, b) for a in range(60) for b in range(a + 1, 60)
+                if (a, b) not in have)
     with pytest.raises(ValueError, match="capacity"):
         update_communities(g, jnp.arange(g.nv, dtype=jnp.int32),
-                           (np.array([0]), np.array([5]),
+                           (np.array([u]), np.array([v]),
                             np.array([1.0], np.float32)))

@@ -14,6 +14,8 @@ from repro.service import (
 from repro.service.buckets import admit
 from repro.service.store import CapacityExceeded
 
+pytestmark = pytest.mark.service
+
 CFG = LouvainConfig()
 BUCKETS = (Bucket(64, 512), Bucket(64, 2048), Bucket(256, 2048))
 
@@ -29,6 +31,9 @@ def _req(tenant, i, g=None, priority=0, deadline=None, t=0.0):
         req_id=f"{tenant}-{i}", tenant=tenant, graph_id=f"{tenant}-{i}",
         graph=padded, bucket=bucket, priority=priority, t_submit=t,
         deadline=deadline, future=None)
+
+
+from tests._service_helpers import overflow_updates as _overflow_updates
 
 
 # ---------------------------------------------------------------------------
@@ -74,6 +79,7 @@ def test_dense_scan_bit_equals_sort():
     assert int(s_sort["n_communities"]) == int(s_dense["n_communities"])
 
 
+@pytest.mark.slow
 def test_engine_matches_sequential_louvain_exactly():
     graphs = [admit(_ego(s), BUCKETS)[0] for s in range(5)]
     engine = BatchedLouvainEngine(CFG)   # 5 graphs -> padded tile ladder
@@ -246,12 +252,8 @@ def test_store_capacity_overflow_invalidates():
     store = ResultStore()
     store.put("g", g, res.C, n_communities=res.n_communities,
               n_disconnected=res.n_disconnected, q=res.q)
-    free = int(np.asarray(g.src >= g.n_cap).sum())
-    k = free // 2 + 1                           # 2k > free directed slots
-    u = np.zeros(k, np.int64)
-    v = 1 + np.arange(k) % (int(g.n_nodes) - 1)  # never a self-loop
     with pytest.raises(CapacityExceeded):
-        store.apply_update("g", (u, v, np.ones(k, np.float32)))
+        store.apply_update("g", _overflow_updates(g))
     assert store.get("g") is None               # invalidated
 
 
@@ -331,16 +333,144 @@ def test_rebucket_update_exempt_from_queue_bound():
     fe.submit_detect("other", _ego(1), tenant="a")    # queue now at bound
     with pytest.raises(QueueFull):
         fe.submit_detect("third", _ego(2), tenant="a")
-    n = int(e.graph.n_nodes)
-    free = int(np.asarray(e.graph.src >= e.graph.n_cap).sum())
-    k = free // 2 + 1
-    u = np.zeros(k, np.int64)
-    v = 1 + np.arange(k) % (n - 1)
-    fut = fe.submit_update("g", (u, v, np.ones(k, np.float32)), tenant="a")
+    fut = fe.submit_update("g", _overflow_updates(e.graph), tenant="a")
     assert fut.kind == "detect"                       # queued, not dropped
     fe.drain()
     assert fut.result().version == 2                  # monotone after rebucket
     assert fe.result("g").n_disconnected == 0
+
+
+def test_batched_updates_match_immediate_path():
+    # two identical services, one immediate (update_batch_size=1), one
+    # batched: partitions and stats must agree exactly
+    graphs = [_ego(s) for s in range(4)]
+    rng = np.random.default_rng(2)
+    upds = []
+    for g in graphs:
+        n = int(g.n_nodes)
+        u, v = rng.integers(0, n, 4), rng.integers(0, n, 4)
+        keep = u != v
+        upds.append((u[keep], v[keep],
+                     np.ones(int(keep.sum()), np.float32)))
+
+    def serve(update_batch_size):
+        cfg = ServiceConfig(louvain=CFG, buckets=BUCKETS, batch_size=4,
+                            max_delay_s=10.0,
+                            update_batch_size=update_batch_size)
+        svc = CommunityService(config=cfg)
+        for i, g in enumerate(graphs):
+            svc.submit_detect(f"g{i}", g)
+        svc.drain()
+        for i, upd in enumerate(upds):
+            svc.submit_update(f"g{i}", upd)
+        svc.drain()
+        return svc
+
+    a = serve(1)
+    b = serve(4)
+    assert b.metrics.n_update_batches >= 1
+    assert a.metrics.n_update_batches == 0
+    for i in range(4):
+        ea, eb = a.result(f"g{i}"), b.result(f"g{i}")
+        assert np.array_equal(ea.C, eb.C), f"partition mismatch @{i}"
+        assert ea.q == eb.q and ea.n_communities == eb.n_communities
+        assert ea.version == eb.version == 2
+        assert eb.n_disconnected == 0
+
+
+def test_batched_update_rebucket_chains_future():
+    # a queued update that overflows at dispatch must still resolve its
+    # future, via the re-bucketed detect
+    cfg = ServiceConfig(louvain=CFG, buckets=BUCKETS, batch_size=2,
+                        max_delay_s=10.0, update_batch_size=2)
+    fe = ServiceFrontend(cfg)
+    fe.submit_detect("g", _ego(9), tenant="a")
+    fe.dispatch(force=True)
+    e = fe.result("g")
+    fut = fe.submit_update("g", _overflow_updates(e.graph), tenant="a")
+    assert fut.kind == "update" and not fut.done()
+    assert fe.pending_updates() == 1
+    fe.drain()
+    assert fut.done()
+    entry = fut.result()
+    assert entry.version == 2               # monotone across rebucket
+    assert entry.n_disconnected == 0
+    assert fe.metrics.n_rebucketed == 1
+    assert fe.result("g").bucket != e.bucket  # really re-bucketed
+
+
+def test_batched_update_merges_same_graph_deltas():
+    # two queued updates against one graph compose in submit order and
+    # resolve to the SAME refreshed entry (one warm compute, one version)
+    cfg = ServiceConfig(louvain=CFG, buckets=BUCKETS, batch_size=2,
+                        max_delay_s=10.0, update_batch_size=2)
+    fe = ServiceFrontend(cfg)
+    fe.submit_detect("g", _ego(4), tenant="a")
+    fe.dispatch(force=True)
+    e1 = fe.result("g")
+    lu = np.asarray(e1.graph.src)
+    lv = np.asarray(e1.graph.dst)
+    lw = np.asarray(e1.graph.w)
+    live = (lu < e1.graph.n_cap) & (lu < lv)
+    u0, v0, w0 = int(lu[live][0]), int(lv[live][0]), float(lw[live][0])
+    f1 = fe.submit_update("g", (np.array([u0]), np.array([v0]),
+                                np.array([2.0], np.float32)))
+    f2 = fe.submit_update("g", (np.array([u0]), np.array([v0]),
+                                np.array([-(w0 + 2.0)], np.float32)))
+    fe.drain()
+    assert f1.result() is f2.result()
+    assert f1.result().version == 2
+    # net delta: the pair is gone
+    g2 = fe.result("g").graph
+    s2, d2 = np.asarray(g2.src), np.asarray(g2.dst)
+    assert not ((s2 == u0) & (d2 == v0)).any()
+    # gross deletion accounting: the fold removed the pair (2 directed
+    # entries), even though the batch also carried additions
+    assert fe.metrics.n_deletions >= 2
+
+
+def test_batched_fold_matches_immediate_clamping():
+    # over-delete then re-add across two QUEUED updates must behave like
+    # two immediate calls (per-batch clamping), not like one netted
+    # batch: the edge ends up present with the re-added weight
+    def run(update_batch_size):
+        cfg = ServiceConfig(louvain=CFG, buckets=BUCKETS, batch_size=2,
+                            max_delay_s=10.0,
+                            update_batch_size=update_batch_size)
+        fe = ServiceFrontend(cfg)
+        fe.submit_detect("g", _ego(4), tenant="a")
+        fe.dispatch(force=True)
+        e = fe.result("g")
+        lu, lv = np.asarray(e.graph.src), np.asarray(e.graph.dst)
+        live = (lu < e.graph.n_cap) & (lu < lv)
+        u0, v0 = int(lu[live][0]), int(lv[live][0])
+        # weight is ~1; -5 over-deletes (clamped to removal), +3 re-adds
+        fe.submit_update("g", (np.array([u0]), np.array([v0]),
+                               np.array([-5.0], np.float32)))
+        fe.submit_update("g", (np.array([u0]), np.array([v0]),
+                               np.array([3.0], np.float32)))
+        fe.drain()
+        g2 = fe.result("g").graph
+        s2, d2, w2 = (np.asarray(g2.src), np.asarray(g2.dst),
+                      np.asarray(g2.w))
+        hit = (s2 == u0) & (d2 == v0)
+        return float(w2[hit][0]) if hit.any() else None
+
+    assert run(1) == run(2) == 3.0
+
+
+def test_chained_future_cancellation_propagates():
+    # a queued update whose dispatch re-bucketed into a detect is chained
+    # to that detect's future; cancelling the detect (service shutdown)
+    # must cancel the chained update future, not leave it pending forever
+    from repro.service.frontend import DetectionFuture, _chain
+    src = DetectionFuture("d0-g", "a", "g", "detect", 0.0)
+    dst = DetectionFuture("u0-g", "a", "g", "update", 0.0)
+    _chain(src, dst)
+    src.cancel()
+    assert dst.done()
+    with pytest.raises(Exception):      # CancelledError
+        dst.result(timeout=1.0)
 
 
 def test_request_ids_monotonic_across_dispatch():

@@ -14,6 +14,8 @@ from repro.service import (
 )
 from repro.service.buckets import admit
 
+pytestmark = pytest.mark.service
+
 CFG = LouvainConfig()
 BUCKETS = (Bucket(64, 512), Bucket(64, 2048), Bucket(256, 2048))
 
@@ -31,6 +33,9 @@ def _cfg(**kw):
 
 def _run(coro):
     return asyncio.run(coro)
+
+
+from tests._service_helpers import overflow_updates as _overflow_updates
 
 
 # ---------------------------------------------------------------------------
@@ -169,6 +174,7 @@ async def _await(fut):
 # parity: sync adapter and async front end serve identical results
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_sync_adapter_and_async_parity_with_louvain():
     graphs = {f"g{i}": _ego(i) for i in range(4)}
 
@@ -209,6 +215,53 @@ def test_close_without_drain_cancels_queued_futures():
     _run(go())
 
 
+def test_async_batched_updates_resolve_on_dispatch():
+    async def go():
+        cfg = _cfg(batch_size=4, max_delay_s=0.01, update_batch_size=4,
+                   update_max_delay_s=0.01)
+        async with AsyncCommunityService(cfg) as svc:
+            futs = [await svc.submit_detect(f"g{i}", _ego(i), tenant="u")
+                    for i in range(4)]
+            await asyncio.gather(*futs)
+            rng = np.random.default_rng(5)
+            ufuts = []
+            for i in range(4):
+                n = int(svc.result(f"g{i}").graph.n_nodes)
+                u, v = rng.integers(0, n, 3), rng.integers(0, n, 3)
+                keep = u != v
+                ufuts.append(await svc.submit_update(
+                    f"g{i}", (u[keep], v[keep],
+                              np.ones(int(keep.sum()), np.float32)),
+                    tenant="u"))
+            entries = await asyncio.gather(*ufuts)
+            assert all(e.version == 2 for e in entries)
+            assert all(e.n_disconnected == 0 for e in entries)
+            assert svc.metrics.n_update_batches >= 1
+            assert svc.frontend.pending_updates() == 0
+    _run(go())
+
+
+def test_async_close_cancels_queued_updates():
+    async def go():
+        # update queue never fills (width 64) and the flush delay is far
+        # away: the queued update is still pending at shutdown
+        cfg = _cfg(batch_size=2, max_delay_s=0.01, update_batch_size=64,
+                   update_max_delay_s=30.0)
+        svc = await AsyncCommunityService(cfg).start()
+        fut = await svc.submit_detect("g", _ego(0), tenant="a")
+        await fut
+        n = int(svc.result("g").graph.n_nodes)
+        upd = await svc.submit_update(
+            "g", (np.array([0]), np.array([n - 1]),
+                  np.ones(1, np.float32)), tenant="a")
+        assert not upd.done()
+        await svc.close(drain=False)
+        assert upd.done()                   # not left hanging forever
+        with pytest.raises(asyncio.CancelledError):
+            await upd
+    _run(go())
+
+
 def test_async_updates_and_rebucket_future():
     async def go():
         cfg = _cfg(batch_size=2, max_delay_s=0.01)
@@ -224,20 +277,16 @@ def test_async_updates_and_rebucket_future():
                        np.ones(4, np.float32)), tenant="u")
             assert upd.kind == "update" and upd.done()
             assert (await upd).version == 2
-            # overflow the bucket -> the returned future is the queued
-            # re-detect, resolving to a fresh (larger-bucket) entry
+            # overflow the bucket with distinct new pairs -> the returned
+            # future is the queued re-detect, resolving to a fresh
+            # (larger-bucket) entry
             e = svc.result("g0")
-            free = int(np.asarray(e.graph.src >= e.graph.n_cap).sum())
-            k = free // 2 + 1
-            u = np.zeros(k, np.int64)
-            v = 1 + np.arange(k) % (n - 1)
-            fut = await svc.submit_update(
-                "g0", (u, v, np.ones(k, np.float32)), tenant="u")
+            u, v, w = _overflow_updates(e.graph)
+            fut = await svc.submit_update("g0", (u, v, w), tenant="u")
             assert fut.kind == "detect"
             e3 = await fut
             assert e3.version == 3          # monotone across rebucket
             assert svc.metrics.n_rebucketed == 1
             with pytest.raises(KeyError):
-                await svc.submit_update("nope", (u, v,
-                                                 np.ones(k, np.float32)))
+                await svc.submit_update("nope", (u, v, w))
     _run(go())
