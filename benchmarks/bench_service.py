@@ -1,19 +1,26 @@
 """Service benchmark: batched engine vs sequential single-graph calls.
 
-Four sections:
+Five sections:
 
 1. **Engine throughput, one bucket** — an ego-net workload in the
    (64, 2048) bucket.  The sequential baseline is the repo's public
    ``louvain()`` + detector per padded graph (what a service without the
    engine would run per request).  The engine is measured at batch sizes
    1 / 8 / 32; results are asserted to match the sequential partitions
-   exactly.  Acceptance: batch-32 engine throughput >= 5x sequential.
+   exactly.  Acceptance: batch-32 engine throughput >= 3.5x sequential.
+   (The bar was 5x until the fused segment-reduction backend landed: the
+   baseline IS the public sortscan ``louvain()``, which that PR made
+   ~1.4x faster, so the engine's *relative* win re-based downward while
+   its absolute graphs/s — recorded in the snapshot — slightly improved.
+   A bar riding the old baseline would have rewarded reverting the
+   fusion.)
 
 2. **The async futures front end** — the same 32-graph workload submitted
    through ``AsyncCommunityService`` (admission + DRR + dispatcher task +
-   store writes included).  Acceptance: the async path keeps >= 5x over
-   sequential and still matches ``louvain()`` partitions exactly — the
-   front end must not eat the engine's win.
+   store writes included).  Acceptance: the async path keeps >= 3.5x over
+   sequential (same re-based bar as section 1) and still matches
+   ``louvain()`` partitions exactly — the front end must not eat the
+   engine's win.
 
 3. **Batched warm updates** — 32 mixed add/delete edge batches against
    the detected graphs, served by the vmapped warm path
@@ -30,6 +37,12 @@ Four sections:
    than the road bucket computes, so at batch 32 it saturates: p50 there
    is head-of-line queueing behind full batches (throughput mode, ~4x
    the graphs/s), while the batch-1 row shows the latency mode.
+
+5. **Fused sortscan backend** — end-to-end ``louvain()`` on the suite's
+   largest synthetic graph (web_rmat, scale 12) with the fused
+   segment-reduction backend (``seg_impl='auto'``) vs the pre-backend
+   scatter formulation (``seg_impl='scatter'``), paired best-of-5.
+   Acceptance: >= 1.2x, with bit-identical partitions.
 
 CSV rows use the suite convention ``name,us_per_call,derived`` (run.py);
 ``scripts/check_bench.py`` parses the ``# <metric>,<value>`` lines into
@@ -64,7 +77,7 @@ def timeit_best(fn, *args, repeats=5, **kw):
     return timeit(fn, *args, repeats=repeats, agg=np.min, **kw)
 
 
-def accept_speedup(name, attempt, bar=5.0, attempts=3):
+def accept_speedup(name, attempt, bar=3.5, attempts=3):
     """Assert ``attempt() >= bar``, re-measuring on failure.
 
     The container shares host CPU (cgroup cpu-shares): neighbors can
@@ -79,11 +92,11 @@ def accept_speedup(name, attempt, bar=5.0, attempts=3):
         best = max(best, r)
         if best >= bar:
             break
-        print(f"# {name} attempt {k + 1}: {r:.2f}x < {bar:.0f}x, "
+        print(f"# {name} attempt {k + 1}: {r:.2f}x < {bar:g}x, "
               f"re-measuring")
     print(f"# {name},{best:.2f}")
     assert best >= bar, (
-        f"{name} speedup {best:.2f}x < {bar:.0f}x acceptance bar")
+        f"{name} speedup {best:.2f}x < {bar:g}x acceptance bar")
     return best
 
 
@@ -367,12 +380,45 @@ def bench_bucket_mix():
             f"p50 {rep['p50_ms']:.0f} ms,p99 {rep['p99_ms']:.0f} ms")
 
 
+def bench_fused_backend():
+    """Section 5: the segment-reduction backend's end-to-end win.
+
+    One graph object, both seg_impls measured back to back per attempt
+    (paired — host noise hits numerator and denominator alike); partitions
+    asserted bit-identical so the speedup is never bought with drift.
+    """
+    from repro.graph import rmat_graph
+
+    g = rmat_graph(scale=12, edge_factor=8, seed=1)  # == common.dataset web
+    cfg = LouvainConfig()
+    C_fused, _ = louvain(g, cfg, seg_impl="auto")
+    C_scatter, _ = louvain(g, cfg, seg_impl="scatter")
+    assert np.array_equal(np.asarray(C_fused), np.asarray(C_scatter)), (
+        "fused backend partition diverged from the scatter path")
+    print("# fused and scatter backends bit-identical on web_rmat")
+
+    state = {}
+
+    def attempt():
+        t_scatter = timeit_best(
+            lambda: louvain(g, cfg, seg_impl="scatter")[0])
+        t_fused = timeit_best(lambda: louvain(g, cfg, seg_impl="auto")[0])
+        state["t_fused"] = t_fused
+        return t_scatter / t_fused
+
+    accept_speedup("speedup_louvain_fused", attempt, bar=1.2)
+    m = int(g.num_edges())
+    row("service_louvain_fused_rmat", state["t_fused"],
+        f"{m / state['t_fused']:,.0f} edges/s")
+
+
 def main():
     print("name,us_per_call,derived")
     graphs, t_seq, seq = bench_engine()
     bench_async_frontend(graphs, t_seq, seq)
     bench_update_path(graphs)
     bench_bucket_mix()
+    bench_fused_backend()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,147 @@
+#!/usr/bin/env python
+"""Fit the dense-vs-sortscan crossover density from measurements.
+
+``buckets.choose_scan`` decides, per bucket, whether the service engine
+runs the dense [nv, nv] community-matrix sweep or the sortscan.  The
+crossover used to be the CPU-tuned constant 0.02; this script measures it
+on the **current backend**: for a grid of (nv, m_cap) shapes in the
+mid-size band where the choice is live (dense_small_nv < nv <=
+dense_max_nv), it times ``louvain_impl`` under both scans on synthetic
+graphs of matching density and records the density at which the dense
+sweep stops winning.  The fitted threshold is the geometric midpoint
+between the densest sort-winning and sparsest dense-winning shapes,
+pooled over all nv rungs.
+
+Output: ``src/repro/service/dense_scan_calib.json``, keyed by jax backend
+(a CPU calibration never misleads a TPU deployment);
+:func:`repro.service.buckets.calibrated_min_density` picks it up at
+import time.  Commit the file to advance the recorded calibration.
+
+Usage:
+  PYTHONPATH=src python scripts/calibrate_dense_scan.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+import jax
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core import LouvainConfig, louvain  # noqa: E402
+from repro.graph import sbm_graph  # noqa: E402
+from repro.graph.container import repad  # noqa: E402
+from repro.service.buckets import _CALIB_FILE  # noqa: E402
+
+CFG = LouvainConfig()
+
+
+def _bench(fn, repeats=3):
+    fn()  # compile
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.min(ts))
+
+
+def measure(nv_rungs, densities, repeats):
+    """Times (dense, sort) per shape; returns measurement rows."""
+    rows = []
+    for n_cap in nv_rungs:
+        nv = n_cap + 1
+        for dens in densities:
+            m_cap = int(dens * nv * nv)
+            # synthetic graph at ~60% fill of the bucket's edge capacity
+            target_edges = max(int(0.6 * m_cap) // 2, n_cap)
+            p = min(target_edges / (n_cap * (n_cap - 1) / 2), 0.9)
+            g = sbm_graph(n_nodes=n_cap, n_blocks=max(n_cap // 32, 2),
+                          p_in=min(4 * p, 0.9), p_out=p / 4, seed=0)[0]
+            if int(g.num_edges()) > m_cap:
+                continue
+            g = repad(g, n_cap, m_cap)
+            t_dense = _bench(lambda: louvain(g, CFG, scan="dense")[0],
+                             repeats)
+            t_sort = _bench(lambda: louvain(g, CFG, scan="sort")[0], repeats)
+            rows.append(dict(n_cap=n_cap, m_cap=m_cap,
+                             density=round(m_cap / nv / nv, 5),
+                             t_dense_ms=round(t_dense * 1e3, 2),
+                             t_sort_ms=round(t_sort * 1e3, 2),
+                             dense_wins=t_dense < t_sort))
+            print(f"  nv={nv:5d} m_cap={m_cap:6d} density={dens:.4f}  "
+                  f"dense {t_dense * 1e3:8.1f} ms  sort {t_sort * 1e3:8.1f} "
+                  f"ms  -> {'dense' if t_dense < t_sort else 'sort'}")
+    return rows
+
+
+def fit_threshold(rows, fallback=0.02) -> float:
+    """Geometric midpoint between the sort-winning and dense-winning
+    density bands (pooled over nv rungs; ties resolved toward sort so the
+    engine never densifies a shape that measured slower)."""
+    sort_d = [r["density"] for r in rows if not r["dense_wins"]]
+    dense_d = [r["density"] for r in rows if r["dense_wins"]]
+    if not sort_d:   # dense wins everywhere measured: lowest measured band
+        return min(dense_d) if dense_d else fallback
+    if not dense_d:  # sort wins everywhere: threshold above measured band
+        return max(sort_d) * 2.0
+    near = [d for d in sort_d if d < max(dense_d) * 4]
+    if not near:     # bands don't overlap in a fittable way: split medians
+        return float(np.sqrt(np.median(sort_d) * np.median(dense_d)))
+    lo = max(near)
+    hi = min(dense_d)
+    if hi <= lo:     # interleaved bands: split at the crossing point
+        return float(np.sqrt(np.median(sort_d) * np.median(dense_d)))
+    return float(np.sqrt(lo * hi))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer shapes / repeats (CI smoke)")
+    ap.add_argument("--out", type=pathlib.Path, default=None,
+                    help="output file (default: the committed calibration; "
+                    "--quick defaults to a scratch file instead so a "
+                    "2-shape smoke can never clobber the full fit)")
+    args = ap.parse_args(argv)
+
+    if args.quick:
+        nv_rungs, densities, repeats = [256], [0.008, 0.03], 2
+        if args.out is None:
+            args.out = pathlib.Path("dense_scan_calib.quick.json")
+    else:
+        nv_rungs = [192, 256, 512, 1024]
+        densities = [0.004, 0.008, 0.016, 0.031, 0.062, 0.125]
+        repeats = 3
+    if args.out is None:
+        args.out = _CALIB_FILE
+
+    backend = jax.default_backend()
+    print(f"calibrating dense/sort crossover on backend={backend}")
+    rows = measure(nv_rungs, densities, repeats)
+    thr = fit_threshold(rows)
+    print(f"fitted dense_min_density = {thr:.4f}")
+
+    data = {}
+    if args.out.exists():
+        try:
+            data = json.loads(args.out.read_text())
+        except ValueError:
+            data = {}
+    data[backend] = dict(
+        dense_min_density=round(thr, 5),
+        fitted_from=f"{len(rows)} shapes",
+        measurements=rows,
+    )
+    args.out.write_text(json.dumps(data, indent=2) + "\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,12 +2,15 @@
 """Service-bench regression gate (``scripts/ci.sh bench``).
 
 Runs ``benchmarks/bench_service.py`` (which itself enforces the hard
-acceptance bars: engine/async >= 5x, update batch >= 3x, exact partition
-parity), parses its CSV/marker output into a metrics snapshot, compares
-against the committed snapshot ``benchmarks/BENCH_service.json``, and
-fails when any higher-is-better metric regressed more than
-``--tolerance`` (default 20%).  On success the snapshot is rewritten with
-the new numbers — committing it advances the recorded trajectory.
+acceptance bars: engine/async >= 3.5x vs the fused sequential baseline,
+update batch >= 3x, fused sortscan backend >= 1.2x end-to-end, exact
+partition parity) plus the kernel-level
+paired sweep metric from ``benchmarks/bench_kernels.py``, parses the
+CSV/marker output into a metrics snapshot, compares against the committed
+snapshot ``benchmarks/BENCH_service.json``, and fails when any
+higher-is-better metric regressed more than ``--tolerance`` (default
+20%).  On success the snapshot is rewritten with the new numbers —
+committing it advances the recorded trajectory.
 
 Only the speedup metrics are gated: they are paired ratios (numerator
 and denominator measured adjacent), robust to the shared-CPU noise of
@@ -34,11 +37,14 @@ import sys
 REPO = pathlib.Path(__file__).resolve().parent.parent
 SNAPSHOT = REPO / "benchmarks" / "BENCH_service.json"
 
-# marker-line metrics: "# <name>,<value>" printed by accept_speedup
+# marker-line metrics: "# <name>,<value>" printed by accept_speedup /
+# bench_kernels.bench_fused_sweep
 SPEEDUPS = {
     "speedup_batch32": "engine_speedup_batch32",
     "speedup_async_batch32": "async_speedup_batch32",
     "speedup_update_batch32": "update_speedup_batch32",
+    "speedup_louvain_fused": "louvain_fused_speedup",
+    "speedup_sweep_fused": "kernel_sweep_fused_speedup",
 }
 # CSV rows whose derived field leads with "<x> graphs/s"; recorded in the
 # snapshot for trend visibility, NOT gated (absolute wall-clock collapses
@@ -51,16 +57,19 @@ GATED = set(SPEEDUPS.values())
 
 
 def run_bench() -> str:
-    cmd = [sys.executable, str(REPO / "benchmarks" / "bench_service.py")]
     env = {**os.environ, "PYTHONPATH":
            f"{REPO / 'src'}:{REPO}:{os.environ.get('PYTHONPATH', '')}"}
-    proc = subprocess.run(cmd, capture_output=True, text=True, env=env)
-    sys.stdout.write(proc.stdout)
-    sys.stderr.write(proc.stderr)
-    if proc.returncode != 0:
-        sys.exit(f"bench_service.py failed (exit {proc.returncode}) — "
-                 "acceptance bars are enforced by the bench itself")
-    return proc.stdout
+    out = []
+    for script in ["bench_service.py", "bench_kernels.py"]:
+        cmd = [sys.executable, str(REPO / "benchmarks" / script)]
+        proc = subprocess.run(cmd, capture_output=True, text=True, env=env)
+        sys.stdout.write(proc.stdout)
+        sys.stderr.write(proc.stderr)
+        if proc.returncode != 0:
+            sys.exit(f"{script} failed (exit {proc.returncode}) — "
+                     "acceptance bars are enforced by the bench itself")
+        out.append(proc.stdout)
+    return "\n".join(out)
 
 
 def parse_metrics(out: str) -> dict:

@@ -11,10 +11,11 @@
 #            churn driver (deletions through the batched warm path).  Also
 #            in the GitHub workflow.
 #   bench  — acceptance benchmarks + regression check: scripts/check_bench.py
-#            runs benchmarks/bench_service.py, enforces the speedup bars,
-#            writes benchmarks/BENCH_service.json and fails on a >20%
-#            regression of any paired-speedup metric vs the committed
-#            snapshot (absolute graphs/s is informational).  Local-only
+#            runs benchmarks/bench_service.py + bench_kernels.py, enforces
+#            the speedup bars, writes benchmarks/BENCH_service.json and
+#            fails on a >20% regression of any paired-speedup metric vs the
+#            committed snapshot (absolute graphs/s is informational).
+#            Local-only
 #            (shared-CPU runners are too noisy); the workflow only lints
 #            that the committed snapshot parses.
 #   all    — every tier above.  THIS is the documented pre-merge gate: it

@@ -5,11 +5,20 @@ sort + run-length segment reductions here: after sorting edge records by a
 composite key, equal keys form contiguous *runs*; a run is one hashtable
 entry.  Everything stays fixed-shape: runs are indexed by their position in
 ``[0, m_cap)`` and unused run slots are masked.
+
+Since the segment-reduction backend landed (kernels/ops.py), every run
+reduction routes through :func:`repro.kernels.ops.segreduce_sorted` with a
+static ``impl`` choice ('auto' | 'xla' | 'pallas' | 'scatter'); all impls
+are bit-identical (in-order fold contract), so the choice is purely a cost
+decision.  ``impl='scatter'`` reproduces the pre-backend scatter ops — the
+paired-benchmark baseline.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import ops
 
 INT_MAX = jnp.iinfo(jnp.int32).max
 
@@ -18,6 +27,18 @@ def sort_by_key2(k1, k2, *values):
     """Stable sort of values by the composite key (k1, k2) via lax.sort."""
     out = jax.lax.sort((k1, k2) + tuple(values), num_keys=2, is_stable=True)
     return out
+
+
+def sort_runs(k1, k2):
+    """Stable sort by (k1, k2) carrying only a permutation payload.
+
+    Returns ``(s_k1, s_k2, perm)``.  Sorting one int32 payload and
+    gathering the other edge fields through ``perm`` is measurably cheaper
+    than sorting several payload arrays (the sort is the sweep's single
+    most expensive op; every payload array adds a full permute pass).
+    """
+    eidx = jnp.arange(k1.shape[0], dtype=jnp.int32)
+    return jax.lax.sort((k1, k2, eidx), num_keys=2, is_stable=True)
 
 
 def run_starts(*sorted_keys):
@@ -34,15 +55,19 @@ def run_ids(starts):
     return jnp.cumsum(starts.astype(jnp.int32)) - 1
 
 
-def runs_reduce(sorted_w, rid, m_cap):
-    """Sum of values within each run -> float[m_cap] indexed by run id."""
-    return jax.ops.segment_sum(sorted_w, rid, num_segments=m_cap)
+def runs_reduce(sorted_w, rid, m_cap, *, op: str = "sum",
+                impl: str = "auto", block_m: int = 0):
+    """Reduce values within each run -> [m_cap] indexed by run id."""
+    return ops.segreduce_sorted(sorted_w, rid, m_cap, op=op, impl=impl,
+                                block_m=block_m)
 
 
-def run_field(sorted_x, starts, rid, m_cap, fill):
+def run_field(sorted_x, starts, rid, m_cap, fill, *, impl: str = "auto",
+              block_m: int = 0):
     """First element of each run for a sorted field; `fill` elsewhere."""
     vals = jnp.where(starts, sorted_x, 0)
-    out = jax.ops.segment_sum(vals, rid, num_segments=m_cap)
+    out = ops.segreduce_sorted(vals, rid, m_cap, op="sum", impl=impl,
+                               block_m=block_m)
     n_runs = rid[-1] + 1
     valid = jnp.arange(m_cap) < n_runs
     return jnp.where(valid, out, fill), valid

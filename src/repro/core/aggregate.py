@@ -22,8 +22,9 @@ import jax.numpy as jnp
 from repro.core import _segments as seg
 
 
-@partial(jax.jit, static_argnames=("impl",))
-def aggregate(src, dst, w, C_dense, *, impl: str = "sort"):
+@partial(jax.jit, static_argnames=("impl", "seg_impl", "block_m"))
+def aggregate(src, dst, w, C_dense, *, impl: str = "sort",
+              seg_impl: str = "auto", block_m: int = 0):
     """Build the super-vertex graph.
 
     Args:
@@ -39,6 +40,8 @@ def aggregate(src, dst, w, C_dense, *, impl: str = "sort"):
         way (stable sort preserves it within runs; scatter-add applies
         duplicate-index updates in it), and the flattened (c1, c2) cell
         order *is* the sorted run order.
+      seg_impl / block_m: segment-reduction backend for the sort impl's run
+        reductions (kernels/ops.py; every impl bit-identical).
 
     Returns:
       (src', dst', w'): the super-vertex graph in the same capacities.
@@ -74,9 +77,11 @@ def aggregate(src, dst, w, C_dense, *, impl: str = "sort"):
     s_src, s_dst, s_w = seg.sort_by_key2(e_src, e_dst, e_w)
     starts = seg.run_starts(s_src, s_dst)
     rid = seg.run_ids(starts)
-    w_run = seg.runs_reduce(s_w, rid, m_cap)
-    src_run, run_valid = seg.run_field(s_src, starts, rid, m_cap, ghost)
-    dst_run, _ = seg.run_field(s_dst, starts, rid, m_cap, ghost)
+    w_run = seg.runs_reduce(s_w, rid, m_cap, impl=seg_impl, block_m=block_m)
+    src_run, run_valid = seg.run_field(s_src, starts, rid, m_cap, ghost,
+                                       impl=seg_impl, block_m=block_m)
+    dst_run, _ = seg.run_field(s_dst, starts, rid, m_cap, ghost,
+                               impl=seg_impl, block_m=block_m)
 
     keep = run_valid & (src_run < ghost)
     out_src = jnp.where(keep, src_run, ghost).astype(jnp.int32)

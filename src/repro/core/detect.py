@@ -17,10 +17,12 @@ import jax.numpy as jnp
 
 from repro.core import _segments as seg
 from repro.core.split import split_labels
+from repro.kernels import ops
 
 
 def disconnected_communities_impl(src, dst, w, C, n_nodes, *, axis=None,
-                                  impl: str = "coo", adj=None):
+                                  impl: str = "coo", adj=None,
+                                  seg_impl: str = "auto", block_m: int = 0):
     """Flags + counts of internally-disconnected communities (unjitted).
 
     Returns a dict with:
@@ -31,21 +33,23 @@ def disconnected_communities_impl(src, dst, w, C, n_nodes, *, axis=None,
     see :func:`repro.core.split.split_labels`); ``adj`` optionally shares
     a precomputed bool[nv, nv] adjacency with the dense fixpoint (the
     warm-update path amortizes one scatter across its phases).
+    ``seg_impl``/``block_m`` select the segment-reduction backend for the
+    fixpoint and the piece count (integer math — every impl exact).
     """
     nv = C.shape[0]
     ghost = nv - 1
     node_valid = jnp.arange(nv) < n_nodes
 
     L, _ = split_labels(src, dst, w, C, mode="pj", axis=axis, impl=impl,
-                        adj=adj)
+                        adj=adj, seg_impl=seg_impl, block_m=block_m)
     # count distinct (C, L) pairs per community: sort pairs, count run starts
     c_key = jnp.where(node_valid, C, ghost).astype(jnp.int32)
     l_key = jnp.where(node_valid, L, ghost).astype(jnp.int32)
     s_c, s_l = jax.lax.sort((c_key, l_key), num_keys=2)
     starts = seg.run_starts(s_c, s_l)
-    pieces = jax.ops.segment_sum(
-        jnp.where(starts & (s_c < ghost), 1, 0), s_c, num_segments=nv
-    )
+    pieces = ops.segreduce_sorted(
+        jnp.where(starts & (s_c < ghost), 1, 0), s_c, nv, op="sum",
+        impl=seg_impl, block_m=block_m)
     disconnected = pieces > 1
     n_disc = jnp.sum(disconnected.astype(jnp.int32))
     n_comms = seg.count_communities(C, node_valid, nv)
@@ -59,5 +63,5 @@ def disconnected_communities_impl(src, dst, w, C, n_nodes, *, axis=None,
 
 
 disconnected_communities = partial(
-    jax.jit, static_argnames=("axis", "impl")
+    jax.jit, static_argnames=("axis", "impl", "seg_impl", "block_m")
 )(disconnected_communities_impl)

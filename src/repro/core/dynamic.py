@@ -40,11 +40,13 @@ import numpy as np
 
 from repro.core import _segments as seg
 from repro.core.detect import disconnected_communities_impl
-from repro.core.local_move import MoveState, _half_sweep, _half_sweep_dense, \
-    _hash_parity, realized_modularity
+from repro.core.local_move import MoveState, _half_sweep, \
+    _half_sweep_dense, _half_sweep_scatter, _hash_parity, \
+    realized_modularity
 from repro.core.modularity import modularity
 from repro.core.split import split_labels
 from repro.graph.container import Graph
+from repro.kernels import ops
 
 
 def merge_edge_deltas(g: Graph, new_src, new_dst, new_dw):
@@ -168,14 +170,17 @@ def affected_vertices(g: Graph, C, touched):
 
 def warm_local_move_impl(src, dst, w, C_prev, two_m, active0, *, tau=1e-3,
                          max_iters: int = 10, sync: str = "handshake",
-                         scan: str = "sort", adj=None):
+                         scan: str = "sort", adj=None,
+                         seg_impl: str = "auto", block_m: int = 0):
     """Local-moving warm-started from C_prev with a restricted active set.
 
     Mirrors local_move but (a) starts from the previous membership instead
     of singletons and (b) seeds the pruning mask with the screening set.
     ``scan`` selects the sweep implementation exactly as in local_move;
-    ``adj`` optionally shares a precomputed bool[nv, nv] adjacency (dense
-    scan) so callers amortize the scatter across phases.
+    ``seg_impl``/``block_m`` select the sortscan's segment-reduction
+    backend (kernels/ops.py; all impls bit-identical); ``adj`` optionally
+    shares a precomputed bool[nv, nv] adjacency (dense scan) so callers
+    amortize the scatter across phases.
     Unjitted — vmap/jit-compose freely (the batched update path vmaps it).
     Returns (C, Sigma, iterations).
     """
@@ -183,6 +188,7 @@ def warm_local_move_impl(src, dst, w, C_prev, two_m, active0, *, tau=1e-3,
     ghost = nv - 1
     ids = jnp.arange(nv, dtype=jnp.int32)
     owned = None if scan == "dense" else jnp.ones((nv,), bool)
+    seg_impl = ops.resolve_impl(seg_impl)
     K = jax.ops.segment_sum(w, src, num_segments=nv)
     C0 = C_prev.astype(jnp.int32).at[ghost].set(ghost)
     Sigma0 = jax.ops.segment_sum(K, C0, num_segments=nv)
@@ -192,8 +198,13 @@ def warm_local_move_impl(src, dst, w, C_prev, two_m, active0, *, tau=1e-3,
         if adj is None:
             adj = jnp.zeros((nv, nv), bool).at[src, dst].set(True)
         sweep_kw["valid_cell"] = (ids[:, None] < ghost) & (ids[None, :] < ghost)
+    elif seg_impl == "scatter":
+        sweep = _half_sweep_scatter
+        adj = None
     else:
         sweep = _half_sweep
+        sweep_kw["seg_impl"] = seg_impl
+        sweep_kw["block_m"] = block_m
         adj = None
 
     def body(state: MoveState) -> MoveState:
@@ -212,9 +223,14 @@ def warm_local_move_impl(src, dst, w, C_prev, two_m, active0, *, tau=1e-3,
         q_now = realized_modularity(src, dst, w, C, Sigma, two_m, owned, None)
         if scan == "dense":
             nbr_moved = jnp.any(adj & moved_any[:, None], axis=0)
-        else:
+        elif seg_impl == "scatter":
             nbr_moved = jax.ops.segment_max(
                 moved_any[src].astype(jnp.int32), dst, num_segments=nv) > 0
+        else:
+            # sorted-src wake-up: exact on the symmetric COO (booleans)
+            nbr_moved = ops.segreduce_sorted(
+                moved_any[dst].astype(jnp.int32), src, nv, op="max",
+                impl=seg_impl, block_m=block_m) > 0
         active = nbr_moved | (want & active)
         better = q_now > q_best
         C_best = jnp.where(better, C, C_best)
@@ -239,19 +255,22 @@ def warm_local_move_impl(src, dst, w, C_prev, two_m, active0, *, tau=1e-3,
 
 
 warm_local_move = partial(
-    jax.jit, static_argnames=("max_iters", "sync", "scan")
+    jax.jit, static_argnames=("max_iters", "sync", "scan", "seg_impl",
+                              "block_m")
 )(warm_local_move_impl)
 
 
 def warm_update_impl(g: Graph, C_prev, touched, *, tau=1e-3,
-                     max_iters: int = 10, scan: str = "sort"):
+                     max_iters: int = 10, scan: str = "sort",
+                     seg_impl: str = "auto", block_m: int = 0):
     """One warm update on an already-rewritten graph (jit/vmap-composable).
 
     screening -> warm local move -> split -> renumber -> detector ->
     modularity, all on device.  This is the ONE compute path both the
     store's immediate update (:meth:`repro.service.store.ResultStore.
     apply_update`) and the engine's batched update path run, so their
-    partitions agree exactly.
+    partitions agree exactly.  ``seg_impl``/``block_m`` pick the
+    segment-reduction backend for every phase (bit-identical results).
 
     Returns a dict: ``C`` (dense int32[nv] membership), ``n_communities``,
     ``n_disconnected``, ``fraction``, ``q``, ``iterations``,
@@ -268,12 +287,16 @@ def warm_update_impl(g: Graph, C_prev, touched, *, tau=1e-3,
     C, _, it = warm_local_move_impl(
         g.src, g.dst, g.w, C_prev, two_m, active0,
         tau=tau, max_iters=max_iters, scan=scan, adj=adj,
+        seg_impl=seg_impl, block_m=block_m,
     )
-    labels, _ = split_labels(g.src, g.dst, g.w, C, impl=impl, adj=adj)
+    labels, _ = split_labels(g.src, g.dst, g.w, C, impl=impl, adj=adj,
+                             seg_impl=seg_impl, block_m=block_m)
     C_new, n_comms = seg.renumber(labels, g.node_mask(), g.nv)
     det = disconnected_communities_impl(
-        g.src, g.dst, g.w, C_new, g.n_nodes, impl=impl, adj=adj)
-    q = modularity(g.src, g.dst, g.w, C_new)
+        g.src, g.dst, g.w, C_new, g.n_nodes, impl=impl, adj=adj,
+        seg_impl=seg_impl, block_m=block_m)
+    q = modularity(g.src, g.dst, g.w, C_new, seg_impl=seg_impl,
+                   block_m=block_m)
     return dict(
         C=C_new,
         n_communities=n_comms,
@@ -286,12 +309,13 @@ def warm_update_impl(g: Graph, C_prev, touched, *, tau=1e-3,
 
 
 warm_update = partial(
-    jax.jit, static_argnames=("max_iters", "scan")
+    jax.jit, static_argnames=("max_iters", "scan", "seg_impl", "block_m")
 )(warm_update_impl)
 
 
 def update_communities(g_old: Graph, C_prev, updates, *, tau=1e-3,
-                       max_iters: int = 10, scan: str = "sort"):
+                       max_iters: int = 10, scan: str = "sort",
+                       seg_impl: str = "auto", block_m: int = 0):
     """Incrementally update a partition after an edge batch.
 
     updates: (u int32[], v int32[], dw f32[]) undirected **signed**
@@ -308,7 +332,8 @@ def update_communities(g_old: Graph, C_prev, updates, *, tau=1e-3,
     g = apply_edge_updates(g_old, src, dst, ww)
     t = jnp.asarray(touched_mask(g.nv, u, v))
     out = warm_update(g, jnp.asarray(C_prev), t,
-                      tau=tau, max_iters=max_iters, scan=scan)
+                      tau=tau, max_iters=max_iters, scan=scan,
+                      seg_impl=seg_impl, block_m=block_m)
     stats = dict(
         iterations=out["iterations"],
         n_communities=out["n_communities"],

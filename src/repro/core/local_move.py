@@ -55,6 +55,26 @@ Scan strategies (``scan=``): the sweep above is expressed twice.
   argmax decision, and realized-Q trajectory) matches the sort path
   float for float (asserted in tests/test_service.py).  Single-device
   only (``axis`` must be None).
+
+Sortscan backend (``seg_impl=``): the sort path's reductions route
+through the segment-reduction backend (:mod:`repro.kernels.ops` — the
+single dispatch point; 'auto' picks the XLA sorted path on CPU and the
+Pallas kernels on TPU).  The default fused sweep does **one sort carrying
+a single permutation payload and two fused reduction passes** — pass A:
+one 2-channel in-order run reduction (true + anchored K_{i->c} together);
+pass B: the per-vertex Eq.-2 argmax as multi-channel sorted segment
+max/min keyed directly by the sorted source ids — replacing the
+pre-backend formulation's four-plus scatter rounds (two run_field
+scatters, two separate run reductions, and unsorted per-vertex
+reductions).  ``seg_impl='scatter'`` keeps that pre-backend sweep
+callable as the paired-benchmark baseline (bench_kernels/check_bench).
+All seg_impls are bit-identical — the backend's in-order fold contract —
+so partitions match across 'xla'/'pallas'/'scatter' AND the dense twin.
+
+The fused sweep (and the sorted wake-up reduction under pruning) assumes
+the container's sorted-edge invariant (``src`` nondecreasing —
+graph/container.py; aggregation preserves it).  ``seg_impl='scatter'``
+lifts the assumption for callers with raw unsorted COO.
 """
 from __future__ import annotations
 
@@ -66,6 +86,7 @@ import jax.numpy as jnp
 
 from repro.core import _segments as seg
 from repro.distributed import collectives as col
+from repro.kernels import ops
 
 NEG = jnp.float32(-jnp.inf)
 
@@ -109,13 +130,127 @@ def realized_modularity(src, dst, w, C, Sigma, two_m, owned, axis):
 
 
 def _half_sweep(src, dst, w, C, K, Sigma, two_m, owned, movable, axis,
-                target_ok=None, anchored=True):
-    """One synchronous half-sweep. Returns (C_new, Sigma_new, moved, gain).
+                target_ok=None, anchored=True, seg_impl="xla", block_m=0):
+    """One synchronous half-sweep (fused sortscan). Returns
+    (C_new, Sigma_new, moved, gain, want).
 
     ``target_ok``: bool[nv] — if given, moves are only allowed into
     communities flagged True (the handshake schedule).
     ``anchored``: join-attraction counts only frozen neighbors (see below);
     disabled for the 'all' ablation where nothing is frozen.
+
+    Fused formulation (bit-identical to :func:`_half_sweep_scatter`, the
+    pre-backend twin): one permutation sort, pass A = a single 2-channel
+    in-order run reduction producing true and anchored K_{i->c} together,
+    Eq.-2 scoring per run representative in **element space**, pass B =
+    multi-channel sorted segment max/min keyed by the sorted source ids
+    (``s_src`` is nondecreasing by construction, so no second key layout
+    is ever materialized).  The two run_field scatter rounds disappear
+    entirely: run sums come back per element via the ``Wc[rid]`` gather,
+    and the run's (vertex, community) identity is just ``(s_src, s_cd)``
+    read at run-start rows.
+    """
+    nv = C.shape[0]
+    m_cap = src.shape[0]
+    ghost = nv - 1
+
+    # --- scanCommunities: sort by (src, C[dst]); gather payloads ---------
+    cd = C[dst]
+    s_src, s_cd, perm = seg.sort_runs(src, cd)
+    s_dst = dst[perm]
+    s_w = w[perm]
+    not_self = s_src != s_dst  # exclude self-loops from scan (paper Alg. 4)
+    w_all = jnp.where(not_self, s_w, 0.0)
+    # Anchored joins: attraction toward a *target* community only counts
+    # neighbors frozen this half-sweep.  A synchronous join is thereby
+    # always anchored to a member that provably stays, which suppresses the
+    # join-while-anchor-leaves races that mass-produce internally
+    # disconnected communities under Jacobi dynamics (DESIGN.md §2).
+    w_frozen = (jnp.where(not_self & ~movable[s_dst], s_w, 0.0)
+                if anchored else w_all)
+    starts = seg.run_starts(s_src, s_cd)
+    rid = seg.run_ids(starts)
+    # pass A: both weight channels in ONE in-order run reduction
+    Wc = seg.runs_reduce(jnp.stack([w_all, w_frozen], axis=1), rid, m_cap,
+                         impl=seg_impl, block_m=block_m)
+    W_all_e = Wc[rid, 0]           # true K_{i->c}, per element of the run
+    W_frz_e = Wc[rid, 1]           # anchored K_{i->c}
+
+    # --- K_{i->d}: true weight to own community (excluding self) ---------
+    # each vertex has at most ONE own run, so this is a select: one
+    # scatter-set at own-run starts (exact — no duplicate indices)
+    own_start = starts & (s_cd == C[s_src])
+    K_own = jnp.zeros(nv, jnp.float32).at[
+        jnp.where(own_start, s_src, ghost)].set(
+        jnp.where(own_start, W_all_e, 0.0), mode="drop")
+    K_own = K_own.at[ghost].set(0.0)
+
+    # --- delta-modularity per run representative (paper Eq. 2) -----------
+    # Score with the true attraction W_all; *gate* on having at least one
+    # frozen anchor in the target (W_frz frozen-filtered > 0), so the join
+    # stays connected even if every movable member departs simultaneously.
+    Ki = K[s_src]
+    d_of_i = C[s_src]
+    dq = (
+        2.0 * (W_all_e - K_own[s_src]) / two_m
+        - 2.0 * Ki * (Ki + Sigma[s_cd] - Sigma[d_of_i]) / (two_m * two_m)
+    )
+    valid = starts & (s_src < ghost) & (s_cd < ghost) & (s_cd != d_of_i)
+    cand = valid & (W_frz_e > 0.0) & movable[s_src] & owned[s_src]
+    if target_ok is not None:
+        cand = cand & target_ok[s_cd]
+    # 'want': the vertex has a positive move ignoring schedule gates — used
+    # to keep schedule-blocked vertices awake under pruning (a pruned vertex
+    # whose merge was blocked by an unlucky parity roll must retry, or the
+    # move is lost forever once its neighborhood goes quiet).  Zero-weight
+    # runs are excluded: cand requires W_frz > 0 <= W_all, so a zero-weight
+    # target can never become admissible and shouldn't hold a vertex awake
+    # — this also keeps the dense scan (whose cells exist iff W_all > 0)
+    # bit-equivalent even when zero-weight edges appear (refine's masked
+    # graphs, weight-delta updates).
+    base = valid & (W_all_e > 0.0)
+    # pass B: want and best fused into one 2-channel sorted segment max
+    dq2 = jnp.stack([jnp.where(base, dq, NEG), jnp.where(cand, dq, NEG)],
+                    axis=1)
+    mx = ops.segreduce_sorted(dq2, s_src, nv, op="max", impl=seg_impl,
+                              block_m=block_m)
+    want = mx[:, 0] > 0.0
+    best = mx[:, 1]
+
+    # --- argmax per source vertex (min community id breaks ties) ---------
+    dq_c = jnp.where(cand, dq, NEG)
+    is_best = cand & (dq_c >= best[s_src] - 0.0)
+    c_star = ops.segreduce_sorted(
+        jnp.where(is_best, s_cd, seg.INT_MAX), s_src, nv, op="min",
+        impl=seg_impl, block_m=block_m)
+    move = (best > 0.0) & (c_star < ghost)
+    C_local = jnp.where(move, c_star.astype(jnp.int32), C)
+
+    # --- merge shard-local decisions (each vertex owned by one shard) ----
+    C_new = col.psum(jnp.where(owned, C_local, 0), axis)
+    C_new = C_new.at[ghost].set(ghost)
+    moved = col.psum(jnp.where(owned & move, 1, 0).astype(jnp.int32), axis) > 0
+
+    # --- exact Sigma recompute (synchronous) ------------------------------
+    # unsorted keys (C_new): stays an in-order XLA scatter on every backend
+    # — nv-sized, off the critical path, and in-order is what keeps Sigma
+    # bit-identical across seg_impls and the dense twin
+    Sigma_new = col.psum(
+        jax.ops.segment_sum(jnp.where(owned, K, 0.0), C_new, num_segments=nv),
+        axis,
+    )
+    gain = col.psum(jnp.sum(jnp.where(owned & move, best, 0.0)), axis)
+    want = col.pmax((want & owned).astype(jnp.int32), axis) > 0
+    return C_new, Sigma_new, moved, gain, want
+
+
+def _half_sweep_scatter(src, dst, w, C, K, Sigma, two_m, owned, movable, axis,
+                        target_ok=None, anchored=True):
+    """The pre-backend scatter sweep (``seg_impl='scatter'``).
+
+    Kept verbatim as (a) the paired baseline the bench gate measures the
+    fused sweep against and (b) the fallback for raw unsorted COO inputs.
+    Bit-identical outputs to :func:`_half_sweep`.
     """
     nv = C.shape[0]
     m_cap = src.shape[0]
@@ -125,19 +260,15 @@ def _half_sweep(src, dst, w, C, K, Sigma, two_m, owned, movable, axis,
     cd = C[dst]
     not_self = src != dst  # exclude self-loops from scan (paper Alg. 4)
     w_all = jnp.where(not_self, w, 0.0)
-    # Anchored joins: attraction toward a *target* community only counts
-    # neighbors frozen this half-sweep.  A synchronous join is thereby
-    # always anchored to a member that provably stays, which suppresses the
-    # join-while-anchor-leaves races that mass-produce internally
-    # disconnected communities under Jacobi dynamics (DESIGN.md §2).
     w_frozen = jnp.where(not_self & ~movable[dst], w, 0.0) if anchored else w_all
     s_src, s_cd, s_wf, s_wa = seg.sort_by_key2(src, cd, w_frozen, w_all)
     starts = seg.run_starts(s_src, s_cd)
     rid = seg.run_ids(starts)
-    W_ic = seg.runs_reduce(s_wf, rid, m_cap)       # anchored K_{i->c} per run
-    W_ic_all = seg.runs_reduce(s_wa, rid, m_cap)   # true K_{i->c} per run
-    i_run, run_valid = seg.run_field(s_src, starts, rid, m_cap, ghost)
-    c_run, _ = seg.run_field(s_cd, starts, rid, m_cap, ghost)
+    W_ic = seg.runs_reduce(s_wf, rid, m_cap, impl="scatter")
+    W_ic_all = seg.runs_reduce(s_wa, rid, m_cap, impl="scatter")
+    i_run, run_valid = seg.run_field(s_src, starts, rid, m_cap, ghost,
+                                     impl="scatter")
+    c_run, _ = seg.run_field(s_cd, starts, rid, m_cap, ghost, impl="scatter")
 
     # --- K_{i->d}: true weight to own community (excluding self) ---------
     own = (c_run == C[i_run]) & run_valid
@@ -146,9 +277,6 @@ def _half_sweep(src, dst, w, C, K, Sigma, two_m, owned, movable, axis,
     )
 
     # --- delta-modularity per candidate run (paper Eq. 2) ----------------
-    # Score with the true attraction W_ic_all; *gate* on having at least one
-    # frozen anchor in the target (W_ic frozen-filtered > 0), so the join
-    # stays connected even if every movable member departs simultaneously.
     Ki = K[i_run]
     d_of_i = C[i_run]
     dq = (
@@ -166,15 +294,6 @@ def _half_sweep(src, dst, w, C, K, Sigma, two_m, owned, movable, axis,
     )
     if target_ok is not None:
         cand = cand & target_ok[c_run]
-    # 'want': the vertex has a positive move ignoring schedule gates — used
-    # to keep schedule-blocked vertices awake under pruning (a pruned vertex
-    # whose merge was blocked by an unlucky parity roll must retry, or the
-    # move is lost forever once its neighborhood goes quiet).  Zero-weight
-    # runs are excluded: cand requires W_ic(frozen) > 0 <= W_ic_all, so a
-    # zero-weight target can never become admissible and shouldn't hold a
-    # vertex awake — this also keeps the dense scan (whose cells exist iff
-    # W_ic_all > 0) bit-equivalent even when zero-weight edges appear
-    # (refine's masked graphs, weight-delta updates).
     base = (run_valid & (i_run < ghost) & (c_run < ghost)
             & (c_run != d_of_i) & (W_ic_all > 0.0))
     dq_all = jnp.where(base, dq, NEG)
@@ -291,7 +410,8 @@ def _half_sweep_dense(src, dst, w, C, K, Sigma, two_m, owned, movable, axis,
     return C_new, Sigma_new, moved, gain, want
 
 
-@partial(jax.jit, static_argnames=("max_iters", "sync", "prune", "axis", "scan"))
+@partial(jax.jit, static_argnames=("max_iters", "sync", "prune", "axis",
+                                   "scan", "seg_impl", "block_m"))
 def local_move(
     src,
     dst,
@@ -310,6 +430,8 @@ def local_move(
     scan: str = "sort",
     skip=None,
     adj=None,
+    seg_impl: str = "auto",
+    block_m: int = 0,
 ):
     """Run the local-moving phase to convergence.
 
@@ -319,6 +441,11 @@ def local_move(
 
     ``scan='dense'`` selects the small-graph dense community-matrix sweep
     (bit-identical results; single-device only — see module docstring).
+
+    ``seg_impl`` selects the sortscan's segment-reduction backend
+    ('auto' | 'xla' | 'pallas' | 'scatter'; module docstring); ``block_m``
+    is the Pallas kernel block size (0 = default / autotuned by the
+    service engine).  All choices return bit-identical results.
 
     ``skip`` (traced bool[] or None): when True the loop exits before the
     first sweep and returns the initial state.  Callers that re-enter the
@@ -338,6 +465,7 @@ def local_move(
         owned = jnp.ones((nv,), bool)
     no_skip = jnp.bool_(False) if skip is None else skip
     ids = jnp.arange(nv, dtype=jnp.int32)
+    seg_impl = ops.resolve_impl(seg_impl)
     sweep_kw = {}
     if scan == "dense":
         sweep = _half_sweep_dense
@@ -349,8 +477,12 @@ def local_move(
             adj = jnp.zeros((nv, nv), bool).at[src, dst].set(True)
         # loop-invariant cell validity, hoisted out of the sweeps
         sweep_kw["valid_cell"] = (ids[:, None] < ghost) & (ids[None, :] < ghost)
+    elif seg_impl == "scatter":
+        sweep = _half_sweep_scatter
     else:
         sweep = _half_sweep
+        sweep_kw["seg_impl"] = seg_impl
+        sweep_kw["block_m"] = block_m
 
     def body(state: MoveState) -> MoveState:
         (C, Sigma, active, q_prev, dq_it, _, it, n_prod,
@@ -377,10 +509,18 @@ def local_move(
             # neighbors of moved vertices wake up; everyone else sleeps
             if scan == "dense":
                 nbr_moved = jnp.any(adj & moved_any[:, None], axis=0)
-            else:
+            elif seg_impl == "scatter":
                 nbr_moved = jax.ops.segment_max(
                     moved_any[src].astype(jnp.int32), dst, num_segments=nv
                 )
+                nbr_moved = col.pmax(nbr_moved, axis) > 0
+            else:
+                # keyed by the sorted src instead of the unsorted dst: on
+                # the symmetric directed COO, out-neighbors == in-neighbors
+                # as sets, and booleans make any formulation exact
+                nbr_moved = ops.segreduce_sorted(
+                    moved_any[dst].astype(jnp.int32), src, nv, op="max",
+                    impl=seg_impl, block_m=block_m)
                 nbr_moved = col.pmax(nbr_moved, axis) > 0
             active = nbr_moved | want  # schedule-blocked desire stays awake
         else:

@@ -36,6 +36,7 @@ from repro.core.aggregate import aggregate
 from repro.core.local_move import local_move
 from repro.core.split import split_labels
 from repro.graph.container import Graph
+from repro.kernels import ops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,7 +69,8 @@ def _split_mode(split: str) -> str:
 
 
 def refine_labels(src, dst, w, C, two_m, *, tau, max_iters=10, axis=None,
-                  owned=None, scan="sort", skip=None):
+                  owned=None, scan="sort", skip=None, seg_impl="auto",
+                  block_m=0):
     """Leiden refinement: local-move from singletons restricted to each
     community's bound — implemented as local_move over the community-masked
     edge set (cross-community weights zeroed), scored against the full-graph
@@ -76,7 +78,11 @@ def refine_labels(src, dst, w, C, two_m, *, tau, max_iters=10, axis=None,
     a positive in-community edge)."""
     nv = C.shape[0]
     w_in = jnp.where(C[src] == C[dst], w, 0.0)
-    K_in = jax.ops.segment_sum(w_in, src, num_segments=nv)
+    if seg_impl == "scatter":
+        K_in = jax.ops.segment_sum(w_in, src, num_segments=nv)
+    else:
+        K_in = ops.segreduce_sorted(w_in, src, nv, op="sum", impl=seg_impl,
+                                    block_m=block_m)
     if axis is not None:
         from repro.distributed import collectives as col
         K_in = col.psum(K_in, axis)
@@ -84,13 +90,14 @@ def refine_labels(src, dst, w, C, two_m, *, tau, max_iters=10, axis=None,
     R, _, _ = local_move(
         src, dst, w_in, C0, K_in, K_in, two_m,
         tau=tau, max_iters=max_iters, axis=axis, owned=owned, scan=scan,
-        skip=skip,
+        skip=skip, seg_impl=seg_impl, block_m=block_m,
     )
     return R
 
 
 def louvain_impl(g: Graph, cfg: LouvainConfig = LouvainConfig(), *, axis=None,
-                 owned=None, scan: str = "sort"):
+                 owned=None, scan: str = "sort", seg_impl: str = "auto",
+                 block_m: int = 0):
     """Run GSP-Louvain (unjitted — vmap/jit-compose freely).
 
     Returns (C int32[nv] dense top-level membership, stats dict).
@@ -101,6 +108,14 @@ def louvain_impl(g: Graph, cfg: LouvainConfig = LouvainConfig(), *, axis=None,
     sortscan formulation; 'dense' routes local-move/split/aggregate through
     the small-``nv`` dense community-matrix kernels (bit-identical results,
     single-device only — the batched service engine's path).
+
+    ``seg_impl`` selects the sortscan's segment-reduction backend for
+    every phase ('auto' | 'xla' | 'pallas' | 'scatter' — kernels/ops.py;
+    'auto' is backend-keyed: XLA sorted path on CPU, Pallas on TPU;
+    'scatter' is the pre-backend formulation kept for paired benchmarks).
+    ``block_m`` is the Pallas kernel block size (0 = default; the service
+    engine passes the per-bucket autotuned value).  Partitions are
+    bit-identical across every (scan, seg_impl) combination.
     """
     nv = g.nv
     two_m = g.total_weight_2m()
@@ -108,10 +123,17 @@ def louvain_impl(g: Graph, cfg: LouvainConfig = LouvainConfig(), *, axis=None,
     mode = _split_mode(cfg.split)
     split_impl = "dense" if scan == "dense" else "coo"
     agg_impl = "dense" if scan == "dense" else "sort"
+    seg_impl = ops.resolve_impl(seg_impl)
 
     def body(st: PassState) -> PassState:
         node_valid = jnp.arange(nv) < st.n_cur
-        K = jax.ops.segment_sum(st.ew, st.esrc, num_segments=nv)
+        # aggregation emits run-sorted super-edges, so esrc keeps the
+        # container's sorted invariant across passes
+        if seg_impl == "scatter":
+            K = jax.ops.segment_sum(st.ew, st.esrc, num_segments=nv)
+        else:
+            K = ops.segreduce_sorted(st.ew, st.esrc, nv, op="sum",
+                                     impl=seg_impl, block_m=block_m)
         C0 = jnp.arange(nv, dtype=jnp.int32)
         # one adjacency scatter per pass, shared by local-move pruning and
         # the split fixpoint (dense scan only)
@@ -121,19 +143,20 @@ def louvain_impl(g: Graph, cfg: LouvainConfig = LouvainConfig(), *, axis=None,
             st.esrc, st.edst, st.ew, C0, K, K, two_m,
             tau=st.tau, max_iters=cfg.max_iters, sync=cfg.sync,
             prune=cfg.prune, axis=axis, owned=owned, scan=scan,
-            skip=st.done, adj=adj,
+            skip=st.done, adj=adj, seg_impl=seg_impl, block_m=block_m,
         )
         if cfg.split == "refine":
             labels = refine_labels(
                 st.esrc, st.edst, st.ew, C, two_m,
                 tau=st.tau, max_iters=cfg.max_iters, axis=axis, owned=owned,
-                scan=scan, skip=st.done,
+                scan=scan, skip=st.done, seg_impl=seg_impl, block_m=block_m,
             )
         elif do_sp:
             labels, _ = split_labels(
                 st.esrc, st.edst, st.ew, C,
                 mode=mode, max_iters=cfg.split_max_iters, axis=axis,
-                impl=split_impl, skip=st.done, adj=adj,
+                impl=split_impl, skip=st.done, adj=adj, seg_impl=seg_impl,
+                block_m=block_m,
             )
         else:
             labels = C
@@ -147,7 +170,8 @@ def louvain_impl(g: Graph, cfg: LouvainConfig = LouvainConfig(), *, axis=None,
         done = converged | low_shrink
 
         nsrc, ndst, nw = aggregate(st.esrc, st.edst, st.ew, C_dense,
-                                   impl=agg_impl)
+                                   impl=agg_impl, seg_impl=seg_impl,
+                                   block_m=block_m)
         # freeze the graph if we're done (avoids dead aggregation writes)
         esrc = jnp.where(done, st.esrc, nsrc)
         edst = jnp.where(done, st.edst, ndst)
@@ -177,6 +201,7 @@ def louvain_impl(g: Graph, cfg: LouvainConfig = LouvainConfig(), *, axis=None,
         labels, _ = split_labels(
             g.src, g.dst, g.w, Ctop, mode=mode,
             max_iters=cfg.split_max_iters, axis=axis, impl=split_impl,
+            seg_impl=seg_impl, block_m=block_m,
         )
         Ctop, _ = seg.renumber(labels, g.node_mask(), nv)
     n_final = seg.count_communities(Ctop, g.node_mask(), nv)
@@ -184,7 +209,9 @@ def louvain_impl(g: Graph, cfg: LouvainConfig = LouvainConfig(), *, axis=None,
     return Ctop, stats
 
 
-louvain = partial(jax.jit, static_argnames=("cfg", "axis", "scan"))(louvain_impl)
+louvain = partial(
+    jax.jit, static_argnames=("cfg", "axis", "scan", "seg_impl", "block_m")
+)(louvain_impl)
 
 
 # --------------------------------------------------------------------------
@@ -199,16 +226,20 @@ def _timed(fn, *args, **kw):
     return out, time.perf_counter() - t0
 
 
-def louvain_staged(g: Graph, cfg: LouvainConfig = LouvainConfig()):
+def louvain_staged(g: Graph, cfg: LouvainConfig = LouvainConfig(), *,
+                   seg_impl: str = "auto", block_m: int = 0):
     """Host-staged GSP-Louvain with per-phase / per-pass wall times.
 
     Returns (C, stats) where stats carries ``phase_seconds`` =
     {local_move, split, aggregate, other} and ``pass_seconds`` list.
+    ``seg_impl``/``block_m`` select the segment-reduction backend exactly
+    as in :func:`louvain_impl`.
     """
     nv = g.nv
     two_m = g.total_weight_2m()
     do_sp = cfg.split.startswith("sp")
     mode = _split_mode(cfg.split)
+    seg_impl = ops.resolve_impl(seg_impl)
 
     esrc, edst, ew = g.src, g.dst, g.w
     Ctop = jnp.arange(nv, dtype=jnp.int32)
@@ -230,19 +261,22 @@ def louvain_staged(g: Graph, cfg: LouvainConfig = LouvainConfig()):
         (C, _, li_a), t_lm = _timed(
             local_move, esrc, edst, ew, C0, K, K, two_m,
             tau=tau, max_iters=cfg.max_iters, sync=cfg.sync, prune=cfg.prune,
+            seg_impl=seg_impl, block_m=block_m,
         )
         phase["local_move"] += t_lm
         li = int(li_a)
         if cfg.split == "refine":
             (labels), t_sp = _timed(
                 refine_labels, esrc, edst, ew, C, two_m,
-                tau=tau, max_iters=cfg.max_iters,
+                tau=tau, max_iters=cfg.max_iters, seg_impl=seg_impl,
+                block_m=block_m,
             )
             phase["split"] += t_sp
         elif do_sp:
             (labels, _), t_sp = _timed(
                 split_labels, esrc, edst, ew, C,
-                mode=mode, max_iters=cfg.split_max_iters,
+                mode=mode, max_iters=cfg.split_max_iters, seg_impl=seg_impl,
+                block_m=block_m,
             )
             phase["split"] += t_sp
         else:
@@ -256,7 +290,8 @@ def louvain_staged(g: Graph, cfg: LouvainConfig = LouvainConfig()):
         pass_seconds.append(time.perf_counter() - t_pass)
         if li <= 1 or n_comms > cfg.aggregation_tolerance * n_cur:
             break
-        (agg, t_ag) = _timed(aggregate, esrc, edst, ew, C_dense)
+        (agg, t_ag) = _timed(aggregate, esrc, edst, ew, C_dense,
+                             seg_impl=seg_impl, block_m=block_m)
         esrc, edst, ew = agg
         phase["aggregate"] += t_ag
         n_cur = n_comms
@@ -265,7 +300,8 @@ def louvain_staged(g: Graph, cfg: LouvainConfig = LouvainConfig()):
     if cfg.split.startswith("sl"):
         (labels, _), t_sp = _timed(
             split_labels, g.src, g.dst, g.w, Ctop,
-            mode=mode, max_iters=cfg.split_max_iters,
+            mode=mode, max_iters=cfg.split_max_iters, seg_impl=seg_impl,
+            block_m=block_m,
         )
         phase["split"] += t_sp
         Ctop, _ = seg.renumber(labels, g.node_mask(), nv)

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.core import _segments as seg
 from repro.core.local_move import _hash_parity
+from repro.kernels import ops
 
 
 class LPAState(NamedTuple):
@@ -26,16 +27,22 @@ class LPAState(NamedTuple):
     it: jax.Array
 
 
-def lpa_run(g, *, max_iters: int = 50):
+def lpa_run(g, *, max_iters: int = 50, seg_impl: str = "auto",
+            block_m: int = 0):
     """Weighted LPA on a :class:`repro.graph.container.Graph`.
 
-    Returns (dense labels int32[nv], iterations int32).
+    Returns (dense labels int32[nv], iterations int32).  ``seg_impl``
+    selects the segment-reduction backend (kernels/ops.py) for the
+    per-round scan — the same fused sortscan shape as local_move: one
+    permutation sort, one run reduction, sorted per-vertex reductions
+    keyed directly by the sorted source ids.
     """
     nv = g.nv
     src, dst, w = g.src, g.dst, g.w
     m_cap = g.m_cap
     ids = jnp.arange(nv, dtype=jnp.int32)
     ghost = nv - 1
+    seg_impl = ops.resolve_impl(seg_impl)
 
     def body(st: LPAState) -> LPAState:
         C, ch_prev, _, it = st
@@ -43,27 +50,30 @@ def lpa_run(g, *, max_iters: int = 50):
         # per-vertex best label among neighbors by total incident weight:
         # sort edges by (src, C[dst]); run-reduce weights; argmax per src
         cd = C[dst]
-        s_src, s_cd, s_w = seg.sort_by_key2(src, cd, w)
+        s_src, s_cd, perm = seg.sort_runs(src, cd)
+        s_w = w[perm]
         starts = seg.run_starts(s_src, s_cd)
         rid = seg.run_ids(starts)
-        W = seg.runs_reduce(s_w, rid, m_cap)
-        i_run, valid = seg.run_field(s_src, starts, rid, m_cap, ghost)
-        c_run, _ = seg.run_field(s_cd, starts, rid, m_cap, ghost)
-        cand = valid & (i_run < ghost) & (c_run < ghost)
+        W = seg.runs_reduce(s_w, rid, m_cap, impl=seg_impl,
+                            block_m=block_m)[rid]
+        cand = starts & (s_src < ghost) & (s_cd < ghost)
         score = jnp.where(cand, W, -jnp.inf)
-        best = jax.ops.segment_max(score, i_run, num_segments=nv)
-        is_best = cand & (score >= best[i_run])
+        best = ops.segreduce_sorted(score, s_src, nv, op="max",
+                                    impl=seg_impl, block_m=block_m)
+        is_best = cand & (score >= best[s_src])
         # random-equivalent tie-break (iteration-salted hash): min-id ties
         # snowball one label across the whole graph (the LPA "monster
         # community" epidemic; Raghavan et al. break ties randomly)
-        h = (c_run.astype(jnp.uint32) * jnp.uint32(0x9E3779B1)
+        h = (s_cd.astype(jnp.uint32) * jnp.uint32(0x9E3779B1)
              + it.astype(jnp.uint32) * jnp.uint32(0xB5297A4D))
         h = ((h ^ (h >> 15)) * jnp.uint32(0x45D9F3B)).astype(jnp.uint32)
         hkey = jnp.where(is_best, h, jnp.uint32(0xFFFFFFFF))
-        hmin = jax.ops.segment_min(hkey, i_run, num_segments=nv)
-        pick = is_best & (hkey == hmin[i_run])
-        c_star = jax.ops.segment_min(
-            jnp.where(pick, c_run, seg.INT_MAX), i_run, num_segments=nv)
+        hmin = ops.segreduce_sorted(hkey, s_src, nv, op="min",
+                                    impl=seg_impl, block_m=block_m)
+        pick = is_best & (hkey == hmin[s_src])
+        c_star = ops.segreduce_sorted(
+            jnp.where(pick, s_cd, seg.INT_MAX), s_src, nv, op="min",
+            impl=seg_impl, block_m=block_m)
         # handshake: parity-p vertices adopt labels of parity-(1-p) groups
         p = it % 2
         movable = pbit == p

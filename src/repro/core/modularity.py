@@ -4,8 +4,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
 
-def modularity(src, dst, w, C, nv=None):
+
+def modularity(src, dst, w, C, nv=None, *, seg_impl: str = "auto",
+               block_m: int = 0):
     """Q = sum_c [ sigma_c / 2m - (Sigma_c / 2m)^2 ].
 
     Uses the framework's directed-COO convention (both directions stored,
@@ -13,14 +16,25 @@ def modularity(src, dst, w, C, nv=None):
     in c (self-loops contribute once), ``Sigma_c`` sums weighted degrees.
     Padding contributes w == 0 everywhere, so no masking is needed beyond
     the ghost community being harmless (its sigma and Sigma are 0).
+
+    The per-vertex reductions are keyed by ``src`` — sorted under the
+    container invariant — and route through the segment-reduction backend
+    (``seg_impl``; all impls bit-identical).  The per-community reductions
+    are keyed by ``C`` (unsorted) and stay in-order XLA scatters.
     """
     if nv is None:
         nv = C.shape[0]
     two_m = jnp.sum(w)
-    K = jax.ops.segment_sum(w, src, num_segments=nv)
-    Sigma = jax.ops.segment_sum(K, C, num_segments=nv)
+    # both src-keyed sums in one 2-channel pass (sorted-run backend)
     internal = jnp.where(C[src] == C[dst], w, 0.0)
-    sigma = jax.ops.segment_sum(internal, src, num_segments=nv)
+    if seg_impl == "scatter":
+        K = jax.ops.segment_sum(w, src, num_segments=nv)
+        sigma = jax.ops.segment_sum(internal, src, num_segments=nv)
+    else:
+        Ks = ops.segreduce_sorted(jnp.stack([w, internal], axis=1), src, nv,
+                                  op="sum", impl=seg_impl, block_m=block_m)
+        K, sigma = Ks[:, 0], Ks[:, 1]
+    Sigma = jax.ops.segment_sum(K, C, num_segments=nv)
     sigma_c = jax.ops.segment_sum(sigma, C, num_segments=nv)
     q = sigma_c / two_m - (Sigma / two_m) ** 2
     return jnp.sum(q)

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed import collectives as col
+from repro.kernels import ops
 
 
 class SplitState(NamedTuple):
@@ -39,7 +40,8 @@ class SplitState(NamedTuple):
     it: jax.Array       # int32[]
 
 
-@partial(jax.jit, static_argnames=("mode", "max_iters", "axis", "impl"))
+@partial(jax.jit, static_argnames=("mode", "max_iters", "axis", "impl",
+                                   "seg_impl", "block_m"))
 def split_labels(
     src,
     dst,
@@ -52,6 +54,8 @@ def split_labels(
     impl: str = "coo",
     skip=None,
     adj=None,
+    seg_impl: str = "auto",
+    block_m: int = 0,
 ):
     """Label every vertex with its (component ∩ community) representative.
 
@@ -69,6 +73,11 @@ def split_labels(
         (vmap'd pass drivers pass their done flag; see local_move).
       adj: optional precomputed bool[nv, nv] edge adjacency (dense impl);
         masked down to same-community pairs here, saving the scatter.
+      seg_impl: segment-reduction backend for the coo fixpoint's per-round
+        min/max ('auto' | 'xla' | 'pallas' | 'scatter'; all exact — label
+        math is integer).  Non-scatter impls reduce keyed by the sorted
+        ``src`` (container invariant) instead of scattering over ``dst``.
+      block_m: Pallas block rows (0 = default).
 
     Returns:
       (labels int32[nv], iterations int32).  ``labels`` refines ``C``.
@@ -79,6 +88,7 @@ def split_labels(
     same = (C[src] == C[dst]) & (src < ghost) & (dst < ghost)
     INT_MAX = jnp.iinfo(jnp.int32).max
     no_skip = jnp.bool_(False) if skip is None else skip
+    seg_impl = ops.resolve_impl(seg_impl)
     if impl == "dense":
         if axis is not None:
             raise ValueError("impl='dense' is single-device only (axis=None)")
@@ -99,7 +109,11 @@ def split_labels(
             cand = jnp.min(jnp.where(A_same, L[None, :], INT_MAX), axis=1)
         else:
             cand_val = jnp.where(same, L[dst], INT_MAX)
-            cand = jax.ops.segment_min(cand_val, src, num_segments=nv)
+            if seg_impl == "scatter":
+                cand = jax.ops.segment_min(cand_val, src, num_segments=nv)
+            else:
+                cand = ops.segreduce_sorted(cand_val, src, nv, op="min",
+                                            impl=seg_impl, block_m=block_m)
             cand = col.pmin(cand, axis)
         L_upd = jnp.minimum(L, cand).astype(jnp.int32)
         if mode == "lpp":
@@ -115,10 +129,17 @@ def split_labels(
             # wake same-community neighbors of changed vertices, sleep rest
             if impl == "dense":
                 nbr = jnp.any(A_same & moved[:, None], axis=0)
-            else:
+            elif seg_impl == "scatter":
                 nbr = jax.ops.segment_max(
                     (moved[src] & same).astype(jnp.int32), dst, num_segments=nv
                 )
+                nbr = col.pmax(nbr, axis) > 0
+            else:
+                # keyed by sorted src: the `same` mask and the symmetric COO
+                # make in- and out-neighbor wake-ups identical (booleans)
+                nbr = ops.segreduce_sorted(
+                    (moved[dst] & same).astype(jnp.int32), src, nv, op="max",
+                    impl=seg_impl, block_m=block_m)
                 nbr = col.pmax(nbr, axis) > 0
             active = nbr | moved
         else:

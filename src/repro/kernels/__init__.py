@@ -1,16 +1,23 @@
 """Pallas TPU kernels for the framework's gather/reduce hot spots.
 
 Kernels (each with a pure-jnp oracle in ref.py and a jit'd wrapper with XLA
-fallback in ops.py):
+fallback in ops.py — the single dispatch point, ``impl='auto'|'xla'|
+'pallas'`` plus the legacy ``'scatter'`` baseline for the segment ops):
 
-* ``segsum``        — blocked prefix-sum; sorted segment-reduce = boundary
-                      gathers over the prefix (local-move scoring,
-                      aggregation, LP label-min).
+* ``segsum``        — blocked prefix-sum AND the in-order segmented
+                      running reduce (``segscan_blocked``: sum/max/min
+                      with a carry that resets at run starts); sorted
+                      segment-reduce = one boundary gather over the scan
+                      (``ops.segreduce_sorted`` — the backend of every
+                      Louvain sortscan phase: local-move scoring/argmax,
+                      split/LPA label min-max, aggregation, detector).
 * ``spmm``          — bucketed fixed-degree SpMM via one-hot MXU gather
                       (GNN message passing; Louvain super-vertex scans).
 * ``onehot_segsum`` — unsorted segment-sum as accumulated one-hot matmuls
                       (Sigma recompute / community histograms).
+* ``autotune``      — per-shape Pallas block-size tuner with an on-disk
+                      cache (the service engine's kernel ladder).
 """
-from repro.kernels import ops, ref
+from repro.kernels import autotune, ops, ref
 
-__all__ = ["ops", "ref"]
+__all__ = ["autotune", "ops", "ref"]

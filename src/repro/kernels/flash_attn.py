@@ -91,12 +91,16 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 )
 def flash_attention_fwd(q, k, v, *, causal: bool = True, window=None,
                         block_q: int = 128, block_k: int = 128,
-                        interpret: bool = True):
+                        interpret: bool | None = None):
     """q, k, v: [B, H, S, Dh] (same H; GQA handled by the ops wrapper).
 
     Returns [B, H, Sq, Dh].  Sq/Sk must be multiples of the block sizes
-    (ops wrapper pads).
+    (ops wrapper pads).  ``interpret=None`` resolves from the backend at
+    call time (compiled on TPU, emulated elsewhere).
     """
+    from repro.kernels.segsum import _default_interpret
+
+    interpret = _default_interpret(interpret)
     b, h, sq, dh = q.shape
     sk = k.shape[2]
     assert sq % block_q == 0 and sk % block_k == 0, (sq, sk)

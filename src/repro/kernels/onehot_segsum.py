@@ -37,8 +37,14 @@ def _onehot_segsum_kernel(ids_ref, v_ref, o_ref, *, num_segments: int):
 
 @functools.partial(jax.jit, static_argnames=("num_segments", "block_n", "interpret"))
 def onehot_segsum(values, ids, *, num_segments: int, block_n: int = 512,
-                  interpret: bool = True):
-    """Unsorted segment sum: values [N, D], ids int32[N] -> [C, D]."""
+                  interpret: bool | None = None):
+    """Unsorted segment sum: values [N, D], ids int32[N] -> [C, D].
+
+    ``interpret=None`` resolves from the backend at call time (compiled on
+    TPU, emulated elsewhere)."""
+    from repro.kernels.segsum import _default_interpret
+
+    interpret = _default_interpret(interpret)
     n, d = values.shape
     assert n % block_n == 0, (n, block_n)
     assert num_segments * d * 4 <= 8 * 1024 * 1024, (

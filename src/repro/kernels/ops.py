@@ -1,4 +1,4 @@
-"""Jit'd public wrappers around the Pallas kernels, with XLA fallbacks.
+"""The kernel dispatch point: public wrappers around the Pallas kernels.
 
 Every op takes ``impl`` in {'auto', 'pallas', 'xla'}:
   * 'pallas' — the kernel (interpret-mode on CPU, compiled on TPU);
@@ -7,6 +7,21 @@ Every op takes ``impl`` in {'auto', 'pallas', 'xla'}:
                on a TPU backend, else xla.  On this CPU container 'auto'
                resolves to xla so the system never pays interpret-mode cost
                in production paths; tests pin impl='pallas'.
+
+:func:`segreduce_sorted` is the backend of the whole GSP-Louvain sortscan
+core (``core/_segments.runs_reduce`` and the fused local-move sweep route
+every run reduction here).  It additionally accepts ``impl='scatter'`` —
+the pre-backend unsorted-scatter formulation, kept callable as the paired
+baseline for the bench gate (``benchmarks/bench_kernels.py``,
+``scripts/check_bench.py``) and as an escape hatch for callers that cannot
+guarantee the sorted-ids contract.
+
+The bit-exactness contract (load-bearing — see kernels/segsum.py): every
+impl of ``segreduce_sorted`` folds each segment strictly in index order,
+so 'xla', 'pallas' (interpret or compiled-CPU semantics) and 'scatter'
+agree **bit for bit**, which keeps delta-modularity tie-breaks — and hence
+whole Louvain partitions — identical across backends and equal to the
+dense-scan twin (core/local_move.py).
 """
 from __future__ import annotations
 
@@ -16,13 +31,22 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.segsum import cumsum_blocked
+from repro.kernels.segsum import cumsum_blocked, scan_identity, segscan_blocked
 from repro.kernels.spmm import bucket_spmm as _bucket_spmm_kernel
 from repro.kernels.onehot_segsum import onehot_segsum as _onehot_segsum_kernel
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def resolve_impl(impl: str) -> str:
+    """Resolve 'auto' to the backend-keyed policy: the XLA sorted-scatter
+    path on CPU/GPU (no interpret-mode cost in production), the Pallas
+    kernels on TPU (compiled, ``interpret=False``)."""
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "xla"
+    return impl
 
 
 def _pad_rows(x, multiple):
@@ -66,6 +90,51 @@ def segsum_sorted(values, segment_ids, num_segments, *, impl: str = "auto",
     )
     out = prefix[bounds[1:]] - prefix[bounds[:-1]]
     return (out[:, 0] if squeeze else out).astype(values.dtype)
+
+
+def segreduce_sorted(values, ids, num_segments, *, op: str = "sum",
+                     impl: str = "auto", block_m: int = 0):
+    """Segment reduce (sum/max/min) over **sorted** segment ids.
+
+    values: [M] or [M, D]; ids: int32[M], nondecreasing, in
+    [0, num_segments).  Empty segments get the same fill values the
+    ``jax.ops.segment_*`` family uses (0 / dtype-min / dtype-max).
+
+    impl: 'auto' | 'xla' | 'pallas' | 'scatter' (see module docstring).
+    block_m: Pallas kernel block rows; 0 = a backend default (the service
+    engine passes the per-bucket autotuned value — kernels/autotune.py).
+    All impls are bit-identical (in-order fold contract).
+    """
+    impl = resolve_impl(impl)
+    if impl == "scatter":
+        return ref.segreduce_sorted_ref(values, ids, num_segments, op=op,
+                                        assume_sorted=False)
+    if impl == "xla":
+        return ref.segreduce_sorted_ref(values, ids, num_segments, op=op)
+    squeeze = values.ndim == 1
+    v = values[:, None] if squeeze else values
+    m = v.shape[0]
+    if block_m <= 0:
+        block_m = 512
+    block_m = min(block_m, m) if m > 0 else block_m
+    starts = jnp.zeros((m,), jnp.int32).at[0].set(1)
+    starts = starts.at[1:].set((ids[1:] != ids[:-1]).astype(jnp.int32))
+    # pad to a block multiple; padding rows start fresh runs of identity
+    # values, so they can neither absorb nor leak a carry
+    pad = (-m) % block_m
+    ident = scan_identity(op, v.dtype)
+    if pad:
+        v = jnp.concatenate([v, jnp.full((pad, v.shape[1]), ident, v.dtype)])
+        starts = jnp.concatenate([starts, jnp.ones((pad,), jnp.int32)])
+    scanned = segscan_blocked(v, starts, op=op, block_m=block_m)[:m]
+    # boundary gather: the running value at a segment's last element IS the
+    # segment's in-order fold; searchsorted finds it without any scatter
+    seg = jnp.arange(num_segments, dtype=ids.dtype)
+    ends = jnp.searchsorted(ids, seg, side="right").astype(jnp.int32) - 1
+    present = (ends >= 0) & (ids[jnp.clip(ends, 0, m - 1)] == seg)
+    out = jnp.where(present[:, None],
+                    scanned[jnp.clip(ends, 0, m - 1)], ident)
+    return out[:, 0] if squeeze else out
 
 
 def spmm(nbr, w, x, *, impl: str = "auto", block_n: int = 64):

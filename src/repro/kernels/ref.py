@@ -26,6 +26,30 @@ def segsum_sorted_ref(values, segment_ids, num_segments):
     )
 
 
+_SEGMENT_OPS = {
+    "sum": jax.ops.segment_sum,
+    "max": jax.ops.segment_max,
+    "min": jax.ops.segment_min,
+}
+
+
+def segreduce_sorted_ref(values, segment_ids, num_segments, *,
+                         op: str = "sum", assume_sorted: bool = True):
+    """Sorted-segment reduce oracle: the XLA production path.
+
+    XLA's scatter applies duplicate-index updates in index order, so the
+    ``sum`` reduction is a strict left fold per segment — the in-order
+    contract every backend of ``ops.segreduce_sorted`` must satisfy
+    (``max``/``min`` are order-exact regardless).  ``assume_sorted=False``
+    reproduces the pre-backend scatter ops bit for bit (the 'scatter'
+    impl: the paired-benchmark baseline).
+    """
+    return _SEGMENT_OPS[op](
+        values, segment_ids, num_segments=num_segments,
+        indices_are_sorted=assume_sorted,
+    )
+
+
 def bucket_spmm_ref(nbr, w, x):
     """Fixed-degree neighbor aggregation.
 

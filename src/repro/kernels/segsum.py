@@ -1,13 +1,30 @@
-"""Pallas TPU kernel: blocked prefix-sum (the segment-reduction workhorse).
+"""Pallas TPU kernels: blocked prefix-sum and the in-order segmented scan.
 
 The paper's hot loops (local-move scoring, aggregation, LP label-min) are
 all reduce-by-key over *sorted* runs.  On TPU the bandwidth-optimal form is
-a streaming **blocked cumsum** with a VMEM carry — a segment sum over sorted
-ids is then two O(1)-per-segment gathers of the prefix array at run
-boundaries (``ops.segsum_sorted``), with no scatter anywhere.
+a streaming **blocked scan** with a VMEM carry — a segment reduction over
+sorted ids is then one O(1)-per-segment gather of the scan output at run
+boundaries (``ops.segreduce_sorted``), with no scatter anywhere.
 
-Grid steps on TPU execute sequentially on a core, so the carry lives in a
-VMEM scratch accumulator that persists across steps (the flash-attention
+Two scan kernels live here:
+
+* :func:`cumsum_blocked` — plain blocked cumsum (unsegmented; the original
+  ``ops.segsum_sorted`` prefix-difference formulation rides on it).
+* :func:`segscan_blocked` — segmented running reduce (sum/max/min) whose
+  carry **resets at run starts** and whose additions apply strictly in
+  index order.  The in-order guarantee is the load-bearing contract: the
+  Louvain core's run sums must be bit-identical across every backend
+  (sortscan XLA scatter, dense scatter-add, this kernel) because
+  ulp-level differences flip delta-modularity tie-breaks and hence
+  partitions (core/local_move.py's dense/sort equivalence).  Exactness is
+  bought with a sequential ``lax.scan`` over block rows (lanes cover the
+  channel dimension); widening the in-order window to a raking
+  multi-stretch layout is the accelerator-tile-tuning follow-on
+  (ROADMAP), which may relax in-orderness on TPU where the dense twin is
+  never co-executed.
+
+Grid steps on TPU execute sequentially on a core, so carries live in VMEM
+scratch accumulators that persist across steps (the flash-attention
 accumulator pattern).  Block shape: (block_m, D) — D is the lane dimension
 (pad to multiples of 128 for real hardware; the wrapper handles ragged
 tails by padding).
@@ -20,6 +37,17 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+
+def _default_interpret(interpret):
+    """Resolve ``interpret=None`` from the backend at call time.
+
+    Callers used to be responsible for passing ``interpret=not _on_tpu()``;
+    forgetting it silently ran interpret-mode Pallas in production paths.
+    ``None`` now means "compiled on TPU, emulated elsewhere"."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
 
 
 def _cumsum_kernel(x_ref, o_ref, carry_ref):
@@ -36,12 +64,11 @@ def _cumsum_kernel(x_ref, o_ref, carry_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
-def cumsum_blocked(x, *, block_m: int = 1024, interpret: bool = True):
+def cumsum_blocked(x, *, block_m: int = 1024, interpret: bool | None = None):
     """Inclusive prefix sum along axis 0 of ``x [M, D]`` (f32 accumulate).
 
-    M must be a multiple of ``block_m`` (ops.py pads).  ``interpret=True``
-    runs the kernel body on CPU for validation; on TPU pass False.
-    """
+    M must be a multiple of ``block_m`` (ops.py pads).  ``interpret=None``
+    resolves from the backend (compiled on TPU, emulated elsewhere)."""
     m, d = x.shape
     assert m % block_m == 0, (m, block_m)
     grid = (m // block_m,)
@@ -52,5 +79,80 @@ def cumsum_blocked(x, *, block_m: int = 1024, interpret: bool = True):
         out_specs=pl.BlockSpec((block_m, d), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
         scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
-        interpret=interpret,
+        interpret=_default_interpret(interpret),
     )(x)
+
+
+_SCAN_OPS = {
+    "sum": jnp.add,
+    "max": jnp.maximum,
+    "min": jnp.minimum,
+}
+
+
+def scan_identity(op: str, dtype):
+    """Identity element of ``op`` for ``dtype`` — also the empty-segment
+    fill ``jax.ops.segment_{sum,max,min}`` uses, which the boundary gather
+    in ops.py must reproduce for bit parity with the XLA path."""
+    if op == "sum":
+        return jnp.zeros((), dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        inf = jnp.array(jnp.inf, dtype)
+        return -inf if op == "max" else inf
+    info = jnp.iinfo(dtype)
+    return jnp.array(info.min if op == "max" else info.max, dtype)
+
+
+def _segscan_kernel(starts_ref, x_ref, o_ref, carry_ref, *, op):
+    step = pl.program_id(0)
+    ident = scan_identity(op, carry_ref.dtype)
+
+    @pl.when(step == 0)
+    def _init():
+        carry_ref[...] = jnp.full_like(carry_ref, ident)
+
+    combine = _SCAN_OPS[op]
+    x = x_ref[...]                       # [block_m, D]
+    starts = starts_ref[...] != 0        # [block_m]
+
+    def body(carry, row):
+        s, v = row                       # s: bool[], v: [D]
+        c = combine(jnp.where(s, ident, carry), v)
+        return c, c
+
+    carry0 = carry_ref[0, :]
+    carry1, out = jax.lax.scan(body, carry0, (starts, x))
+    o_ref[...] = out
+    carry_ref[...] = carry1[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("op", "block_m", "interpret"))
+def segscan_blocked(x, starts, *, op: str = "sum", block_m: int = 512,
+                    interpret: bool | None = None):
+    """Segmented running reduce along axis 0: ``out[i] = fold(op, run(i))``
+    over the elements of i's run up to and including i, folded strictly in
+    index order (see module docstring for why in-orderness is load-
+    bearing).
+
+    x: [M, D]; starts: int32[M], nonzero at the first element of each run
+    (block boundaries need no special casing — the carry persists in VMEM
+    scratch across grid steps and resets exactly where ``starts`` says).
+    M must be a multiple of ``block_m`` (ops.py pads; padding rows must
+    have ``starts=1`` so they cannot leak a carry into real data).
+    """
+    m, d = x.shape
+    assert m % block_m == 0, (m, block_m)
+    assert starts.shape == (m,), (starts.shape, m)
+    grid = (m // block_m,)
+    return pl.pallas_call(
+        functools.partial(_segscan_kernel, op=op),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m,), lambda i: (i,)),
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((1, d), x.dtype)],
+        interpret=_default_interpret(interpret),
+    )(starts, x)

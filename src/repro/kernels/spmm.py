@@ -39,12 +39,18 @@ def _bucket_spmm_kernel(nbr_ref, w_ref, x_ref, o_ref, *, nx: int):
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def bucket_spmm(nbr, w, x, *, block_n: int = 64, interpret: bool = True):
+def bucket_spmm(nbr, w, x, *, block_n: int = 64,
+                interpret: bool | None = None):
     """out[i] = sum_k w[i,k] * x[nbr[i,k]];  nbr [N,K], w [N,K], x [Nx,D].
 
     N must be a multiple of block_n (ops.py pads).  Padding neighbors must
     carry w == 0 (their gather lands anywhere in-bounds and is zeroed).
+    ``interpret=None`` resolves from the backend at call time (compiled on
+    TPU, emulated elsewhere).
     """
+    from repro.kernels.segsum import _default_interpret
+
+    interpret = _default_interpret(interpret)
     n, k = nbr.shape
     nx, d = x.shape
     assert n % block_n == 0, (n, block_n)

@@ -65,7 +65,15 @@ class ServiceConfig:
                    inherits ``max_delay_s``.
 
     Dense/sort scan crossover (see :func:`repro.service.buckets.choose_scan`):
-      dense_max_nv / dense_small_nv / dense_min_density.
+      dense_max_nv / dense_small_nv / dense_min_density (None = the
+      measured backend-keyed crossover; scripts/calibrate_dense_scan.py).
+
+    Segment-reduction backend (see :mod:`repro.kernels.ops`):
+      seg_impl:    'auto' | 'xla' | 'pallas' | 'scatter' for sortscan
+                   buckets; 'auto' picks XLA on CPU, Pallas on TPU.
+                   Bit-identical results across choices.
+      seg_block_m: Pallas kernel block rows; None = per-bucket autotuned
+                   (kernels/autotune.py on-disk cache).
 
     Admission:
       max_pending_per_tenant: queue bound per tenant (backpressure).
@@ -86,7 +94,9 @@ class ServiceConfig:
     update_max_delay_s: Optional[float] = None
     dense_max_nv: int = 1025
     dense_small_nv: int = 129
-    dense_min_density: float = 0.02
+    dense_min_density: Optional[float] = None
+    seg_impl: str = "auto"
+    seg_block_m: Optional[int] = None
     max_pending_per_tenant: int = 64
     tenant_weights: Tuple[Tuple[str, float], ...] = ()
     store_max_entries: Optional[int] = None

@@ -14,11 +14,44 @@ offered at two densities per vertex rung because real traffic mixes sparse
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Sequence
+import json
+import pathlib
+from typing import Iterable, Optional, Sequence
 
 import numpy as np
 
 from repro.graph.container import Graph, repad, unit_graph
+
+# fallback dense-vs-sortscan crossover when no calibration file exists;
+# scripts/calibrate_dense_scan.py measures the real value for the current
+# backend and writes dense_scan_calib.json next to this module
+DEFAULT_DENSE_MIN_DENSITY = 0.02
+_CALIB_FILE = pathlib.Path(__file__).with_name("dense_scan_calib.json")
+_calibrated: Optional[float] = None
+
+
+def calibrated_min_density() -> float:
+    """The measured dense/sort crossover density for this backend.
+
+    Loaded once from ``dense_scan_calib.json`` (written by
+    ``scripts/calibrate_dense_scan.py``); entries are keyed by jax backend
+    so a CPU-calibrated file never misleads a TPU deployment.  Falls back
+    to the CPU-tuned default when the file or the backend key is missing.
+    """
+    global _calibrated
+    if _calibrated is None:
+        density = DEFAULT_DENSE_MIN_DENSITY
+        try:
+            import jax
+
+            data = json.loads(_CALIB_FILE.read_text())
+            entry = data.get(jax.default_backend())
+            if entry is not None:
+                density = float(entry["dense_min_density"])
+        except (OSError, ValueError, KeyError):
+            pass
+        _calibrated = density
+    return _calibrated
 
 
 @dataclasses.dataclass(frozen=True, order=True)
@@ -58,7 +91,7 @@ def choose_bucket(n_nodes: int, m_directed: int,
 
 def choose_scan(nv: int, m_cap: int, *, dense_max_nv: int = 1025,
                 dense_small_nv: int = 129,
-                dense_min_density: float = 0.02) -> str:
+                dense_min_density: Optional[float] = None) -> str:
     """Dense-vs-sortscan crossover from a bucket density model.
 
     Per local-move iteration the dense community-matrix sweep does
@@ -75,7 +108,14 @@ def choose_scan(nv: int, m_cap: int, *, dense_max_nv: int = 1025,
     memory budget and the sortscan is always used.  Both formulations
     are bit-equivalent (core/local_move.py), so this is purely a cost
     choice — results are identical either way.
+
+    ``dense_min_density=None`` (default) uses the **measured** crossover
+    for the current backend (:func:`calibrated_min_density` —
+    ``scripts/calibrate_dense_scan.py`` fits it from a (nv, m_cap) sweep;
+    without a calibration file the CPU-tuned 0.02 applies).
     """
+    if dense_min_density is None:
+        dense_min_density = calibrated_min_density()
     if nv > dense_max_nv:
         return "sort"
     if nv <= dense_small_nv:

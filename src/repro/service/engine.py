@@ -45,6 +45,8 @@ from repro.core import (
 )
 from repro.core.dynamic import warm_update_impl
 from repro.graph.container import Graph, stack_graphs
+from repro.kernels import ops
+from repro.kernels.autotune import autotune_block_m
 from repro.service.buckets import Bucket, bucket_of, choose_scan, filler
 
 
@@ -82,8 +84,10 @@ class BatchedLouvainEngine:
 
     def __init__(self, cfg: LouvainConfig = LouvainConfig(), *,
                  dense_max_nv: int = 1025, dense_small_nv: int = 129,
-                 dense_min_density: float = 0.02,
-                 sub_batch: Optional[int] = None):
+                 dense_min_density: Optional[float] = None,
+                 sub_batch: Optional[int] = None,
+                 seg_impl: str = "auto",
+                 seg_block_m: Optional[int] = None):
         """Args:
           cfg: the one Louvain config this engine serves (part of the
             compile key; run several engines for several configs).
@@ -91,9 +95,17 @@ class BatchedLouvainEngine:
             sortscan crossover model (:func:`repro.service.buckets.
             choose_scan`): dense kernels for small or dense buckets,
             sortscan for sparse large buckets where m_cap / nv^2 falls
-            under ``dense_min_density``.
+            under ``dense_min_density`` (None = the measured, backend-keyed
+            crossover from scripts/calibrate_dense_scan.py).
           sub_batch: dispatch width; None = auto (cache-sized on CPU, wide
             on accelerators).
+          seg_impl: segment-reduction backend for sortscan buckets
+            ('auto' | 'xla' | 'pallas' | 'scatter' — kernels/ops.py;
+            'auto' is backend-keyed: XLA on CPU, Pallas on TPU).  Part of
+            every compile key; bit-identical results across choices.
+          seg_block_m: Pallas kernel block rows; None = per-bucket
+            autotuned (kernels/autotune.py, on-disk cache — the kernel
+            ladder next to this engine's tile ladder).
         """
         self.cfg = cfg
         self.dense_max_nv = dense_max_nv
@@ -102,6 +114,9 @@ class BatchedLouvainEngine:
         if sub_batch is None:
             sub_batch = 1 if jax.default_backend() == "cpu" else 8
         self.sub_batch = max(1, int(sub_batch))
+        self.seg_impl = ops.resolve_impl(seg_impl)
+        self.seg_block_m = seg_block_m
+        self._seg_blocks: dict = {}
         self._compiled: dict = {}
 
     # -- compile cache ----------------------------------------------------
@@ -111,13 +126,32 @@ class BatchedLouvainEngine:
             dense_small_nv=self.dense_small_nv,
             dense_min_density=self.dense_min_density)
 
-    def _one(self, g: Graph, scan: str):
-        C, stats = louvain_impl(g, self.cfg, scan=scan)
+    def seg_block_for(self, bucket: Bucket) -> int:
+        """The Pallas block size for a bucket: the pinned ``seg_block_m``
+        if given, else the autotuned value for the bucket's edge capacity
+        (cached on disk; 0 — i.e. backend-irrelevant — for non-Pallas
+        impls).  Recorded in the compile key either way so an impl or
+        block change recompiles."""
+        if self.seg_impl != "pallas":
+            return 0
+        if self.seg_block_m is not None:
+            return int(self.seg_block_m)
+        blk = self._seg_blocks.get(bucket)
+        if blk is None:
+            blk = autotune_block_m(bucket.m_cap, 2, impl=self.seg_impl)
+            self._seg_blocks[bucket] = blk
+        return blk
+
+    def _one(self, g: Graph, scan: str, block_m: int):
+        C, stats = louvain_impl(g, self.cfg, scan=scan,
+                                seg_impl=self.seg_impl, block_m=block_m)
         det = disconnected_communities_impl(
             g.src, g.dst, g.w, C, g.n_nodes,
             impl="dense" if scan == "dense" else "coo",
+            seg_impl=self.seg_impl, block_m=block_m,
         )
-        q = modularity(g.src, g.dst, g.w, C)
+        q = modularity(g.src, g.dst, g.w, C, seg_impl=self.seg_impl,
+                       block_m=block_m)
         return dict(
             C=C,
             n_communities=stats["n_communities"],
@@ -127,19 +161,29 @@ class BatchedLouvainEngine:
             q=q,
         )
 
+    def _detect_key(self, bucket: Bucket, n_tiles: int):
+        return (bucket, n_tiles, self.sub_batch, self.scan_for(bucket),
+                self.seg_impl, self.seg_block_for(bucket))
+
     def compiled_fn(self, bucket: Bucket, n_tiles: int):
         """The jitted executable for (bucket, n_tiles x sub_batch): a
         ``lax.map`` of the vmapped per-graph pipeline over tiles — one
-        compile per (bucket, batch, config), replayed for the bucket's
-        whole lifetime."""
+        compile per (bucket, batch, config, seg-backend), replayed for the
+        bucket's whole lifetime."""
         scan = self.scan_for(bucket)
-        key = (bucket, n_tiles, self.sub_batch, scan)
+        key = self._detect_key(bucket, n_tiles)
         fn = self._compiled.get(key)
         if fn is None:
-            tile = jax.vmap(partial(self._one, scan=scan))
+            tile = jax.vmap(partial(self._one, scan=scan,
+                                    block_m=self.seg_block_for(bucket)))
             fn = jax.jit(lambda gt: jax.lax.map(tile, gt))
             self._compiled[key] = fn
         return fn
+
+    def _update_key(self, bucket: Bucket, n_tiles: int, tau, max_iters):
+        return (bucket, n_tiles, self.sub_batch, self.scan_for(bucket),
+                self.seg_impl, self.seg_block_for(bucket), "update",
+                float(tau), int(max_iters))
 
     def update_fn(self, bucket: Bucket, n_tiles: int, *, tau: float = 1e-3,
                   max_iters: int = 10):
@@ -148,12 +192,12 @@ class BatchedLouvainEngine:
         :func:`repro.core.dynamic.warm_update_impl` — the same compute the
         store's immediate path runs, batched."""
         scan = self.scan_for(bucket)
-        key = (bucket, n_tiles, self.sub_batch, scan, "update",
-               float(tau), int(max_iters))
+        key = self._update_key(bucket, n_tiles, tau, max_iters)
         fn = self._compiled.get(key)
         if fn is None:
             one = partial(warm_update_impl, tau=tau, max_iters=max_iters,
-                          scan=scan)
+                          scan=scan, seg_impl=self.seg_impl,
+                          block_m=self.seg_block_for(bucket))
             tile = jax.vmap(lambda g, C, t: one(g, C, t))
             fn = jax.jit(lambda gt, Ct, Tt: jax.lax.map(
                 lambda args: tile(*args), (gt, Ct, Tt)))
@@ -172,7 +216,7 @@ class BatchedLouvainEngine:
         pad = filler(bucket)
         tiles = 1
         while True:
-            key = (bucket, tiles, self.sub_batch, self.scan_for(bucket))
+            key = self._detect_key(bucket, tiles)
             if key not in self._compiled:
                 self.detect_batch([pad] * (tiles * self.sub_batch))
                 n += 1
@@ -293,11 +337,9 @@ class BatchedLouvainEngine:
         """Pre-compile the pow2 tile ladder for the batched update path
         (mirror of :meth:`warm` for detections)."""
         n = 0
-        scan = self.scan_for(bucket)
         tiles = 1
         while True:
-            key = (bucket, tiles, self.sub_batch, scan, "update",
-                   float(tau), int(max_iters))
+            key = self._update_key(bucket, tiles, tau, max_iters)
             if key not in self._compiled:
                 self.update_batch(
                     [self._filler_update(bucket)] * (tiles * self.sub_batch),

@@ -145,7 +145,8 @@ class ServiceFrontend:
         self.engine = BatchedLouvainEngine(
             c.louvain, dense_max_nv=c.dense_max_nv,
             dense_small_nv=c.dense_small_nv,
-            dense_min_density=c.dense_min_density, sub_batch=c.sub_batch)
+            dense_min_density=c.dense_min_density, sub_batch=c.sub_batch,
+            seg_impl=c.seg_impl, seg_block_m=c.seg_block_m)
         self.admission = AdmissionController(
             c.buckets, batch_size=c.batch_size, max_delay_s=c.max_delay_s,
             max_pending_per_tenant=c.max_pending_per_tenant,
@@ -154,7 +155,8 @@ class ServiceFrontend:
             dense_max_nv=c.dense_max_nv, dense_small_nv=c.dense_small_nv,
             dense_min_density=c.dense_min_density,
             max_entries=c.store_max_entries, ttl_s=c.store_ttl_s,
-            clock=self.clock)
+            clock=self.clock, seg_impl=c.seg_impl,
+            seg_block_m=c.seg_block_m or 0)
         self.metrics = ServiceMetrics()
         # monotonic request ids: never reuses after a dispatch (the old
         # n_detect + pending() scheme collided once requests were served)

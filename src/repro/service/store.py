@@ -100,9 +100,11 @@ def _gross_deleted(g_old: Graph, g_new: Graph) -> int:
 
 class ResultStore:
     def __init__(self, *, dense_max_nv: int = 1025,
-                 dense_small_nv: int = 129, dense_min_density: float = 0.02,
+                 dense_small_nv: int = 129,
+                 dense_min_density: Optional[float] = None,
                  max_entries: Optional[int] = None,
-                 ttl_s: Optional[float] = None, clock=None):
+                 ttl_s: Optional[float] = None, clock=None,
+                 seg_impl: str = "auto", seg_block_m: int = 0):
         if max_entries is not None and max_entries < 1:
             raise ValueError(f"max_entries must be >= 1, got {max_entries}")
         self._entries: "OrderedDict[str, StoreEntry]" = OrderedDict()
@@ -116,6 +118,10 @@ class ResultStore:
         self.dense_max_nv = dense_max_nv
         self.dense_small_nv = dense_small_nv
         self.dense_min_density = dense_min_density
+        # segment-reduction backend for sortscan warm updates (the engine's
+        # batched path carries its own copy of the same choice)
+        self.seg_impl = seg_impl
+        self.seg_block_m = seg_block_m
         self.max_entries = max_entries
         self.ttl_s = ttl_s
         self.clock = clock or time.perf_counter
@@ -263,6 +269,7 @@ class ResultStore:
         out = warm_update(
             plan.graph, jnp.asarray(plan.C_prev), jnp.asarray(plan.touched),
             tau=tau, max_iters=max_iters, scan=plan.scan,
+            seg_impl=self.seg_impl, block_m=self.seg_block_m,
         )
         return self.commit_update(
             plan, C=np.asarray(out["C"]),
