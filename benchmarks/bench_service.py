@@ -1,6 +1,6 @@
 """Service benchmark: batched engine vs sequential single-graph calls.
 
-Five sections:
+Six sections:
 
 1. **Engine throughput, one bucket** — an ego-net workload in the
    (64, 2048) bucket.  The sequential baseline is the repo's public
@@ -29,6 +29,14 @@ Five sections:
    batched update engine runs — see ``bench_update_path``).  All sides
    include the host-side COO rewrite.  Acceptance: batch-32 warm updates
    >= 3x sequential with exact per-graph partition match.
+
+3b. **Update mix with vertex churn** — the same three-way comparison for
+   combined ``GraphUpdate`` batches (remove a vertex + compact ids, add
+   a wired one, plus mixed edge deltas): the staged per-request baseline
+   vs the fused immediate path vs the vmapped batched path, all
+   including the host-side step-0 vertex rewrite.  Acceptance: batch-32
+   vertex-churn updates >= 3x sequential with exact partition match
+   (gated as ``speedup_vchurn_batch32``).
 
 4. **Bucket mixes through the full service** — the mixed three-bucket
    traffic of launch/serve_communities.py at service batch 32 vs a
@@ -362,6 +370,118 @@ def bench_update_path(graphs):
         f"{t_imm / t_bat:.2f}x_vs_immediate")
 
 
+def bench_vertex_churn(graphs):
+    """Section 3b: batch-32 *vertex-churn* updates — combined GraphUpdate
+    batches (remove one vertex, add one wired into a surviving community,
+    plus an edge delete + insert) through the same three paths as section
+    3.  Every path pays the identical host-side step-0 vertex rewrite
+    (``prepare_graph_update``), so the ratio isolates the dispatch win.
+    """
+    from functools import partial
+
+    import jax.numpy as jnp
+
+    from repro.core import _segments as seg
+    from repro.core.dynamic import (
+        GraphUpdate, affected_mask, prepare_graph_update, warm_local_move,
+        warm_update,
+    )
+    from repro.core.split import split_labels
+
+    cfg = LouvainConfig()
+    engine = BatchedLouvainEngine(cfg)
+    res = engine.detect_batch(graphs)
+    scan = engine.scan_for(BUCKET)
+    impl = "dense" if scan == "dense" else "coo"
+    rng = np.random.default_rng(23)
+    Cs = [np.asarray(r.C) for r in res]
+    upds = []
+    for g, C in zip(graphs, Cs):
+        n = int(g.n_nodes)
+        src, dst, w = (np.asarray(g.src), np.asarray(g.dst), np.asarray(g.w))
+        rem = int(rng.integers(0, n))
+        anchor = int(rng.choice([i for i in range(n) if i != rem]))
+        peers = [i - (i > rem) for i in range(n)
+                 if C[i] == C[anchor] and i != rem][:3]
+        # plus one live-edge delete and one fresh insert (post-rewrite ids)
+        live = (src < g.n_cap) & (src < dst) & (src != rem) & (dst != rem)
+        j = int(rng.integers(0, int(live.sum())))
+        du = src[live][j] - (src[live][j] > rem)
+        dv = dst[live][j] - (dst[live][j] > rem)
+        u = np.concatenate([np.full(len(peers), n - 1), [du]])
+        v = np.concatenate([peers, [dv]])
+        d = np.concatenate([np.ones(len(peers)),
+                            [-w[live][j]]]).astype(np.float32)
+        upds.append(GraphUpdate(u=u.astype(np.int64), v=v.astype(np.int64),
+                                dw=d, add=1, remove=np.array([rem])))
+
+    _split = jax.jit(partial(split_labels, impl=impl))
+    _detect = partial(disconnected_communities, impl=impl)
+
+    def one_request_staged(g, C, upd):
+        """The pre-batching per-request path: host vertex+edge rewrite +
+        staged warm stages with per-request host syncs."""
+        g_new, C_prev, tm, _ = prepare_graph_update(g, C, upd)
+        C_prev = jnp.asarray(C_prev)
+        active0 = affected_mask(g_new, C_prev, jnp.asarray(tm))
+        C1, _, it = warm_local_move(
+            g_new.src, g_new.dst, g_new.w, C_prev,
+            g_new.total_weight_2m(), active0, scan=scan)
+        labels, _ = _split(g_new.src, g_new.dst, g_new.w, C1)
+        C_new, n_comms = seg.renumber(labels, g_new.node_mask(), g_new.nv)
+        det = _detect(g_new.src, g_new.dst, g_new.w, C_new, g_new.n_nodes)
+        q = float(modularity(g_new.src, g_new.dst, g_new.w, C_new))
+        return (np.asarray(C_new), int(n_comms),
+                int(det["n_disconnected"]), q)
+
+    def sequential_update():
+        return [one_request_staged(g, C, upd)
+                for g, C, upd in zip(graphs, Cs, upds)]
+
+    def immediate_update():
+        outs = []
+        for g, C, upd in zip(graphs, Cs, upds):
+            g_new, C_prev, tm, _ = prepare_graph_update(g, C, upd)
+            out = warm_update(g_new, jnp.asarray(C_prev), jnp.asarray(tm),
+                              scan=scan)
+            outs.append((np.asarray(out["C"]), int(out["n_communities"]),
+                         int(out["n_disconnected"]), float(out["q"])))
+        return outs
+
+    def batched_update():
+        items = []
+        for g, C, upd in zip(graphs, Cs, upds):
+            g_new, C_prev, tm, _ = prepare_graph_update(g, C, upd)
+            items.append((g_new, C_prev, tm))
+        return engine.update_batch(items)
+
+    # -- exactness: all three paths agree, zero disconnected -------------
+    seq = sequential_update()
+    imm = immediate_update()
+    bat = batched_update()
+    for i, (s, m, b) in enumerate(zip(seq, imm, bat)):
+        assert np.array_equal(s[0], b.C), f"vchurn C @{i}"
+        assert np.array_equal(m[0], b.C), f"vchurn immediate C @{i}"
+        assert m[3] == b.q, f"vchurn q @{i}"
+        assert abs(s[3] - b.q) <= 1e-6, f"vchurn staged q @{i}"
+        assert b.n_disconnected == 0
+    print("# batched vertex-churn updates match the sequential warm path "
+          f"exactly ({B}/{B})")
+
+    t_seq = timeit_best(sequential_update)
+    row("service_vchurn_sequential_32", t_seq, f"{B / t_seq:.1f} graphs/s")
+
+    def attempt():
+        t_s = timeit_best(sequential_update, repeats=3)
+        t_b = timeit_best(batched_update)
+        return t_s / t_b
+
+    ratio = accept_speedup("speedup_vchurn_batch32", attempt, bar=3.0)
+    t_bat = timeit_best(batched_update)
+    row("service_vchurn_batch32", t_bat,
+        f"{B / t_bat:.1f} graphs/s,{ratio:.2f}x_vs_sequential")
+
+
 def bench_bucket_mix():
     from repro.launch.serve_communities import run_traffic
     from repro.service import CommunityService
@@ -417,6 +537,7 @@ def main():
     graphs, t_seq, seq = bench_engine()
     bench_async_frontend(graphs, t_seq, seq)
     bench_update_path(graphs)
+    bench_vertex_churn(graphs)
     bench_bucket_mix()
     bench_fused_backend()
 

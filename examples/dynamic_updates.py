@@ -1,13 +1,18 @@
 """Scenario: streaming graph — incremental community maintenance.
 
 A production service rarely re-clusters from scratch: edges arrive (and
-disappear) in batches.  This example maintains a GSP-Louvain partition
-across fully-dynamic update batches with delta-screening
-(core/dynamic.py): each batch of signed weight-deltas rewrites the padded
-COO in place (deletions free capacity), warm-starts the local-moving
-phase with only the affected region active, then re-splits — so the
-paper's no-disconnected-communities guarantee holds continuously, even
-when a deletion disconnects a community internally.
+disappear) in batches — and so do vertices.  This example maintains a
+GSP-Louvain partition across fully-dynamic update batches with
+delta-screening (core/dynamic.py): each batch of signed weight-deltas
+rewrites the padded COO in place (deletions free capacity), warm-starts
+the local-moving phase with only the affected region active, then
+re-splits — so the paper's no-disconnected-communities guarantee holds
+continuously, even when a deletion disconnects a community internally.
+The final phase churns *vertices* through the same path (GraphUpdate):
+removals tombstone an id, delete its incident edges, and compact the id
+space (survivors shift down past the removed ids); additions claim fresh
+ids from the padding slots and are wired up by edge deltas in the same
+batch.
 
   PYTHONPATH=src python examples/dynamic_updates.py
 """
@@ -16,8 +21,8 @@ import time
 import numpy as np
 
 from repro.core import (
-    LouvainConfig, louvain, modularity, disconnected_communities,
-    update_communities,
+    GraphUpdate, LouvainConfig, louvain, modularity,
+    disconnected_communities, update_communities,
 )
 from repro.graph import sbm_graph
 
@@ -30,14 +35,15 @@ def main():
     q = float(modularity(g.src, g.dst, g.w, C))
     print(f"initial: |E|={int(g.num_edges())} Q={q:.4f}")
 
-    for batch in range(6):
+    for batch in range(8):
+        n = int(g.n_nodes)
         if batch < 4:
             # growth phase: 40 random insertions
-            u = rng.integers(0, 400, 40)
-            v = rng.integers(0, 400, 40)
-            w = np.ones(40, np.float32)
+            u = rng.integers(0, n, 40)
+            v = rng.integers(0, n, 40)
+            upd = (u, v, np.ones(40, np.float32))
             label = "+40 edges"
-        else:
+        elif batch < 6:
             # churn phase: delete 30 random live edges (negative deltas
             # remove entries in place and free their capacity slots)
             src = np.asarray(g.src)
@@ -45,10 +51,32 @@ def main():
             ww = np.asarray(g.w)
             live = (src < g.n_cap) & (src < dst)
             idx = rng.choice(int(live.sum()), 30, replace=False)
-            u, v, w = src[live][idx], dst[live][idx], -ww[live][idx]
+            upd = (src[live][idx], dst[live][idx], -ww[live][idx])
             label = "-30 edges"
+        else:
+            # vertex phase: remove 5 random vertices (ids compact: every
+            # survivor shifts down past the removed ids) and add 5 fresh
+            # ones, each wired to 4 members of one community — one
+            # combined GraphUpdate batch
+            rem = np.sort(rng.choice(n, 5, replace=False))
+            shift = lambda i: i - int((rem < i).sum())     # noqa: E731
+            Ch = np.asarray(C)
+            n2 = n - 5
+            us, vs = [], []
+            for k, new_id in enumerate(range(n2, n2 + 5)):
+                anchor = int(rng.integers(0, n))
+                while anchor in rem:
+                    anchor = int(rng.integers(0, n))
+                peers = [i for i in range(n)
+                         if Ch[i] == Ch[anchor] and i not in rem][:4]
+                us += [new_id] * len(peers)
+                vs += [shift(p) for p in peers]
+            upd = GraphUpdate(u=np.array(us), v=np.array(vs),
+                              dw=np.ones(len(us), np.float32),
+                              add=5, remove=rem)
+            label = "-5/+5 vertices"
         t0 = time.perf_counter()
-        g, C, stats = update_communities(g, C, (u, v, w))
+        g, C, stats = update_communities(g, C, upd)
         dt = time.perf_counter() - t0
         q_inc = float(modularity(g.src, g.dst, g.w, C))
         det = disconnected_communities(g.src, g.dst, g.w, C, g.n_nodes)

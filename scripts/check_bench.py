@@ -3,7 +3,8 @@
 
 Runs ``benchmarks/bench_service.py`` (which itself enforces the hard
 acceptance bars: engine/async >= 3.5x vs the fused sequential baseline,
-update batch >= 3x, fused sortscan backend >= 1.2x end-to-end, exact
+update batch >= 3x — plain edge deltas AND the vertex-churn update mix —
+fused sortscan backend >= 1.2x end-to-end, exact
 partition parity) plus the kernel-level
 paired sweep metric from ``benchmarks/bench_kernels.py``, parses the
 CSV/marker output into a metrics snapshot, compares against the committed
@@ -43,6 +44,7 @@ SPEEDUPS = {
     "speedup_batch32": "engine_speedup_batch32",
     "speedup_async_batch32": "async_speedup_batch32",
     "speedup_update_batch32": "update_speedup_batch32",
+    "speedup_vchurn_batch32": "vchurn_speedup_batch32",
     "speedup_louvain_fused": "louvain_fused_speedup",
     "speedup_sweep_fused": "kernel_sweep_fused_speedup",
 }

@@ -8,8 +8,9 @@
 #            deterministic; runs on every push/PR (.github/workflows/ci.yml).
 #   smoke  — the three serve_communities end-to-end smokes: the sync pump
 #            driver, the async multi-tenant driver, and the fully-dynamic
-#            churn driver (deletions through the batched warm path).  Also
-#            in the GitHub workflow.
+#            churn driver (edge deletions AND vertex additions/removals
+#            through the batched warm path, with the vertex round-trip /
+#            capacity-reclaim asserts).  Also in the GitHub workflow.
 #   bench  — acceptance benchmarks + regression check: scripts/check_bench.py
 #            runs benchmarks/bench_service.py + bench_kernels.py, enforces
 #            the speedup bars, writes benchmarks/BENCH_service.json and
@@ -36,7 +37,7 @@ run_smoke() {
   python -m repro.launch.serve_communities --smoke
   echo "== async service smoke =="
   python -m repro.launch.serve_communities --async --smoke
-  echo "== churn (dynamic deletions) smoke =="
+  echo "== churn (dynamic deletions + vertex churn) smoke =="
   python -m repro.launch.serve_communities --churn --smoke
 }
 

@@ -10,10 +10,15 @@ from repro.core.detect import (
 )
 from repro.core.modularity import modularity
 from repro.core.lpa import lpa_run
-from repro.core.dynamic import update_communities
+from repro.core.dynamic import (
+    CapacityError, GraphUpdate, apply_vertex_updates, update_communities,
+)
 
 __all__ = [
+    "CapacityError",
+    "GraphUpdate",
     "LouvainConfig",
+    "apply_vertex_updates",
     "louvain",
     "louvain_impl",
     "louvain_staged",

@@ -8,8 +8,8 @@ splitting, aggregation, GNN message passing) can run under ``jax.jit`` /
 ``lax.while_loop`` without shape polymorphism.
 """
 from repro.graph.container import (
-    Graph, from_coo, from_undirected, ghost_pad, repad, stack_graphs,
-    unit_graph,
+    Graph, from_coo, from_undirected, ghost_pad, remap_vertices, repad,
+    stack_graphs, unit_graph,
 )
 from repro.graph.generators import (
     sbm_graph,
@@ -27,6 +27,7 @@ __all__ = [
     "from_coo",
     "from_undirected",
     "ghost_pad",
+    "remap_vertices",
     "repad",
     "stack_graphs",
     "unit_graph",

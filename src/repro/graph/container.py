@@ -210,6 +210,46 @@ def repad(g: Graph, n_cap: int, m_cap: int) -> Graph:
     return from_coo(n, src[mask], dst[mask], w[mask], n_cap=n_cap, m_cap=m_cap)
 
 
+def remap_vertices(g: Graph, perm: np.ndarray, n_nodes: int) -> Graph:
+    """Host-side vertex remap/compaction (dynamic vertex removals).
+
+    ``perm`` maps old vertex ids to new ids (``int[nv]``, covering the
+    ghost slot; ``-1`` marks tombstoned ids).  Live edges with a
+    tombstoned endpoint are dropped, the survivors are relabeled through
+    ``perm``, re-sorted to restore the ``(src, dst)`` order invariant,
+    and re-padded to the **same** capacities — the freed edge slots
+    return to the padding pool exactly like edge deletions do.  The new
+    ``node_mask()`` is dense again: tombstones exist only transiently,
+    inside this rewrite (see :func:`repro.core.dynamic.
+    apply_vertex_updates` for the compaction contract callers rely on).
+
+    Returns a Graph with numpy leaves: the dynamic prepare path is
+    host-side on purpose (see :func:`repro.core.dynamic.
+    apply_edge_updates`) — jit/vmap convert the leaves once at dispatch.
+    """
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    w = np.asarray(g.w)
+    perm = np.asarray(perm, np.int64)
+    if perm.shape != (g.nv,):
+        raise ValueError(f"perm must have shape ({g.nv},), got {perm.shape}")
+    if n_nodes > g.n_cap:
+        raise ValueError(f"n_cap={g.n_cap} < n_nodes {n_nodes}")
+    live = src < g.n_cap
+    keep = live & (perm[src] >= 0) & (perm[dst] >= 0)
+    s, d, ww = _sort_coo(perm[src[keep]].astype(np.int32),
+                         perm[dst[keep]].astype(np.int32),
+                         w[keep].astype(np.float32))
+    pad = g.m_cap - s.shape[0]
+    ghost = g.n_cap
+    return Graph(
+        src=np.concatenate([s, np.full(pad, ghost, np.int32)]),
+        dst=np.concatenate([d, np.full(pad, ghost, np.int32)]),
+        w=np.concatenate([ww, np.zeros(pad, np.float32)]),
+        n_nodes=np.int32(n_nodes), n_cap=g.n_cap, m_cap=g.m_cap,
+    )
+
+
 def stack_graphs(graphs) -> Graph:
     """Stack same-capacity graphs into one batched Graph ([B, ...] leaves).
 

@@ -15,11 +15,16 @@ landing in three buckets, plus warm edge updates):
 * ``--churn``: a fully-dynamic update-dominated workload — every graph
   is detected once, then churned with mixed batches of edge additions,
   weight deltas and **deletions** served through the *batched* warm path
-  (``update_batch_size > 1``).  ``--churn --smoke`` asserts the dynamic
-  invariants: zero internally-disconnected communities across the whole
-  store after every delete, update batches actually dispatched vmapped,
-  deletions freeing capacity, and an add-then-delete round trip
-  restoring the original partition stats.
+  (``update_batch_size > 1``), followed by a **vertex churn** phase:
+  combined ``GraphUpdate`` batches that remove a random vertex (its
+  incident edges deleted, its id compacted away) and add a fresh one
+  wired into a surviving community.  ``--churn --smoke`` asserts the
+  dynamic invariants: zero internally-disconnected communities across
+  the whole store after every delete and every vertex rewrite, update
+  batches actually dispatched vmapped, deletions freeing capacity, an
+  add-then-delete round trip restoring the original partition stats, and
+  a vertex add-then-remove round trip restoring the COO bit-for-bit with
+  the freed vertex slots reusable (capacity reclaim).
 
   PYTHONPATH=src python -m repro.launch.serve_communities --smoke
   PYTHONPATH=src python -m repro.launch.serve_communities --async --smoke
@@ -38,7 +43,8 @@ import numpy as np
 from repro.core import LouvainConfig
 from repro.graph import grid_graph, sbm_graph
 from repro.service import (
-    AsyncCommunityService, CommunityService, QueueFull, ServiceConfig,
+    AsyncCommunityService, CommunityService, GraphUpdate, QueueFull,
+    ServiceConfig,
 )
 
 
@@ -103,6 +109,25 @@ def synth_churn_updates(entry, seed: int):
             np.concatenate(ws).astype(np.float32))
 
 
+def synth_vertex_churn(entry, seed: int) -> GraphUpdate:
+    """One combined vertex+edge batch: remove a random vertex, add one
+    wired into a surviving community.  Endpoint ids follow the
+    order-preserving compaction contract — survivors above the removed id
+    shift down by one, and the fresh vertex claims id ``n - 1``."""
+    rng = np.random.default_rng(seed)
+    n = int(entry.graph.n_nodes)
+    C = np.asarray(entry.C)
+    rem = int(rng.integers(0, n))
+    survivors = np.array([i for i in range(n) if i != rem])
+    anchor = int(rng.choice(survivors))
+    peers = [i for i in survivors if C[i] == C[anchor]][:3]
+    new_id = n - 1                      # n - 1 removed + 1 added
+    v = np.array([p - (p > rem) for p in peers])
+    return GraphUpdate(u=np.full(len(peers), new_id), v=v,
+                       dw=np.ones(len(peers), np.float32),
+                       add=1, remove=np.array([rem]))
+
+
 # ---------------------------------------------------------------------------
 # sync pump driver (PR-1 API, now a thin adapter over the front end)
 # ---------------------------------------------------------------------------
@@ -164,10 +189,11 @@ def run_traffic(svc: CommunityService, *, n_requests: int, update_frac: float,
 # ---------------------------------------------------------------------------
 
 def run_churn_traffic(svc: CommunityService, *, n_graphs: int = 9,
-                      n_rounds: int = 10, seed: int = 0,
-                      verbose: bool = True):
+                      n_rounds: int = 10, vertex_rounds: int = 4,
+                      seed: int = 0, verbose: bool = True):
     """Detect ``n_graphs`` once, then serve ``n_rounds`` churn rounds of
-    mixed add/delta/delete batches through the batched warm path."""
+    mixed add/delta/delete edge batches followed by ``vertex_rounds`` of
+    combined vertex+edge rewrites, all through the batched warm path."""
     rng = np.random.default_rng(seed)
     gids = []
     for i in range(n_graphs):
@@ -188,6 +214,19 @@ def run_churn_traffic(svc: CommunityService, *, n_graphs: int = 9,
             svc.submit_update(gid, synth_churn_updates(
                 entry, seed + 997 * r + int(j)))
         svc.pump()                   # full update batches dispatch vmapped
+
+    # vertex churn: remove a random vertex / add a wired one per graph per
+    # round — the same batched warm path serves the combined rewrites
+    for r in range(vertex_rounds):
+        order = rng.permutation(len(gids))
+        for j in order:
+            gid = gids[int(j)]
+            entry = svc.result(gid)
+            if entry is None:
+                continue
+            svc.submit_update(gid, synth_vertex_churn(
+                entry, seed + 7919 * r + int(j)))
+        svc.pump()
     svc.drain()
 
     report = svc.metrics.report()
@@ -196,6 +235,8 @@ def run_churn_traffic(svc: CommunityService, *, n_graphs: int = 9,
               f"{report['n_update_batches']} vmapped batches "
               f"(mean width {report['update_batch_mean']:.1f}), "
               f"{report['n_deletions']} directed deletions, "
+              f"{report['n_vertex_added']} vertices added / "
+              f"{report['n_vertex_removed']} removed, "
               f"{report['n_rebucketed']} re-bucketed")
         print(f"update latency p50 {report['p50_update_ms']:8.1f} ms   "
               f"throughput {report['graphs_per_s']:8.1f} graphs/s")
@@ -235,6 +276,50 @@ def _assert_round_trip(svc: CommunityService, seed: int):
     assert e2.n_communities == e0.n_communities
     assert e2.n_disconnected == 0
     assert abs(e2.q - e0.q) <= 1e-6, (e2.q, e0.q)
+
+
+def _assert_vertex_round_trip(svc: CommunityService, seed: int):
+    """Add wired vertices, remove them again: ``n_nodes``, the COO and
+    the partition stats must come back exactly — vertex removals are true
+    inverses of additions — and the freed vertex slots must be reusable
+    (the same addition re-admits without re-bucketing)."""
+    gid = "v-round-trip"
+    svc.submit_detect(gid, synth_graph("ego_small", seed))
+    svc.drain()
+    e0 = svc.result(gid)
+    n = int(e0.graph.n_nodes)
+    C = np.asarray(e0.C)
+    # wire each new vertex into one existing community (intra edges
+    # reinforce the partition, so removal must restore it exactly)
+    peers = [i for i in range(n) if C[i] == C[0]][:3]
+    u = np.concatenate([np.full(len(peers), n), np.full(len(peers), n + 1)])
+    v = np.array(peers * 2)
+    w = np.ones(len(u), np.float32)
+    grow = GraphUpdate(u=u, v=v, dw=w, add=2)
+    svc.submit_update(gid, grow)
+    svc.drain()
+    e1 = svc.result(gid)
+    assert int(e1.graph.n_nodes) == n + 2
+    assert e1.n_disconnected == 0
+    svc.submit_update(gid, GraphUpdate(remove=np.array([n, n + 1])))
+    svc.drain()
+    e2 = svc.result(gid)
+    assert int(e2.graph.n_nodes) == n, "vertex capacity not reclaimed"
+    assert np.array_equal(np.asarray(e2.graph.src),
+                          np.asarray(e0.graph.src)), "edge layout drifted"
+    assert np.array_equal(np.asarray(e2.graph.w),
+                          np.asarray(e0.graph.w)), "weights drifted"
+    assert e2.n_communities == e0.n_communities
+    assert e2.n_disconnected == 0
+    assert abs(e2.q - e0.q) <= 1e-6, (e2.q, e0.q)
+    # capacity reuse: the freed slots admit the same addition again in
+    # the same bucket
+    svc.submit_update(gid, grow)
+    svc.drain()
+    e3 = svc.result(gid)
+    assert e3.bucket == e2.bucket, "remove-then-add re-bucketed"
+    assert int(e3.graph.n_nodes) == n + 2
+    assert e3.n_disconnected == 0
 
 
 # ---------------------------------------------------------------------------
@@ -399,15 +484,21 @@ def main_churn(args):
         assert report["update_batch_mean"] > 1.0, \
             "update batches never exceeded width 1"
         assert report["n_deletions"] > 0, "no deletions applied"
+        assert report["n_vertex_added"] > 0, "no vertices added"
+        assert report["n_vertex_removed"] > 0, "no vertices removed"
         assert svc.frontend.pending_updates() == 0, \
             "drain left updates queued"
-        # the paper's guarantee must survive deletions, not just additions
+        # the paper's guarantee must survive deletions AND vertex churn,
+        # not just additions
         bad = [gid for gid in list(svc.store._entries)
                if svc.store.get(gid).n_disconnected != 0]
         assert not bad, f"disconnected communities served: {bad}"
         _assert_round_trip(svc, seed=args.seed + 10_000)
+        _assert_vertex_round_trip(svc, seed=args.seed + 20_000)
         print(f"CHURN SMOKE OK ({report['n_update']} updates, "
               f"{report['n_deletions']} deletions, "
+              f"{report['n_vertex_added']}+/"
+              f"{report['n_vertex_removed']}- vertices, "
               f"{report['n_update_batches']} batches)")
     return report
 

@@ -31,6 +31,7 @@ stack:
 * :mod:`repro.service.metrics`   — latency/throughput metrics with
   per-tenant served/rejected breakdowns.
 """
+from repro.core.dynamic import CapacityError, GraphUpdate
 from repro.service.admission import (
     AdmissionController, DEFAULT_TENANT, PendingRequest, QueueFull,
     ServiceConfig,
@@ -55,12 +56,14 @@ __all__ = [
     "AsyncCommunityService",
     "BatchedLouvainEngine",
     "Bucket",
+    "CapacityError",
     "CapacityExceeded",
     "CommunityService",
     "DEFAULT_BUCKETS",
     "DEFAULT_TENANT",
     "DetectResult",
     "DetectionFuture",
+    "GraphUpdate",
     "PendingRequest",
     "QueueFull",
     "ResultStore",

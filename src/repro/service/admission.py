@@ -56,11 +56,14 @@ class ServiceConfig:
                    once its oldest request has waited this long.
       sub_batch:   engine tile width; None = backend-keyed auto.
 
-    Warm updates:
-      update_batch_size: >1 queues edge updates per bucket and dispatches
-                   them through the engine's vmapped warm path (the
-                   update analogue of detect batching); 1 (default) keeps
-                   the immediate per-call path.
+    Warm updates (edge weight-deltas AND vertex additions/removals — one
+    :class:`repro.core.dynamic.GraphUpdate` batch type):
+      update_batch_size: >1 queues update batches per bucket and
+                   dispatches them through the engine's vmapped warm path
+                   (the update analogue of detect batching); 1 (default)
+                   keeps the immediate per-call path.  Both paths share
+                   the host-side prepare fold, so vertex-id compaction
+                   and deletion clamping are identical either way.
       update_max_delay_s: flush bound for a partial update batch; None
                    inherits ``max_delay_s``.
 

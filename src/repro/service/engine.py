@@ -14,10 +14,13 @@ core/local_move.py).
 The engine also owns the **batched warm-update path**
 (:meth:`BatchedLouvainEngine.update_batch`): same-bucket delta-screened
 updates — graphs already rewritten host-side by
-:func:`repro.core.dynamic.apply_edge_updates` — run as one jitted
-``lax.map(vmap(warm_update_impl))`` call, the exact compute the store's
-immediate path runs per graph, so batched and sequential partitions
-agree exactly.
+:func:`repro.core.dynamic.prepare_graph_update` (vertex removals
+compacted, additions claimed, signed edge deltas applied) — run as one
+jitted ``lax.map(vmap(warm_update_impl))`` call, the exact compute the
+store's immediate path runs per graph, so batched and sequential
+partitions agree exactly.  Vertex churn never perturbs the compile
+cache: ``nv`` is bucket-static and ``n_nodes`` is a traced array leaf,
+so a batch mixing grown and shrunk graphs replays one executable.
 
 Sub-batching: inside the one jitted call, the batch is laid out as
 ``[n_tiles, sub_batch, ...]`` and processed by ``lax.map`` over vmapped
@@ -74,8 +77,9 @@ class UpdateResult:
     q: float
 
 
-# (bucket-padded updated graph, previous membership int32[nv],
-#  touched-endpoint mask bool[nv]) — see ResultStore.prepare_update
+# (bucket-padded updated graph — vertex+edge rewrites applied, previous
+#  membership int32[nv] in the post-rewrite id space, screening-seed mask
+#  bool[nv]) — see ResultStore.prepare_update
 UpdateItem = Tuple[Graph, np.ndarray, np.ndarray]
 
 
@@ -281,11 +285,14 @@ class BatchedLouvainEngine:
         updates with one jitted call.
 
         ``items``: (updated graph, previous membership int32[nv], touched
-        mask bool[nv]) triples — the graphs already carry the applied edge
-        deltas (:func:`repro.core.dynamic.apply_edge_updates`); this method
+        mask bool[nv]) triples — the graphs already carry the applied
+        rewrites, vertex ops included
+        (:func:`repro.core.dynamic.prepare_graph_update`); this method
         batches the device side: screening, warm local move, split,
         renumber, detector, modularity.  Partitions are exactly what the
-        sequential warm path produces per graph.
+        sequential warm path produces per graph, and per-graph ``n_nodes``
+        may differ freely within the bucket (it is a traced leaf, not a
+        compile key).
         """
         items = list(items)
         if not items:

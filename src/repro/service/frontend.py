@@ -11,13 +11,15 @@ Two layers, ONE code path:
   CommunityService`) and the async front end do funnels through these
   methods — there is no behavior fork between the two.
 
-  Edge updates are fully dynamic (signed weight-deltas, deletions free
-  capacity) and, with ``ServiceConfig.update_batch_size > 1``, are
+  Updates are fully dynamic in edges AND vertices
+  (:class:`repro.core.dynamic.GraphUpdate`: signed weight-deltas,
+  deletions free capacity, vertex removals compact ids, additions claim
+  padding slots) and, with ``ServiceConfig.update_batch_size > 1``, are
   **batched like detections**: submissions queue per bucket, compose into
   batches (full, stale past ``update_max_delay_s``, or forced), fold
   same-graph batches in submit order (batch-wise, so deletion clamping
-  behaves exactly as if each batch had been applied immediately), and
-  dispatch through the engine's vmapped warm path
+  and vertex-id remaps behave exactly as if each batch had been applied
+  immediately), and dispatch through the engine's vmapped warm path
   (:meth:`repro.service.engine.BatchedLouvainEngine.update_batch`) —
   identical partitions to the immediate per-call path, amortized
   dispatch cost.  Updates never count against the tenant queue
@@ -47,9 +49,10 @@ from collections import OrderedDict
 from functools import partial
 from typing import Dict, List, Optional, Tuple
 
-import numpy as np
-
-from repro.core.dynamic import merge_edge_deltas, directed_deltas
+from repro.core.dynamic import (
+    GraphUpdate, as_update, check_vertex_ids, directed_deltas,
+    merge_edge_deltas, rebuild_with_vertex_ops,
+)
 from repro.graph.container import Graph, from_coo
 from repro.service.admission import (
     DEFAULT_TENANT, AdmissionController, PendingRequest, QueueFull,
@@ -119,14 +122,13 @@ class DetectionFuture:
 
 @dataclasses.dataclass
 class UpdateRequest:
-    """A queued warm-update awaiting batched dispatch (the deltas are
-    merged with same-graph predecessors at compose time)."""
+    """A queued warm-update awaiting batched dispatch (the batch is
+    folded with same-graph predecessors, in submit order, at compose
+    time)."""
 
     graph_id: str
     tenant: str
-    u: np.ndarray
-    v: np.ndarray
-    w: np.ndarray                # signed weight-deltas
+    upd: GraphUpdate             # vertex ops + signed edge weight-deltas
     t_submit: float
     future: DetectionFuture
 
@@ -209,43 +211,48 @@ class ServiceFrontend:
 
     def submit_update(self, graph_id: str, updates, *,
                       tenant: str = DEFAULT_TENANT) -> DetectionFuture:
-        """Route an edge-update batch (signed weight-deltas) to the warm
-        path.
+        """Route an update batch to the warm path.
 
-        With ``update_batch_size == 1`` (default) the update is applied
+        ``updates``: a :class:`repro.core.dynamic.GraphUpdate` — vertex
+        removals/additions plus signed edge weight-deltas — or a bare
+        ``(u, v, dw)`` tuple (edges only).  With
+        ``update_batch_size == 1`` (default) the update is applied
         immediately: returns an already-resolved ``kind="update"`` future,
-        or — when the update overflows its bucket — the pending
-        ``kind="detect"`` future of the re-bucketed request.  With
-        ``update_batch_size > 1`` the update is queued for the vmapped
-        batched warm path and the returned ``kind="update"`` future
-        resolves at dispatch (a dispatch-time overflow chains the future
-        to the re-bucketed detect).  Raises KeyError for unknown (or
-        evicted/expired) graph ids.
+        or — when the update overflows its bucket (edge slots or vertex
+        capacity) — the pending ``kind="detect"`` future of the
+        re-bucketed request.  With ``update_batch_size > 1`` the update
+        is queued for the vmapped batched warm path and the returned
+        ``kind="update"`` future resolves at dispatch (a dispatch-time
+        overflow chains the future to the re-bucketed detect).  Raises
+        KeyError for unknown (or evicted/expired) graph ids and
+        ValueError for statically-malformed batches.
         """
         t0 = self.clock()
+        upd = as_update(updates)     # static validation at the front door
         entry = self.store.get(graph_id)
         if entry is None:
             raise KeyError(f"no stored partition for {graph_id!r}")
         if self.config.update_batch_size > 1:
-            u, v, w = (np.asarray(x) for x in updates)
             fut = DetectionFuture(
                 f"u{next(self._seq)}-{graph_id}", tenant, graph_id,
                 "update", t0)
             with self._upd_lock:
                 self._updates.setdefault(entry.bucket, []).append(
                     UpdateRequest(graph_id=graph_id, tenant=tenant,
-                                  u=u, v=v, w=w, t_submit=t0, future=fut))
+                                  upd=upd, t_submit=t0, future=fut))
             return fut
         n_del0 = self.store.n_deletions
+        n_va0 = self.store.n_vertex_added
+        n_vr0 = self.store.n_vertex_removed
         try:
-            new = self.store.apply_update(graph_id, updates)
+            new = self.store.apply_update(graph_id, upd)
         except CapacityExceeded:
             # rebuild the updated graph at full precision and re-detect.
             # The old entry is already invalidated, so this continuation
             # is exempt from the tenant queue bound: a QueueFull here
             # would lose the graph's result with nothing queued to
             # replace it.
-            g = _graph_with_updates(entry.graph, [updates])
+            g = _graph_with_updates(entry.graph, [upd])
             self.metrics.n_rebucketed += 1
             return self.submit_detect(graph_id, g, tenant=tenant,
                                       exempt_bound=True)
@@ -253,6 +260,9 @@ class ServiceFrontend:
         self.metrics.observe("update", now - t0, now, tenant=tenant)
         self.metrics.edges_processed += float(live_edges(new.graph))
         self.metrics.n_deletions += self.store.n_deletions - n_del0
+        self.metrics.n_vertex_added += self.store.n_vertex_added - n_va0
+        self.metrics.n_vertex_removed += (self.store.n_vertex_removed
+                                          - n_vr0)
         fut = DetectionFuture(
             f"u{next(self._seq)}-{graph_id}", tenant, graph_id, "update", t0)
         fut.set_result(new)
@@ -340,7 +350,7 @@ class ServiceFrontend:
             by_gid.setdefault(r.graph_id, []).append(r)
         plans, plan_reqs = [], []
         for gid, rs in by_gid.items():
-            batches = [(r.u, r.v, r.w) for r in rs]
+            batches = [r.upd for r in rs]
             entry = self.store.get(gid)
             try:
                 if entry is None:   # evicted/expired since submit
@@ -350,13 +360,22 @@ class ServiceFrontend:
             except CapacityExceeded:
                 # same continuation as the immediate path: re-detect the
                 # merged graph, exempt from the tenant bound, and chain
-                # the queued futures to the re-bucketed detect
-                g = _graph_with_updates(entry.graph, batches)
-                self.metrics.n_rebucketed += 1
-                fut2 = self.submit_detect(gid, g, tenant=rs[0].tenant,
-                                          exempt_bound=True)
-                for r in rs:
-                    _chain(fut2, r.future)
+                # the queued futures to the re-bucketed detect.  The
+                # rebuild itself can fail (e.g. a later batch references
+                # ids past the rebuilt vertex set) — that must fail these
+                # futures, not the whole dispatch.
+                try:
+                    g = _graph_with_updates(entry.graph, batches)
+                    self.metrics.n_rebucketed += 1
+                    fut2 = self.submit_detect(gid, g, tenant=rs[0].tenant,
+                                              exempt_bound=True)
+                except Exception as e:
+                    for r in rs:
+                        self.metrics.fail(r.tenant)
+                        r.future.set_exception(e)
+                else:
+                    for r in rs:
+                        _chain(fut2, r.future)
             except Exception as e:      # malformed batch, evicted entry, ..
                 for r in rs:
                     self.metrics.fail(r.tenant)
@@ -385,8 +404,20 @@ class ServiceFrontend:
                 entry = self.store.commit_update(
                     plan, C=res.C, n_communities=res.n_communities,
                     n_disconnected=res.n_disconnected, q=res.q)
+                if entry is None:
+                    # the entry moved on (evicted/re-detected) while the
+                    # batch computed; the stale write was dropped — fail
+                    # the futures rather than hand out resurrected state
+                    for r in plan_reqs[i]:
+                        self.metrics.fail(r.tenant)
+                        r.future.set_exception(KeyError(
+                            f"{plan.graph_id!r}: entry superseded while "
+                            "the update batch ran"))
+                    continue
                 self.metrics.edges_processed += float(live_edges(plan.graph))
                 self.metrics.n_deletions += plan.n_deleted
+                self.metrics.n_vertex_added += plan.n_added
+                self.metrics.n_vertex_removed += plan.n_removed
                 for r in plan_reqs[i]:
                     self.metrics.observe("update", now - r.t_submit, now,
                                          tenant=r.tenant)
@@ -597,14 +628,19 @@ class AsyncCommunityService:
 
 
 def _graph_with_updates(g: Graph, batches) -> Graph:
-    """Rebuild a plain (unpadded-capacity) graph with edge-delta batches
+    """Rebuild a plain (unpadded-capacity) graph with update batches
     folded in, in order — the re-bucketing fallback when updates overflow
-    a bucket.  Same batch-wise delta semantics as the in-place path
-    (per-batch deletion clamping), without a capacity ceiling."""
-    for updates in batches:
-        u, v, w = (np.asarray(x) for x in updates)
-        src, dst, ww = merge_edge_deltas(g, *directed_deltas(u, v, w))
-        g = from_coo(int(g.n_nodes), src, dst, ww)
+    a bucket.  Same batch-wise semantics as the in-place path (per-batch
+    deletion clamping, per-batch vertex remaps, post-rewrite edge-id
+    validation), without a capacity ceiling."""
+    for upd in map(as_update, batches):
+        if upd.has_vertex_ops:
+            g = rebuild_with_vertex_ops(g, add=upd.add, remove=upd.remove)
+        if upd.has_edges:
+            check_vertex_ids(upd.u, upd.v, int(g.n_nodes))
+            src, dst, ww = merge_edge_deltas(
+                g, *directed_deltas(upd.u, upd.v, upd.dw))
+            g = from_coo(int(g.n_nodes), src, dst, ww)
     return g
 
 

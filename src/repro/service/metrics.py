@@ -51,6 +51,8 @@ class ServiceMetrics:
     n_update_batches: int = 0        # vmapped warm-path dispatches
     n_updates_batched: int = 0       # graphs served via update batches
     n_deletions: int = 0             # directed edges removed by updates
+    n_vertex_added: int = 0          # vertices claimed by updates
+    n_vertex_removed: int = 0        # vertices tombstoned by updates
     edges_processed: float = 0.0     # directed edges through the engine
     t_first: Optional[float] = None
     t_last: Optional[float] = None
@@ -100,6 +102,8 @@ class ServiceMetrics:
             n_failed=self.n_failed,
             n_update_batches=self.n_update_batches,
             n_deletions=self.n_deletions,
+            n_vertex_added=self.n_vertex_added,
+            n_vertex_removed=self.n_vertex_removed,
             update_batch_mean=(self.n_updates_batched / self.n_update_batches
                                if self.n_update_batches else float("nan")),
             p50_ms=percentile(lat, 50) * 1e3,

@@ -3,16 +3,25 @@ invalidation, a fully-dynamic delta-screening update path, and LRU/TTL
 eviction.
 
 The store keeps, per graph id, the bucket-padded graph, its current dense
-membership, detection stats, and a monotonically increasing version.  Edge
-updates do NOT trigger a full recompute: they route through the
+membership, detection stats, and a monotonically increasing version.
+Updates do NOT trigger a full recompute: they route through the
 delta-screening warm start (:func:`repro.core.dynamic.warm_update`), which
-perturbs only the neighborhood of the changed edges and re-runs the split
-so the no-disconnected-communities guarantee survives updates.  Updates
-are **signed weight-deltas**: positive deltas add weight / insert edges,
-negative deltas decrease weight, and an edge driven to ``<= 0`` is deleted
-(its capacity slot is compacted back into the padding pool for reuse).  If
-an update overflows the bucket's edge capacity the entry is invalidated
-and the caller falls back to a fresh detect request (re-bucketing).
+perturbs only the neighborhood of the touched region and re-runs the split
+so the no-disconnected-communities guarantee survives updates.  An update
+batch is a :class:`repro.core.dynamic.GraphUpdate` (or a legacy
+``(u, v, dw)`` tuple = edges only): **vertex ops first** — removals
+delete every incident edge, tombstone the id and compact it away (the
+order-preserving remap of :func:`repro.core.dynamic.
+apply_vertex_updates`), additions claim padding slots and grow
+``n_nodes`` — then **signed edge weight-deltas**: positive deltas add
+weight / insert edges, negative deltas decrease weight, and an edge
+driven to ``<= 0`` is deleted (its capacity slot is compacted back into
+the padding pool for reuse).  Edge endpoint ids are bounds-checked
+against the post-rewrite ``n_nodes`` before any state is touched; ids in
+``[n_nodes, n_cap)`` are legal only once claimed through the
+vertex-addition path.  If an update overflows the bucket's edge capacity
+— or vertex additions overflow ``n_cap`` — the entry is invalidated and
+the caller falls back to a fresh detect request (re-bucketing).
 
 The update path is split in two so the service can batch it:
 
@@ -50,7 +59,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dynamic import (
-    apply_edge_updates, directed_deltas, touched_mask, warm_update,
+    CapacityError, GraphUpdate, as_update, prepare_graph_update,
+    warm_update,
 )
 from repro.graph.container import Graph
 from repro.service.buckets import Bucket, bucket_of, choose_scan
@@ -73,29 +83,23 @@ class UpdatePlan:
     """A prepared (host-side) warm update awaiting device compute."""
 
     graph_id: str
-    graph: Graph                   # bucket-padded, deltas already applied
+    graph: Graph                   # bucket-padded, rewrites already applied
     C_prev: np.ndarray             # int32[nv] membership before the update
-    touched: np.ndarray            # bool[nv] update endpoints
+    touched: np.ndarray            # bool[nv] screening seed
     bucket: Bucket
     scan: str                      # dense/sort choice for this bucket
     n_deleted: int                 # directed entries removed by the batch
+    version: int = 0               # entry version the plan was prepared from
+    n_added: int = 0               # vertices claimed from padding slots
+    n_removed: int = 0             # vertices tombstoned + compacted away
+    # composed old->new vertex id map across the folded batches (None when
+    # no batch carried vertex ops; -1 marks removed ids)
+    id_map: Optional[np.ndarray] = None
 
 
 class CapacityExceeded(Exception):
-    """Edge update does not fit the entry's bucket; re-bucket + recompute."""
-
-
-def _gross_deleted(g_old: Graph, g_new: Graph) -> int:
-    """Directed entries whose (src, dst) pair left the live set — the
-    GROSS deletion count (a batch that also inserts must still report
-    its removals; the net live-entry delta would hide them)."""
-    K = g_old.n_cap + 1
-    so, do = np.asarray(g_old.src), np.asarray(g_old.dst)
-    sn, dn = np.asarray(g_new.src), np.asarray(g_new.dst)
-    mo, mn = so < g_old.n_cap, sn < g_new.n_cap
-    old = so[mo].astype(np.int64) * K + do[mo]
-    new = sn[mn].astype(np.int64) * K + dn[mn]
-    return int(np.setdiff1d(np.unique(old), new).size)
+    """Update does not fit the entry's bucket (edge slots or vertex
+    capacity); re-bucket + recompute."""
 
 
 class ResultStore:
@@ -130,6 +134,11 @@ class ResultStore:
         self.n_evicted = 0
         self.n_expired = 0
         self.n_deletions = 0          # directed entries removed by updates
+        self.n_vertex_added = 0       # vertices claimed via updates
+        self.n_vertex_removed = 0     # vertices tombstoned via updates
+        # commits dropped because the entry moved on (evicted/invalidated/
+        # re-detected) between prepare_update and commit_update
+        self.n_stale_commits = 0
 
     # -- basic CRUD -------------------------------------------------------
     def put(self, graph_id: str, graph: Graph, C: np.ndarray, *,
@@ -166,8 +175,13 @@ class ResultStore:
 
     def invalidate(self, graph_id: str) -> bool:
         with self._lock:
-            self.n_invalidations += 1
-            return self._entries.pop(graph_id, None) is not None
+            removed = self._entries.pop(graph_id, None) is not None
+            # count only actual removals: the frontend's invalidate-then-
+            # resubmit path may race an eviction/expiry, and an absent id
+            # must not inflate the invalidation metric
+            if removed:
+                self.n_invalidations += 1
+            return removed
 
     def __len__(self) -> int:
         with self._lock:
@@ -175,43 +189,49 @@ class ResultStore:
 
     # -- incremental update path ------------------------------------------
     @staticmethod
-    def _validate_batch(updates):
-        u, v, w = (np.asarray(x) for x in updates)
-        if not (u.shape == v.shape == w.shape and u.ndim == 1):
-            raise ValueError(
-                f"update arrays must be equal-length 1-D, got shapes "
-                f"{u.shape}, {v.shape}, {w.shape}")
+    def _validate_batch(updates) -> GraphUpdate:
+        upd = as_update(updates)     # shape/type/static validation
+        w = upd.dw
         if w.size and not (np.isfinite(w).all() and (w != 0).all()):
             raise ValueError(
                 "update weight-deltas must be finite and nonzero "
                 "(positive = add, negative = decrease/delete)")
-        return u, v, w
+        return upd
 
     def prepare_update(self, graph_id: str, updates) -> UpdatePlan:
-        """Host half of the warm path: validate, rewrite the COO, screen.
+        """Host half of the warm path: validate, rewrite, screen.
 
-        ``updates``: (u, v, dw) undirected **signed** weight-deltas
-        (positive = add weight / insert, negative = decrease, net
-        ``<= 0`` = delete; deleting a missing edge is a no-op).  Raises
-        KeyError for unknown (or evicted/expired) ids, ValueError for
-        malformed batches (entry untouched), and :class:`CapacityExceeded`
-        when the merged edge set overflows the bucket (the entry is
-        invalidated — the caller should resubmit the updated graph as a
-        fresh detect request).
+        ``updates``: a :class:`repro.core.dynamic.GraphUpdate` — vertex
+        removals/additions (step 0) plus (u, v, dw) undirected **signed**
+        weight-deltas — or a bare ``(u, v, dw)`` tuple (edges only;
+        positive = add weight / insert, negative = decrease, net ``<= 0``
+        = delete; deleting a missing edge is a no-op).  Edge endpoint ids
+        must satisfy ``0 <= id < n_nodes`` *after* the batch's vertex
+        rewrite; out-of-range ids raise ValueError before any state is
+        touched.  Raises KeyError for unknown (or evicted/expired) ids,
+        ValueError for malformed batches (entry untouched), and
+        :class:`CapacityExceeded` when the merged edge set overflows the
+        bucket's ``m_cap`` or vertex additions overflow its ``n_cap``
+        (the entry is invalidated — the caller should resubmit the
+        updated graph as a fresh detect request).
         """
         return self.prepare_update_seq(graph_id, [updates])
 
     def prepare_update_seq(self, graph_id: str, batches) -> UpdatePlan:
         """Fold several update batches (submit order) into ONE plan.
 
-        Each batch is applied to the COO **sequentially** — per-batch
-        deletion clamping, exactly as if every batch had been an
-        immediate ``apply_update`` call — so the batched dispatch path
-        cannot diverge from immediate semantics (e.g. an over-deleting
-        batch followed by an insertion re-creates the edge instead of
-        netting to a delete).  One warm compute covers the folded result.
-        Validation covers every batch before any state is touched;
-        raises as documented on :meth:`prepare_update`.
+        Each batch is applied **sequentially** — per-batch deletion
+        clamping and per-batch vertex id remaps, exactly as if every
+        batch had been an immediate ``apply_update`` call — so the
+        batched dispatch path cannot diverge from immediate semantics
+        (e.g. an over-deleting batch followed by an insertion re-creates
+        the edge instead of netting to a delete, and a batch after a
+        removal addresses the compacted id space).  One warm compute
+        covers the folded result.  Static validation covers every batch
+        before the fold starts; id bounds are checked per batch against
+        the evolving ``n_nodes`` (the fold is pure, so a failure anywhere
+        leaves the entry untouched).  Raises as documented on
+        :meth:`prepare_update`.
         """
         batches = [self._validate_batch(b) for b in batches]
         entry = self.get(graph_id)       # TTL-aware; refreshes recency
@@ -223,47 +243,69 @@ class ResultStore:
             dense_small_nv=self.dense_small_nv,
             dense_min_density=self.dense_min_density)
         g = entry.graph
+        C = np.asarray(entry.C, np.int32)
         touched = np.zeros((g.nv,), bool)
-        n_deleted = 0
-        for u, v, w in batches:
-            ds, dd, dw = directed_deltas(u, v, w)
+        n_deleted = n_added = n_removed = 0
+        id_map: Optional[np.ndarray] = None
+        for upd in batches:
             try:
-                g_new = apply_edge_updates(g, ds, dd, dw)
-            except ValueError as e:  # edge capacity exhausted
+                g, C, touched, info = prepare_graph_update(
+                    g, C, upd, touched=touched)
+            except CapacityError as e:
                 self.invalidate(graph_id)
                 raise CapacityExceeded(str(e)) from e
-            n_deleted += _gross_deleted(g, g_new)
-            touched |= touched_mask(g.nv, u, v)
-            g = g_new
+            n_deleted += info["n_deleted"]
+            n_added += info["n_added"]
+            n_removed += info["n_removed"]
+            perm = info["perm"]
+            if perm is not None:
+                id_map = (perm if id_map is None else np.where(
+                    id_map >= 0, perm[np.clip(id_map, 0, None)], -1))
         return UpdatePlan(
             graph_id=graph_id, graph=g,
-            C_prev=np.asarray(entry.C, np.int32),
+            C_prev=np.asarray(C, np.int32),
             touched=touched,
             bucket=entry.bucket, scan=scan,
             n_deleted=n_deleted,
+            version=entry.version,
+            n_added=n_added, n_removed=n_removed, id_map=id_map,
         )
 
     def commit_update(self, plan: UpdatePlan, *, C, n_communities: int,
-                      n_disconnected: int, q: float) -> StoreEntry:
-        """Write the warm-path outputs back as the refreshed entry."""
+                      n_disconnected: int, q: float) -> Optional[StoreEntry]:
+        """Write the warm-path outputs back as the refreshed entry.
+
+        The write is guarded on the version captured at prepare time: if
+        the entry was evicted, invalidated or re-detected while the warm
+        compute ran, committing would resurrect stale state, so the write
+        is dropped instead (counted in ``n_stale_commits``) and ``None``
+        is returned.
+        """
         with self._lock:
+            cur = self._entries.get(plan.graph_id)
+            if cur is None or cur.version != plan.version:
+                self.n_stale_commits += 1
+                return None
             self.n_warm_updates += 1
             self.n_deletions += plan.n_deleted
-        return self.put(
-            plan.graph_id, plan.graph, np.asarray(C),
-            n_communities=n_communities, n_disconnected=n_disconnected,
-            q=q,
-        )
+            self.n_vertex_added += plan.n_added
+            self.n_vertex_removed += plan.n_removed
+            return self.put(
+                plan.graph_id, plan.graph, np.asarray(C),
+                n_communities=n_communities, n_disconnected=n_disconnected,
+                q=q,
+            )
 
     def apply_update(self, graph_id: str, updates, *, tau: float = 1e-3,
                      max_iters: int = 10) -> StoreEntry:
-        """Route one edge batch through the warm path, immediately.
+        """Route one update batch through the warm path, immediately.
 
         prepare -> one jitted :func:`repro.core.dynamic.warm_update` call
         -> commit.  The batched service path runs the identical compute
         vmapped across graphs (see module docstring); both produce the
         same partitions.  Returns the refreshed entry; raises as
-        documented on :meth:`prepare_update`.
+        documented on :meth:`prepare_update`, plus KeyError if the entry
+        moved on while the warm compute ran (stale commit dropped).
         """
         plan = self.prepare_update(graph_id, updates)
         out = warm_update(
@@ -271,9 +313,13 @@ class ResultStore:
             tau=tau, max_iters=max_iters, scan=plan.scan,
             seg_impl=self.seg_impl, block_m=self.seg_block_m,
         )
-        return self.commit_update(
+        entry = self.commit_update(
             plan, C=np.asarray(out["C"]),
             n_communities=int(out["n_communities"]),
             n_disconnected=int(out["n_disconnected"]),
             q=float(out["q"]),
         )
+        if entry is None:
+            raise KeyError(
+                f"{graph_id!r}: entry superseded while the update ran")
+        return entry

@@ -1,0 +1,511 @@
+"""Fully-dynamic vertex updates: additions, removals (tombstone +
+compaction), the combined GraphUpdate batch type, and the update-path
+hardening fixes that rode along.
+
+The planted cut-vertex scenario reuses the resolution-limit ring of
+cliques: cold Louvain merges neighboring cliques into one community held
+together by a single ring bridge, so removing a bridge *endpoint* (a cut
+vertex) disconnects that community internally — the warm path must split
+it (zero disconnected) while staying at least as good as a cold
+recompute's modularity.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, st
+
+from repro.core import (
+    CapacityError, GraphUpdate, LouvainConfig, apply_vertex_updates,
+    disconnected_communities, louvain, modularity, update_communities,
+)
+from repro.core.dynamic import (
+    as_update, check_vertex_ids, prepare_graph_update,
+    rebuild_with_vertex_ops,
+)
+from repro.graph import remap_vertices, ring_of_cliques, sbm_graph
+from repro.service import (
+    BatchedLouvainEngine, Bucket, CapacityExceeded, CommunityService,
+    ResultStore, ServiceConfig,
+)
+from repro.service.buckets import admit
+
+pytestmark = pytest.mark.service
+
+CFG = LouvainConfig()
+
+
+def _store_with(g, *, store=None):
+    """Detect ``g`` once and seed a store entry 'g' with the result."""
+    engine = BatchedLouvainEngine(CFG)
+    res = engine.detect_one(g)
+    if store is None:       # NB: an empty ResultStore is falsy (len == 0)
+        store = ResultStore()
+    store.put("g", g, res.C, n_communities=res.n_communities,
+              n_disconnected=res.n_disconnected, q=res.q)
+    return store, engine, res
+
+
+def _planted_ring():
+    k, c = 30, 4
+    m_nat = 2 * k * (c * (c - 1) // 2 + 1)
+    g = ring_of_cliques(k, c, m_cap=m_nat + 64)
+    C, _ = louvain(g, CFG)
+    C = np.asarray(C)
+    bridges = [(ci * c, ((ci + 1) % k) * c) for ci in range(k)]
+    intra = [(u, v) for u, v in bridges if C[u] == C[v]]
+    assert intra, "planted regime must merge cliques across bridges"
+    return g, C, intra
+
+
+# ---------------------------------------------------------------------------
+# core semantics: additions, removals, compaction contract
+# ---------------------------------------------------------------------------
+
+def test_additions_claim_padding_slots_and_join_community():
+    g, _ = sbm_graph(n_nodes=40, n_blocks=3, seed=1, m_cap=1024, n_cap=48)
+    C, _ = louvain(g, CFG)
+    Ch = np.asarray(C)
+    peers = [i for i in range(40) if Ch[i] == Ch[0]][:3]
+    upd = GraphUpdate(u=np.array([40] * 3 + [41] * 3), v=np.array(peers * 2),
+                      dw=np.ones(6, np.float32), add=2)
+    g2, C2, stats = update_communities(g, C, upd)
+    assert int(g2.n_nodes) == 42
+    assert int(stats["n_added"]) == 2 and int(stats["n_removed"]) == 0
+    assert int(stats["n_disconnected"]) == 0
+    C2h = np.asarray(C2)
+    # strongly wired into one community: both new vertices must join it
+    assert C2h[40] == C2h[peers[0]] and C2h[41] == C2h[peers[0]]
+    det = disconnected_communities(g2.src, g2.dst, g2.w, C2, g2.n_nodes)
+    assert int(det["n_disconnected"]) == 0
+
+
+def test_unwired_addition_is_singleton():
+    g, _ = sbm_graph(n_nodes=30, n_blocks=3, seed=0, n_cap=40)
+    C, _ = louvain(g, CFG)
+    n0 = len(set(np.asarray(C)[:30].tolist()))
+    g2, C2, stats = update_communities(g, C, GraphUpdate(add=1))
+    assert int(g2.n_nodes) == 31
+    assert int(stats["n_communities"]) == n0 + 1       # fresh singleton
+    assert int(stats["n_disconnected"]) == 0
+
+
+def test_removal_compacts_ids_order_preserving():
+    g, _ = sbm_graph(n_nodes=20, n_blocks=2, seed=3, m_cap=512)
+    C, _ = louvain(g, CFG)
+    rem = np.array([4, 11])
+    g2, C2, t, info = apply_vertex_updates(g, np.asarray(C), remove=rem)
+    assert int(g2.n_nodes) == 18
+    assert info["n_removed"] == 2 and info["n_added"] == 0
+    perm = info["perm"]
+    # contract: survivor ids shift down by the number of removed ids below
+    for old in range(20):
+        if old in (4, 11):
+            assert perm[old] == -1
+        else:
+            assert perm[old] == old - (old > 4) - (old > 11)
+    # every incident directed edge left the COO; the rest are relabeled
+    src, dst, w = (np.asarray(g.src), np.asarray(g.dst), np.asarray(g.w))
+    live = src < g.n_cap
+    keep = live & (perm[src] >= 0) & (perm[dst] >= 0)
+    assert info["n_deleted"] == int((live & ~keep).sum())
+    s2 = np.asarray(g2.src)
+    assert int((s2 < g2.n_cap).sum()) == int(keep.sum())
+    # the remapped graph equals a from-scratch rebuild of the survivors
+    g_ref = remap_vertices(g, perm, 18)
+    assert np.array_equal(s2, np.asarray(g_ref.src))
+    assert np.array_equal(np.asarray(g2.w), np.asarray(g_ref.w))
+
+
+def test_vertex_round_trip_restores_graph_and_stats():
+    g, _ = sbm_graph(n_nodes=40, n_blocks=3, seed=1, m_cap=1024, n_cap=48)
+    C, _ = louvain(g, CFG)
+    q0 = float(modularity(g.src, g.dst, g.w, C))
+    n0 = len(set(np.asarray(C)[:40].tolist()))
+    Ch = np.asarray(C)
+    peers = [i for i in range(40) if Ch[i] == Ch[0]][:3]
+    grow = GraphUpdate(u=np.array([40] * 3 + [41] * 3), v=np.array(peers * 2),
+                       dw=np.ones(6, np.float32), add=2)
+    g1, C1, _ = update_communities(g, C, grow)
+    g2, C2, stats = update_communities(g1, C1,
+                                       GraphUpdate(remove=np.array([40, 41])))
+    assert int(g2.n_nodes) == 40
+    assert np.array_equal(np.asarray(g2.src), np.asarray(g.src))
+    assert np.array_equal(np.asarray(g2.dst), np.asarray(g.dst))
+    assert np.array_equal(np.asarray(g2.w), np.asarray(g.w))
+    assert int(stats["n_disconnected"]) == 0
+    assert int(stats["n_communities"]) == n0
+    assert abs(float(stats["q"]) - q0) <= 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_property_vertex_add_remove_round_trip(seed):
+    """Any batch of wired vertex additions, added then removed, restores
+    the padded COO bit for bit (property test; skipped without
+    hypothesis)."""
+    rng = np.random.default_rng(seed)
+    g, _ = sbm_graph(n_nodes=40, n_blocks=3, seed=1, m_cap=1024, n_cap=64)
+    k = int(rng.integers(1, 6))
+    us, vs = [], []
+    for new_id in range(40, 40 + k):
+        targets = rng.choice(new_id, int(rng.integers(1, 4)), replace=False)
+        us += [new_id] * len(targets)
+        vs += list(targets)
+    g1, _, _, _ = apply_vertex_updates(g, None, add=k)
+    from repro.core.dynamic import apply_edge_updates, directed_deltas
+    g1 = apply_edge_updates(g1, *directed_deltas(
+        np.array(us), np.array(vs), rng.uniform(0.5, 2.0, len(us))))
+    g2, _, _, _ = apply_vertex_updates(
+        g1, None, remove=np.arange(40, 40 + k))
+    assert int(g2.n_nodes) == 40
+    assert np.array_equal(np.asarray(g2.src), np.asarray(g.src))
+    assert np.array_equal(np.asarray(g2.dst), np.asarray(g.dst))
+    assert np.array_equal(np.asarray(g2.w), np.asarray(g.w))
+
+
+def test_planted_cut_vertex_removal_splits_community():
+    g, C0, intra = _planted_ring()
+    u, _ = intra[0]
+    n0 = len(set(C0[:int(g.n_nodes)].tolist()))
+    g2, C2, stats = update_communities(g, jnp.asarray(C0),
+                                       GraphUpdate(remove=np.array([u])))
+    # the removed bridge endpoint was the community's cut vertex: its two
+    # cliques fall apart -> the split pass must separate them
+    assert int(stats["n_disconnected"]) == 0
+    assert int(stats["n_removed"]) == 1
+    assert int(stats["n_communities"]) > n0
+    det = disconnected_communities(g2.src, g2.dst, g2.w, C2, g2.n_nodes)
+    assert int(det["n_disconnected"]) == 0
+    # warm result at least matches a cold recompute on the rewritten graph
+    C_cold, _ = louvain(g2, CFG)
+    q_warm = float(stats["q"])
+    q_cold = float(modularity(g2.src, g2.dst, g2.w, C_cold))
+    assert q_warm >= q_cold - 1e-6, (q_warm, q_cold)
+    # no edge references the compacted-away id space
+    src, dst = np.asarray(g2.src), np.asarray(g2.dst)
+    live = src < g2.n_cap
+    assert live.sum() == 0 or int(max(src[live].max(),
+                                      dst[live].max())) < int(g2.n_nodes)
+
+
+def test_combined_batch_edge_ids_follow_rewrite():
+    """Edge deltas inside a GraphUpdate address the post-rewrite id
+    space: they may wire vertices added in the same batch, and ids past
+    the post-rewrite n_nodes are rejected."""
+    g, _ = sbm_graph(n_nodes=30, n_blocks=3, seed=0, n_cap=40, m_cap=512)
+    C, _ = louvain(g, CFG)
+    # remove id 0, add one vertex -> n stays 30, new id is 29
+    upd = GraphUpdate(u=np.array([29, 29]), v=np.array([3, 4]),
+                      dw=np.ones(2, np.float32),
+                      add=1, remove=np.array([0]))
+    g2, C2, stats = update_communities(g, C, upd)
+    assert int(g2.n_nodes) == 30
+    src, dst = np.asarray(g2.src), np.asarray(g2.dst)
+    assert ((src == 29) & (dst == 3)).any()
+    with pytest.raises(ValueError, match="endpoint ids"):
+        update_communities(g2, C2, GraphUpdate(
+            u=np.array([30]), v=np.array([0]), dw=np.ones(1, np.float32),
+            add=1, remove=np.array([0])))  # n' = 30 -> id 30 out of range
+
+
+def test_vertex_capacity_error_and_rebuild():
+    g, _ = sbm_graph(n_nodes=30, n_blocks=3, seed=0, n_cap=31)
+    with pytest.raises(CapacityError, match="vertex capacity"):
+        apply_vertex_updates(g, None, add=2)
+    # remove-then-add within the same batch fits again
+    g2, _, _, info = apply_vertex_updates(g, None, add=2,
+                                          remove=np.array([5]))
+    assert int(g2.n_nodes) == 31
+    # the capacity-free rebuild grows past n_cap (re-bucketing fallback)
+    g3 = rebuild_with_vertex_ops(g, add=4)
+    assert int(g3.n_nodes) == 34 and g3.n_cap >= 34
+
+
+def test_as_update_validation():
+    with pytest.raises(ValueError, match="equal-length"):
+        as_update((np.array([1]), np.array([1, 2]), np.ones(1)))
+    with pytest.raises(ValueError, match="integers"):
+        as_update((np.array([1.5]), np.array([2.5]), np.ones(1)))
+    with pytest.raises(ValueError, match="add"):
+        as_update(GraphUpdate(add=-1))
+    with pytest.raises(ValueError, match="duplicate"):
+        as_update(GraphUpdate(remove=np.array([3, 3])))
+    with pytest.raises(ValueError, match=">= 0"):
+        as_update(GraphUpdate(remove=np.array([-1])))
+    upd = as_update((np.array([0]), np.array([1]), [2.0]))
+    assert isinstance(upd, GraphUpdate) and not upd.has_vertex_ops
+    check_vertex_ids(upd.u, upd.v, 2)
+    with pytest.raises(ValueError):
+        check_vertex_ids(upd.u, upd.v, 1)
+
+
+# ---------------------------------------------------------------------------
+# store path: bounds validation, capacity re-bucketing, id_map
+# ---------------------------------------------------------------------------
+
+def test_store_rejects_out_of_range_ids_before_any_rewrite():
+    """Regression: ids >= n_nodes used to silently wire edges to padding
+    vertices (or IndexError after the COO was already rewritten); now
+    they are rejected up front with the entry untouched."""
+    g, _ = admit(sbm_graph(n_nodes=30, n_blocks=3, seed=7)[0],
+                 [Bucket(64, 512), Bucket(64, 2048)])
+    store, _, res = _store_with(g)
+    w1 = np.ones(1, np.float32)
+    for bad in ((np.array([30]), np.array([0]), w1),      # == n_nodes
+                (np.array([0]), np.array([63]), w1),      # padding slot
+                (np.array([-1]), np.array([0]), w1)):     # negative
+        with pytest.raises(ValueError):
+            store.apply_update("g", bad)
+    # a second folded batch is bounds-checked against the evolving state,
+    # and the pure fold leaves the entry untouched on failure
+    with pytest.raises(ValueError):
+        store.prepare_update_seq("g", [
+            (np.array([0]), np.array([1]), w1),
+            (np.array([35]), np.array([0]), w1),
+        ])
+    e = store.get("g")
+    assert e.version == 1 and store.n_warm_updates == 0
+    assert np.array_equal(np.asarray(e.graph.src), np.asarray(g.src))
+    # padding ids become legal exactly by claiming them via add
+    e2 = store.apply_update("g", GraphUpdate(
+        u=np.array([30]), v=np.array([0]), dw=w1, add=1))
+    assert int(e2.graph.n_nodes) == 31 and e2.version == 2
+
+
+def test_store_vertex_capacity_overflow_rebuckets():
+    g, _ = admit(sbm_graph(n_nodes=60, n_blocks=3, seed=5)[0],
+                 [Bucket(64, 2048)])
+    store, _, _ = _store_with(g)
+    with pytest.raises(CapacityExceeded, match="vertex capacity"):
+        store.apply_update("g", GraphUpdate(add=10))
+    assert store.get("g") is None          # invalidated for re-bucketing
+    assert store.n_invalidations == 1
+
+
+def test_store_id_map_composes_across_batches():
+    g, _ = admit(sbm_graph(n_nodes=30, n_blocks=3, seed=2)[0],
+                 [Bucket(64, 2048)])
+    store, _, _ = _store_with(g)
+    plan = store.prepare_update_seq("g", [
+        GraphUpdate(remove=np.array([3])),        # survivors > 3 shift 1
+        GraphUpdate(remove=np.array([10])),       # old id 11 (now 10) goes
+    ])
+    assert plan.n_removed == 2 and int(plan.graph.n_nodes) == 28
+    id_map = plan.id_map
+    assert id_map[3] == -1 and id_map[11] == -1
+    assert id_map[0] == 0 and id_map[4] == 3 and id_map[12] == 10
+    assert plan.version == 1
+
+
+def test_store_counts_vertex_ops_and_deletions():
+    g, _ = admit(sbm_graph(n_nodes=30, n_blocks=3, seed=2)[0],
+                 [Bucket(64, 2048)])
+    store, _, _ = _store_with(g)
+    src = np.asarray(g.src)
+    deg0 = int(((src == 0) | (np.asarray(g.dst) == 0)).sum())
+    e = store.apply_update("g", GraphUpdate(add=1, remove=np.array([0])))
+    assert store.n_vertex_added == 1 and store.n_vertex_removed == 1
+    assert store.n_deletions == deg0       # every incident directed edge
+    assert int(e.graph.n_nodes) == 30
+
+
+# ---------------------------------------------------------------------------
+# engine-batched vs immediate parity under vertex churn
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_engine_update_batch_matches_immediate_vertex_churn():
+    bucket = Bucket(64, 2048)
+    engine = BatchedLouvainEngine(CFG)
+    rng = np.random.default_rng(0)
+    store = ResultStore()
+    items, expect = [], []
+    for s in range(5):
+        g = sbm_graph(n_nodes=50 + s, n_blocks=4, p_in=0.6, p_out=0.06,
+                      seed=s)[0]
+        g, _ = admit(g, [bucket])
+        res = engine.detect_one(g)
+        gid = f"g{s}"
+        store.put(gid, g, res.C, n_communities=res.n_communities,
+                  n_disconnected=res.n_disconnected, q=res.q)
+        n = int(g.n_nodes)
+        C = np.asarray(res.C)
+        rem = int(rng.integers(0, n))
+        anchor = int(rng.choice([i for i in range(n) if i != rem]))
+        peers = [i - (i > rem) for i in range(n)
+                 if C[i] == C[anchor] and i != rem][:3]
+        upd = GraphUpdate(u=np.full(len(peers), n - 1), v=np.array(peers),
+                          dw=np.ones(len(peers), np.float32),
+                          add=1, remove=np.array([rem]))
+        plan = store.prepare_update(gid, upd)
+        items.append((plan.graph, plan.C_prev, plan.touched))
+        expect.append(store.apply_update(gid, upd))   # immediate path
+    outs = engine.update_batch(items)
+    for i, (out, e) in enumerate(zip(outs, expect)):
+        assert np.array_equal(out.C, np.asarray(e.C)), f"partition @{i}"
+        assert out.n_disconnected == 0
+        assert out.q == e.q, f"modularity @{i}"
+        assert out.n_communities == e.n_communities
+
+
+def test_frontend_batched_vertex_updates_match_immediate():
+    common = dict(louvain=CFG, batch_size=4, max_delay_s=0.01)
+    svcB = CommunityService(config=ServiceConfig(update_batch_size=4,
+                                                 **common))
+    svcI = CommunityService(config=ServiceConfig(**common))
+    for svc in (svcB, svcI):
+        for i in range(4):
+            svc.submit_detect(f"g{i}",
+                              sbm_graph(n_nodes=36 + i, n_blocks=3,
+                                        seed=i)[0])
+        svc.drain()
+    futs = []
+    for i in range(4):
+        e = svcI.result(f"g{i}")
+        n = int(e.graph.n_nodes)
+        C = np.asarray(e.C)
+        peers = [j - (j > 1) for j in range(n) if C[j] == C[0] and j != 1][:2]
+        upd = GraphUpdate(u=np.full(len(peers), n - 1), v=np.array(peers),
+                          dw=np.ones(len(peers), np.float32),
+                          add=1, remove=np.array([1]))
+        futs.append(svcB.frontend.submit_update(f"g{i}", upd))
+        svcI.submit_update(f"g{i}", upd)
+    svcB.drain()
+    for i, fut in enumerate(futs):
+        eB, eI = fut.result(timeout=5), svcI.result(f"g{i}")
+        assert np.array_equal(np.asarray(eB.C), np.asarray(eI.C)), f"@{i}"
+        assert eB.q == eI.q and eB.n_disconnected == 0
+    assert svcB.metrics.n_update_batches >= 1
+    assert svcB.metrics.n_vertex_added == 4
+    assert svcB.metrics.n_vertex_removed == 4
+
+
+def test_frontend_vertex_overflow_rebuckets():
+    svc = CommunityService(config=ServiceConfig(
+        louvain=CFG, batch_size=2, max_delay_s=0.01))
+    svc.submit_detect("big", sbm_graph(n_nodes=62, n_blocks=3, seed=5)[0])
+    svc.drain()
+    e0 = svc.result("big")
+    assert e0.bucket.n_cap == 64
+    routed_warm = svc.submit_update("big", GraphUpdate(add=10))
+    assert not routed_warm                  # re-bucketed as a detect
+    svc.drain()
+    e1 = svc.result("big")
+    assert e1.bucket.n_cap > 64
+    assert int(e1.graph.n_nodes) == 72
+    assert e1.n_disconnected == 0
+    assert e1.version > e0.version
+    assert svc.metrics.n_rebucketed == 1
+
+
+def test_async_vertex_update_round_trip():
+    import asyncio
+
+    from repro.service import AsyncCommunityService
+
+    async def run():
+        config = ServiceConfig(louvain=CFG, batch_size=4, max_delay_s=0.01,
+                               update_batch_size=2)
+        async with AsyncCommunityService(config) as svc:
+            fut = await svc.submit_detect(
+                "g", sbm_graph(n_nodes=40, n_blocks=3, seed=1)[0])
+            e0 = await fut
+            n = int(e0.graph.n_nodes)
+            C = np.asarray(e0.C)
+            peers = [i for i in range(n) if C[i] == C[0]][:2]
+            grow = GraphUpdate(u=np.full(len(peers), n), v=np.array(peers),
+                               dw=np.ones(len(peers), np.float32), add=1)
+            f1 = await svc.submit_update("g", grow)
+            f2 = await svc.submit_update("g", GraphUpdate(
+                remove=np.array([n])))
+            await svc.drain()
+            e2 = await f2
+            await f1
+            assert int(e2.graph.n_nodes) == n
+            assert np.array_equal(np.asarray(e2.graph.src),
+                                  np.asarray(e0.graph.src))
+            assert e2.n_disconnected == 0
+
+    asyncio.run(run())
+
+
+# ---------------------------------------------------------------------------
+# hardening regressions: commit guard, invalidate counting
+# ---------------------------------------------------------------------------
+
+def test_commit_update_drops_stale_writes():
+    """Regression: commit_update unconditionally put — a commit racing an
+    invalidation/re-detect resurrected the stale entry.  Now the write is
+    guarded on the version captured at prepare time."""
+    g, _ = admit(sbm_graph(n_nodes=30, n_blocks=3, seed=2)[0],
+                 [Bucket(64, 2048)])
+    store, _, res = _store_with(g)
+    plan = store.prepare_update(
+        "g", (np.array([0]), np.array([9]), np.ones(1, np.float32)))
+    # the entry moves on while the warm compute would run
+    store.invalidate("g")
+    store.put("g", g, res.C, n_communities=res.n_communities,
+              n_disconnected=res.n_disconnected, q=res.q)
+    fresh = store.get("g")
+    out = store.commit_update(plan, C=plan.C_prev, n_communities=1,
+                              n_disconnected=0, q=-1.0)
+    assert out is None
+    assert store.n_stale_commits == 1
+    assert store.n_warm_updates == 0        # dropped, not counted as warm
+    e = store.get("g")
+    assert e.version == fresh.version and e.q == fresh.q
+    # eviction also invalidates the plan's version
+    plan2 = store.prepare_update(
+        "g", (np.array([0]), np.array([9]), np.ones(1, np.float32)))
+    store._entries.clear()                  # simulate LRU eviction
+    assert store.commit_update(plan2, C=plan2.C_prev, n_communities=1,
+                               n_disconnected=0, q=0.0) is None
+    assert store.n_stale_commits == 2
+    with pytest.raises(KeyError):
+        store.apply_update("g", (np.array([0]), np.array([1]),
+                                 np.ones(1, np.float32)))
+
+
+def test_commit_update_matching_version_writes():
+    g, _ = admit(sbm_graph(n_nodes=30, n_blocks=3, seed=2)[0],
+                 [Bucket(64, 2048)])
+    store, _, _ = _store_with(g)
+    e = store.apply_update(
+        "g", (np.array([0]), np.array([9]), np.ones(1, np.float32)))
+    assert e is not None and e.version == 2
+    assert store.n_warm_updates == 1 and store.n_stale_commits == 0
+
+
+def test_invalidate_counts_only_actual_removals():
+    """Regression: invalidate() incremented n_invalidations even when the
+    id was absent, overcounting under invalidate-then-resubmit races."""
+    store = ResultStore()
+    assert store.invalidate("nope") is False
+    assert store.n_invalidations == 0
+    g, _ = admit(sbm_graph(n_nodes=30, n_blocks=3, seed=2)[0],
+                 [Bucket(64, 2048)])
+    _store_with(g, store=store)
+    assert store.invalidate("g") is True
+    assert store.n_invalidations == 1
+    assert store.invalidate("g") is False   # already gone
+    assert store.n_invalidations == 1
+
+
+def test_prepare_graph_update_shared_fold_matches_store():
+    """The store's fold and the bare core fold are the same function —
+    one prepared (graph, C, touched) triple, bit for bit."""
+    g, _ = admit(sbm_graph(n_nodes=40, n_blocks=3, seed=4)[0],
+                 [Bucket(64, 2048)])
+    store, _, res = _store_with(g)
+    upd = GraphUpdate(u=np.array([39, 0]), v=np.array([2, 5]),
+                      dw=np.array([1.0, 1.0], np.float32),
+                      add=1, remove=np.array([7]))
+    plan = store.prepare_update("g", upd)
+    g2, C2, t2, info = prepare_graph_update(g, np.asarray(res.C, np.int32),
+                                            upd)
+    assert np.array_equal(np.asarray(plan.graph.src), np.asarray(g2.src))
+    assert np.array_equal(np.asarray(plan.graph.w), np.asarray(g2.w))
+    assert np.array_equal(plan.C_prev, C2)
+    assert np.array_equal(plan.touched, t2)
+    assert plan.n_deleted == info["n_deleted"]
