@@ -1,6 +1,6 @@
 """Service benchmark: batched engine vs sequential single-graph calls.
 
-Six sections:
+Seven sections:
 
 1. **Engine throughput, one bucket** — an ego-net workload in the
    (64, 2048) bucket.  The sequential baseline is the repo's public
@@ -51,6 +51,14 @@ Six sections:
    segment-reduction backend (``seg_impl='auto'``) vs the pre-backend
    scatter formulation (``seg_impl='scatter'``), paired best-of-5.
    Acceptance: >= 1.2x, with bit-identical partitions.
+
+6. **Telemetry tax** — the section-2 workload through two front ends,
+   telemetry (per-request span tracing + in-memory aggregation sinks)
+   enabled vs disabled, measured paired.  Acceptance: the instrumented
+   path keeps >= 0.95x the disabled path's throughput — observability
+   must cost < ~5%.  The enabled run's queue/engine/host phase shares
+   are emitted as ``# phase_share_*`` markers, recorded in the snapshot
+   informationally (they describe where time goes, not how fast it is).
 
 CSV rows use the suite convention ``name,us_per_call,derived`` (run.py);
 ``scripts/check_bench.py`` parses the ``# <metric>,<value>`` lines into
@@ -532,6 +540,54 @@ def bench_fused_backend():
         f"{m / state['t_fused']:,.0f} edges/s")
 
 
+def bench_telemetry_overhead(graphs):
+    """Section 6: what the span/sink instrumentation costs on the hot
+    serving path.
+
+    Two ServiceFrontends over the same batch-32 workload — one with the
+    in-memory telemetry sink attached (every request pays trace
+    allocation, ten span marks, and sink aggregation at resolve), one
+    with ``telemetry_enabled=False`` (the hub's emission early-outs on
+    the empty sink tuple).  Each frontend owns its engine, so both warm
+    their compile caches outside the timed region; the ratio is measured
+    paired (disabled immediately before enabled, each attempt).
+    """
+    from repro.service.frontend import ServiceFrontend
+
+    def make(enabled):
+        fe = ServiceFrontend(ServiceConfig(
+            louvain=LouvainConfig(), buckets=(BUCKET,), batch_size=B,
+            max_delay_s=2.0, max_pending_per_tenant=B,
+            telemetry_enabled=enabled))
+        run_once(fe)                      # compile outside timing
+        return fe
+
+    def run_once(fe):
+        futs = [fe.submit_detect(f"g{i}", g)
+                for i, g in enumerate(graphs)]
+        fe.dispatch(force=True)
+        for f in futs:
+            f.result()
+
+    fe_off = make(False)
+    fe_on = make(True)
+
+    def attempt():
+        t_off = timeit_best(run_once, fe_off, repeats=3)
+        t_on = timeit_best(run_once, fe_on, repeats=3)
+        return t_off / t_on
+
+    ratio = accept_speedup("speedup_telemetry_on", attempt, bar=0.95)
+    t_on = timeit_best(run_once, fe_on, repeats=3)
+    row("service_telemetry_on_batch32", t_on,
+        f"{B / t_on:.1f} graphs/s,{ratio:.2f}x_vs_disabled")
+    # where the instrumented run's time went — informational markers for
+    # the snapshot, never gated (shares describe shape, not speed)
+    bd = fe_on.mem_sink.phase_breakdown()
+    for group in ("queue", "engine", "host"):
+        print(f"# phase_share_{group},{bd[group]:.4f}")
+
+
 def main():
     print("name,us_per_call,derived")
     graphs, t_seq, seq = bench_engine()
@@ -540,6 +596,7 @@ def main():
     bench_vertex_churn(graphs)
     bench_bucket_mix()
     bench_fused_backend()
+    bench_telemetry_overhead(graphs)
 
 
 if __name__ == "__main__":

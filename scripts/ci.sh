@@ -6,11 +6,15 @@
 # Tiers:
 #   tier1  — the full pytest suite (ROADMAP's tier-1 verify).  Fast-ish,
 #            deterministic; runs on every push/PR (.github/workflows/ci.yml).
-#   smoke  — the three serve_communities end-to-end smokes: the sync pump
-#            driver, the async multi-tenant driver, and the fully-dynamic
+#   smoke  — the four serve_communities end-to-end smokes: the sync pump
+#            driver, the async multi-tenant driver, the fully-dynamic
 #            churn driver (edge deletions AND vertex additions/removals
 #            through the batched warm path, with the vertex round-trip /
-#            capacity-reclaim asserts).  Also in the GitHub workflow.
+#            capacity-reclaim asserts), and the open-loop replay driver
+#            (telemetry attached; scrapes the live Prometheus exporter
+#            mid-run and asserts the body parses with per-tenant served
+#            counters, per-phase latency histograms and compile hit/miss
+#            counters).  Also in the GitHub workflow.
 #   bench  — acceptance benchmarks + regression check: scripts/check_bench.py
 #            runs benchmarks/bench_service.py + bench_kernels.py, enforces
 #            the speedup bars, writes benchmarks/BENCH_service.json and
@@ -39,6 +43,8 @@ run_smoke() {
   python -m repro.launch.serve_communities --async --smoke
   echo "== churn (dynamic deletions + vertex churn) smoke =="
   python -m repro.launch.serve_communities --churn --smoke
+  echo "== replay (open-loop load + live exporter scrape) smoke =="
+  python -m repro.launch.serve_communities --replay --smoke
 }
 
 run_bench() {

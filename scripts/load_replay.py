@@ -1,0 +1,131 @@
+#!/usr/bin/env python
+"""Open-loop load replay against the community service: one rate, or a
+rate sweep that locates the saturation knee.
+
+Wraps :mod:`repro.service.replay`.  Traffic is heavy-tailed in graph
+size (Pareto, clipped to the bucket ladder), Zipf-skewed across tenants,
+and mixes warm edge updates into the detect stream.  Arrivals are
+Poisson at the configured rate and do NOT slow down when the service
+falls behind — overflow is rejected (counted), which is what makes the
+knee visible.
+
+Single rate:
+  PYTHONPATH=src python scripts/load_replay.py --rate 80 --duration 5
+
+Rate sweep (knee detection):
+  PYTHONPATH=src python scripts/load_replay.py --sweep 20,40,80,160,320
+
+Write the full per-rate reports (phase breakdowns included) to JSON:
+  PYTHONPATH=src python scripts/load_replay.py --sweep 25,50,100 \
+      --json replay_sweep.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+from repro.core import LouvainConfig                        # noqa: E402
+from repro.service.admission import ServiceConfig           # noqa: E402
+from repro.service.replay import (                          # noqa: E402
+    ReplayConfig, run_replay, sweep_rates,
+)
+
+
+def _fmt_ms(v):
+    return "   n/a" if v is None else f"{v:6.1f}"
+
+
+def print_report(rep: dict):
+    print(f"rate {rep['rate']:7.1f}/s  offered {rep['offered']:5d}  "
+          f"served {rep['served']:5d}  rejected {rep['rejected']:4d}  "
+          f"goodput {rep['goodput']:.2f}")
+    print(f"  latency p50 {_fmt_ms(rep['p50_ms'])} ms   "
+          f"p99 {_fmt_ms(rep['p99_ms'])} ms   "
+          f"({rep['late_arrivals']} late arrivals)")
+    bd = rep.get("phase_breakdown")
+    if bd:
+        print("  breakdown  " + "  ".join(
+            f"{k} {v * 100:5.1f}%" for k, v in sorted(bd.items())))
+    for name, ph in rep.get("phases", {}).items():
+        print(f"    {name:<16} ({ph['group']:<6}) "
+              f"p50 {ph['p50_ms']:9.3f} ms  p99 {ph['p99_ms']:9.3f} ms  "
+              f"n={ph['count']}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="open-loop load replay / saturation-knee finder")
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="offered arrival rate (req/s)")
+    ap.add_argument("--sweep", type=str, default=None,
+                    help="comma-separated rate ladder; overrides --rate "
+                         "and reports the saturation knee")
+    ap.add_argument("--duration", type=float, default=3.0,
+                    help="arrival window per rate (seconds)")
+    ap.add_argument("--tenants", type=int, default=4)
+    ap.add_argument("--tenant-skew", type=float, default=1.5,
+                    help="Zipf exponent over tenants (0 = uniform)")
+    ap.add_argument("--update-frac", type=float, default=0.3)
+    ap.add_argument("--pool", type=int, default=24,
+                    help="distinct graphs cycled through")
+    ap.add_argument("--n-min", type=int, default=12)
+    ap.add_argument("--n-max", type=int, default=48)
+    ap.add_argument("--size-alpha", type=float, default=1.5,
+                    help="Pareto shape for graph sizes (smaller = heavier "
+                         "tail)")
+    ap.add_argument("--no-warm", action="store_true",
+                    help="skip the pre-compile/seed phase (latencies will "
+                         "include XLA compiles)")
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--max-delay-ms", type=float, default=25.0)
+    ap.add_argument("--max-pending", type=int, default=12,
+                    help="per-tenant queue bound")
+    ap.add_argument("--knee-goodput", type=float, default=0.9,
+                    help="goodput below this marks the knee")
+    ap.add_argument("--knee-p99-factor", type=float, default=5.0,
+                    help="p99 blowup vs the lowest rate that marks the "
+                         "knee")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", type=str, default=None,
+                    help="write the full report(s) to this JSON file")
+    args = ap.parse_args(argv)
+
+    base = ReplayConfig(
+        rate=args.rate, duration_s=args.duration, n_tenants=args.tenants,
+        tenant_skew=args.tenant_skew, update_frac=args.update_frac,
+        pool_size=args.pool, n_min=args.n_min, n_max=args.n_max,
+        size_alpha=args.size_alpha, seed=args.seed, warm=not args.no_warm)
+    config = ServiceConfig(
+        louvain=LouvainConfig(), batch_size=args.batch,
+        max_delay_s=args.max_delay_ms / 1e3,
+        max_pending_per_tenant=args.max_pending,
+        telemetry_enabled=True)
+
+    if args.sweep:
+        rates = [float(r) for r in args.sweep.split(",")]
+        out = sweep_rates(rates, base, config,
+                          knee_goodput=args.knee_goodput,
+                          knee_p99_factor=args.knee_p99_factor)
+        for rep in out["rates"]:
+            print_report(rep)
+        knee = out["knee_rate"]
+        print("saturation knee: "
+              + (f"{knee:.1f} req/s" if knee is not None
+                 else f"not reached up to {max(rates):.1f} req/s"))
+    else:
+        out = run_replay(base, config)
+        print_report(out)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2, allow_nan=False)
+        print(f"wrote {args.json}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

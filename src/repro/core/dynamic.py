@@ -592,7 +592,7 @@ def warm_update_impl(g: Graph, C_prev, touched, *, tau=1e-3,
 
     Returns a dict: ``C`` (dense int32[nv] membership), ``n_communities``,
     ``n_disconnected``, ``fraction``, ``q``, ``iterations``,
-    ``n_affected``.
+    ``n_affected``, ``split_moved`` (vertices the split pass relabelled).
     """
     impl = "dense" if scan == "dense" else "coo"
     active0 = affected_mask(g, C_prev, touched)
@@ -623,6 +623,7 @@ def warm_update_impl(g: Graph, C_prev, touched, *, tau=1e-3,
         q=q,
         iterations=it,
         n_affected=jnp.sum(active0.astype(jnp.int32)),
+        split_moved=jnp.sum((labels != C) & g.node_mask()).astype(jnp.int32),
     )
 
 
@@ -657,6 +658,7 @@ def update_communities(g_old: Graph, C_prev, updates, *, tau=1e-3,
         iterations=out["iterations"],
         n_communities=out["n_communities"],
         n_affected=out["n_affected"],
+        split_moved=out["split_moved"],
         n_disconnected=out["n_disconnected"],
         q=out["q"],
         n_deleted=info["n_deleted"],

@@ -61,6 +61,8 @@ class PassState(NamedTuple):
     tau: jax.Array
     lp: jax.Array         # passes completed
     li_last: jax.Array
+    li_total: jax.Array   # local-move sweeps summed over passes
+    split_moved: jax.Array  # vertices relabelled by split/refine, all passes
     done: jax.Array
 
 
@@ -160,6 +162,9 @@ def louvain_impl(g: Graph, cfg: LouvainConfig = LouvainConfig(), *, axis=None,
             )
         else:
             labels = C
+        # split-pass trigger count: vertices the split/refine slot moved
+        # out of their local-move community this pass (telemetry)
+        moved = jnp.sum((labels != C) & node_valid).astype(jnp.int32)
         C_dense, n_comms = seg.renumber(labels, node_valid, nv)
         Ctop = C_dense[st.Ctop]
 
@@ -180,7 +185,8 @@ def louvain_impl(g: Graph, cfg: LouvainConfig = LouvainConfig(), *, axis=None,
             esrc=esrc, edst=edst, ew=ew, Ctop=Ctop,
             n_cur=jnp.where(done, st.n_cur, n_comms),
             tau=st.tau / cfg.tolerance_drop,
-            lp=st.lp + 1, li_last=li, done=done,
+            lp=st.lp + 1, li_last=li, li_total=st.li_total + li,
+            split_moved=st.split_moved + moved, done=done,
         )
 
     def cond(st: PassState):
@@ -191,21 +197,27 @@ def louvain_impl(g: Graph, cfg: LouvainConfig = LouvainConfig(), *, axis=None,
         Ctop=jnp.arange(nv, dtype=jnp.int32),
         n_cur=g.n_nodes.astype(jnp.int32),
         tau=jnp.float32(cfg.tolerance),
-        lp=jnp.int32(0), li_last=jnp.int32(0),
+        lp=jnp.int32(0), li_last=jnp.int32(0), li_total=jnp.int32(0),
+        split_moved=jnp.int32(0),
         done=jnp.bool_(False),
     )
     out = jax.lax.while_loop(cond, body, init)
 
     Ctop = out.Ctop
+    split_moved = out.split_moved
     if cfg.split.startswith("sl"):
         labels, _ = split_labels(
             g.src, g.dst, g.w, Ctop, mode=mode,
             max_iters=cfg.split_max_iters, axis=axis, impl=split_impl,
             seg_impl=seg_impl, block_m=block_m,
         )
+        split_moved = split_moved + jnp.sum(
+            (labels != Ctop) & g.node_mask()).astype(jnp.int32)
         Ctop, _ = seg.renumber(labels, g.node_mask(), nv)
     n_final = seg.count_communities(Ctop, g.node_mask(), nv)
-    stats = dict(passes=out.lp, li_last=out.li_last, n_communities=n_final)
+    stats = dict(passes=out.lp, li_last=out.li_last,
+                 li_total=out.li_total, split_moved=split_moved,
+                 n_communities=n_final)
     return Ctop, stats
 
 
@@ -249,6 +261,8 @@ def louvain_staged(g: Graph, cfg: LouvainConfig = LouvainConfig(), *,
     pass_seconds = []
     passes = 0
     li = 0
+    li_total = 0
+    split_moved = 0
 
     for _ in range(cfg.max_passes):
         t_pass = time.perf_counter()
@@ -281,6 +295,8 @@ def louvain_staged(g: Graph, cfg: LouvainConfig = LouvainConfig(), *,
             phase["split"] += t_sp
         else:
             labels = C
+        li_total += li
+        split_moved += int(jnp.sum((labels != C) & node_valid))
         (res, t_o) = _timed(seg.renumber, labels, node_valid, nv)
         C_dense, n_comms = res
         phase["other"] += t_o
@@ -304,10 +320,12 @@ def louvain_staged(g: Graph, cfg: LouvainConfig = LouvainConfig(), *,
             block_m=block_m,
         )
         phase["split"] += t_sp
+        split_moved += int(jnp.sum((labels != Ctop) & g.node_mask()))
         Ctop, _ = seg.renumber(labels, g.node_mask(), nv)
     n_final = int(seg.count_communities(Ctop, g.node_mask(), nv))
     stats = dict(
-        passes=passes, li_last=li, n_communities=n_final,
+        passes=passes, li_last=li, li_total=li_total,
+        split_moved=split_moved, n_communities=n_final,
         phase_seconds=phase, pass_seconds=pass_seconds,
     )
     return Ctop, stats

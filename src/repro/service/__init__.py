@@ -29,7 +29,18 @@ stack:
 * :mod:`repro.service.service`   — :class:`CommunityService`, the thin
   synchronous pump adapter over the front end (PR-1 API preserved).
 * :mod:`repro.service.metrics`   — latency/throughput metrics with
-  per-tenant served/rejected breakdowns.
+  per-tenant served/rejected breakdowns (histogram-backed, bounded
+  memory), mirrored to the :mod:`repro.telemetry` sink hub.
+* :mod:`repro.service.replay`    — open-loop load-replay harness:
+  heavy-tailed sizes, tenant skew, update/detect mixes at a configured
+  arrival rate; rate sweeps locate the saturation knee and the telemetry
+  layer yields the per-phase latency breakdown.
+
+Observability: every request carries a per-phase trace
+(``DetectionFuture.trace``), and ``ServiceConfig(telemetry_enabled=...,
+exporter_port=...)`` attaches aggregation sinks plus a Prometheus-text
+``/metrics`` endpoint — see :mod:`repro.telemetry` and the README
+"Observability" section.
 """
 from repro.core.dynamic import CapacityError, GraphUpdate
 from repro.service.admission import (
@@ -40,12 +51,13 @@ from repro.service.buckets import (
     Bucket, DEFAULT_BUCKETS, choose_bucket, choose_scan,
 )
 from repro.service.engine import (
-    BatchedLouvainEngine, DetectResult, UpdateResult,
+    BatchedLouvainEngine, DetectResult, DispatchInfo, UpdateResult,
 )
 from repro.service.frontend import (
     AsyncCommunityService, DetectionFuture, ServiceFrontend,
 )
 from repro.service.metrics import ServiceMetrics, TenantMetrics
+from repro.service.replay import ReplayConfig, run_replay, sweep_rates
 from repro.service.service import CommunityService
 from repro.service.store import (
     CapacityExceeded, ResultStore, StoreEntry, UpdatePlan,
@@ -63,9 +75,11 @@ __all__ = [
     "DEFAULT_TENANT",
     "DetectResult",
     "DetectionFuture",
+    "DispatchInfo",
     "GraphUpdate",
     "PendingRequest",
     "QueueFull",
+    "ReplayConfig",
     "ResultStore",
     "ServiceConfig",
     "ServiceFrontend",
@@ -76,4 +90,6 @@ __all__ = [
     "UpdateResult",
     "choose_bucket",
     "choose_scan",
+    "run_replay",
+    "sweep_rates",
 ]

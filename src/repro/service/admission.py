@@ -86,6 +86,22 @@ class ServiceConfig:
     Store eviction:
       store_max_entries: LRU cap on resident entries (None = unbounded).
       store_ttl_s:       entry time-to-live (None = no expiry).
+
+    Telemetry (:mod:`repro.telemetry`):
+      telemetry_enabled: attach the in-memory aggregation sink (per-phase
+                   span histograms, algorithm counters, fill/queue-depth
+                   gauges — what the exporter scrapes).  False leaves the
+                   hub empty: request traces still populate
+                   ``DetectionFuture.trace``, but no sink work runs on
+                   the serving path.
+      telemetry_jsonl: path for a JSONL event-log sink (None = off).
+      exporter_port: serve Prometheus text format on
+                   ``http://127.0.0.1:<port>/metrics`` (0 = ephemeral
+                   port, read it off ``frontend.exporter.port``; None =
+                   no HTTP thread).  Requires ``telemetry_enabled``.
+      profile_dir: wrap every engine dispatch in
+                   ``jax.profiler.trace(profile_dir)`` for on-device deep
+                   dives (expensive; None = off).
     """
 
     louvain: LouvainConfig = dataclasses.field(default_factory=LouvainConfig)
@@ -104,6 +120,10 @@ class ServiceConfig:
     tenant_weights: Tuple[Tuple[str, float], ...] = ()
     store_max_entries: Optional[int] = None
     store_ttl_s: Optional[float] = None
+    telemetry_enabled: bool = True
+    telemetry_jsonl: Optional[str] = None
+    exporter_port: Optional[int] = None
+    profile_dir: Optional[str] = None
 
     def __post_init__(self):
         if self.batch_size < 1:
@@ -118,6 +138,9 @@ class ServiceConfig:
             if weight <= 0:
                 raise ValueError(
                     f"tenant {tenant!r} weight must be > 0, got {weight}")
+        if self.exporter_port is not None and not self.telemetry_enabled:
+            raise ValueError("exporter_port requires telemetry_enabled "
+                             "(the exporter scrapes the in-memory sink)")
         object.__setattr__(self, "buckets", tuple(sorted(self.buckets)))
 
 

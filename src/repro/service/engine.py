@@ -35,7 +35,9 @@ whole batch remains ONE jitted call: tiles run under ``lax.map`` inside it.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import time
 from functools import partial
 from typing import Optional, Sequence, Tuple
 
@@ -51,6 +53,7 @@ from repro.graph.container import Graph, stack_graphs
 from repro.kernels import ops
 from repro.kernels.autotune import autotune_block_m
 from repro.service.buckets import Bucket, bucket_of, choose_scan, filler
+from repro.telemetry.sinks import Telemetry
 
 
 @dataclasses.dataclass
@@ -63,6 +66,8 @@ class DetectResult:
     fraction: float              # disconnected fraction (paper metric)
     passes: int
     q: float                     # modularity of the returned partition
+    sweeps: int = 0              # local-move sweeps summed over passes
+    split_moved: int = 0         # vertices the split pass relabelled
 
 
 @dataclasses.dataclass
@@ -75,6 +80,36 @@ class UpdateResult:
     fraction: float
     iterations: int              # warm local-move sweeps
     q: float
+    n_affected: int = 0          # delta-screening affected vertices
+    split_moved: int = 0         # vertices the split pass relabelled
+
+
+@dataclasses.dataclass
+class DispatchInfo:
+    """Timing of one engine dispatch, for span attribution.
+
+    Monotonic-clock stamps bracket the phases the front end turns into
+    batch-level spans: ``compile`` = (t_call0, t_call1) on a cache miss
+    (jit compiles lazily at the first call) and empty on a hit;
+    ``engine-dispatch`` = the call interval minus compile; ``device-sync``
+    = (t_call1, t_sync), the device->host conversion that blocks on the
+    async dispatch.  ``fill`` is the live fraction of the padded batch
+    (filler slots excluded) — the bucket fill-factor gauge.
+    """
+
+    kind: str                    # "detect" | "update"
+    bucket: Bucket
+    n: int                       # live requests in the batch
+    capacity: int                # n_tiles * sub_batch (padded width)
+    compile_hit: bool
+    t_start: float               # dispatch entry (host prep begins)
+    t_call0: float               # jitted call begins
+    t_call1: float               # jitted call returned (async dispatch)
+    t_sync: float                # device->host conversion finished
+
+    @property
+    def fill(self) -> float:
+        return self.n / self.capacity if self.capacity else 0.0
 
 
 # (bucket-padded updated graph — vertex+edge rewrites applied, previous
@@ -91,7 +126,9 @@ class BatchedLouvainEngine:
                  dense_min_density: Optional[float] = None,
                  sub_batch: Optional[int] = None,
                  seg_impl: str = "auto",
-                 seg_block_m: Optional[int] = None):
+                 seg_block_m: Optional[int] = None,
+                 telemetry: Optional[Telemetry] = None,
+                 profile_dir: Optional[str] = None):
         """Args:
           cfg: the one Louvain config this engine serves (part of the
             compile key; run several engines for several configs).
@@ -110,6 +147,12 @@ class BatchedLouvainEngine:
           seg_block_m: Pallas kernel block rows; None = per-bucket
             autotuned (kernels/autotune.py, on-disk cache — the kernel
             ladder next to this engine's tile ladder).
+          telemetry: optional hub for compile-cache hit/miss counters,
+            algorithm counters (passes/sweeps/affected/split-moves) and
+            the bucket fill-factor gauge; None = no emission.
+          profile_dir: when set, every dispatch runs inside
+            ``jax.profiler.trace(profile_dir)`` for on-device deep dives
+            (TensorBoard-viewable; expensive — opt-in only).
         """
         self.cfg = cfg
         self.dense_max_nv = dense_max_nv
@@ -120,8 +163,48 @@ class BatchedLouvainEngine:
         self.sub_batch = max(1, int(sub_batch))
         self.seg_impl = ops.resolve_impl(seg_impl)
         self.seg_block_m = seg_block_m
+        self.telemetry = telemetry or Telemetry()
+        self.profile_dir = profile_dir
+        self.n_compile_hits = 0
+        self.n_compile_misses = 0
+        self.last_detect_info: Optional[DispatchInfo] = None
+        self.last_update_info: Optional[DispatchInfo] = None
         self._seg_blocks: dict = {}
         self._compiled: dict = {}
+
+    def _profiled(self):
+        if self.profile_dir is None:
+            return contextlib.nullcontext()
+        return jax.profiler.trace(self.profile_dir)
+
+    def _note_compile(self, kind: str, bucket: Bucket, hit: bool):
+        if hit:
+            self.n_compile_hits += 1
+        else:
+            self.n_compile_misses += 1
+        self.telemetry.counter(
+            "engine_compile", 1,
+            {"kind": kind, "bucket": f"{bucket.n_cap}x{bucket.m_cap}",
+             "result": "hit" if hit else "miss"})
+
+    def _note_dispatch(self, info: DispatchInfo, flat: dict, n: int):
+        """Emit algorithm counters + fill gauge for a finished batch."""
+        tel = self.telemetry
+        if not tel.enabled:
+            return
+        bl = {"bucket": f"{info.bucket.n_cap}x{info.bucket.m_cap}"}
+        tel.gauge("batch_fill_factor", info.fill, bl)
+        if info.kind == "detect":
+            tel.counter("louvain_passes",
+                        float(flat["passes"][:n].sum()), bl)
+            tel.counter("local_move_sweeps",
+                        float(flat["sweeps"][:n].sum()), bl)
+        else:
+            tel.counter("local_move_sweeps",
+                        float(flat["iterations"][:n].sum()), bl)
+            tel.counter("affected_vertices",
+                        float(flat["n_affected"][:n].sum()), bl)
+        tel.counter("split_moves", float(flat["split_moved"][:n].sum()), bl)
 
     # -- compile cache ----------------------------------------------------
     def scan_for(self, bucket: Bucket) -> str:
@@ -160,6 +243,8 @@ class BatchedLouvainEngine:
             C=C,
             n_communities=stats["n_communities"],
             passes=stats["passes"],
+            sweeps=stats["li_total"],
+            split_moved=stats["split_moved"],
             n_disconnected=det["n_disconnected"],
             fraction=det["fraction"],
             q=q,
@@ -242,6 +327,7 @@ class BatchedLouvainEngine:
         graphs = list(graphs)
         if not graphs:
             return []
+        t_start = time.perf_counter()
         bucket = bucket_of(graphs[0])
         b = self.sub_batch
         n = len(graphs)
@@ -260,9 +346,22 @@ class BatchedLouvainEngine:
             n_nodes=gb.n_nodes.reshape(n_tiles, b),
             n_cap=gb.n_cap, m_cap=gb.m_cap,
         )
-        out = self.compiled_fn(bucket, n_tiles)(tiled)
-        flat = {k: np.asarray(v).reshape((n_tiles * b,) + v.shape[2:])
-                for k, v in out.items()}
+        hit = self._detect_key(bucket, n_tiles) in self._compiled
+        fn = self.compiled_fn(bucket, n_tiles)
+        t_call0 = time.perf_counter()
+        with self._profiled():
+            out = fn(tiled)
+            t_call1 = time.perf_counter()
+            flat = {k: np.asarray(v).reshape((n_tiles * b,) + v.shape[2:])
+                    for k, v in out.items()}
+        t_sync = time.perf_counter()
+        info = DispatchInfo(
+            kind="detect", bucket=bucket, n=n, capacity=n_tiles * b,
+            compile_hit=hit, t_start=t_start, t_call0=t_call0,
+            t_call1=t_call1, t_sync=t_sync)
+        self.last_detect_info = info
+        self._note_compile("detect", bucket, hit)
+        self._note_dispatch(info, flat, n)
         return [
             DetectResult(
                 C=flat["C"][i],
@@ -271,6 +370,8 @@ class BatchedLouvainEngine:
                 fraction=float(flat["fraction"][i]),
                 passes=int(flat["passes"][i]),
                 q=float(flat["q"][i]),
+                sweeps=int(flat["sweeps"][i]),
+                split_moved=int(flat["split_moved"][i]),
             )
             for i in range(n)
         ]
@@ -297,6 +398,7 @@ class BatchedLouvainEngine:
         items = list(items)
         if not items:
             return []
+        t_start = time.perf_counter()
         bucket = bucket_of(items[0][0])
         b = self.sub_batch
         n = len(items)
@@ -316,10 +418,24 @@ class BatchedLouvainEngine:
             n_nodes=gb.n_nodes.reshape(n_tiles, b),
             n_cap=gb.n_cap, m_cap=gb.m_cap,
         )
-        out = self.update_fn(bucket, n_tiles, tau=tau, max_iters=max_iters)(
-            tiled_g, Cb.reshape(n_tiles, b, nv), Tb.reshape(n_tiles, b, nv))
-        flat = {k: np.asarray(v).reshape((n_tiles * b,) + v.shape[2:])
-                for k, v in out.items()}
+        hit = self._update_key(bucket, n_tiles, tau, max_iters) \
+            in self._compiled
+        fn = self.update_fn(bucket, n_tiles, tau=tau, max_iters=max_iters)
+        t_call0 = time.perf_counter()
+        with self._profiled():
+            out = fn(tiled_g, Cb.reshape(n_tiles, b, nv),
+                     Tb.reshape(n_tiles, b, nv))
+            t_call1 = time.perf_counter()
+            flat = {k: np.asarray(v).reshape((n_tiles * b,) + v.shape[2:])
+                    for k, v in out.items()}
+        t_sync = time.perf_counter()
+        info = DispatchInfo(
+            kind="update", bucket=bucket, n=n, capacity=n_tiles * b,
+            compile_hit=hit, t_start=t_start, t_call0=t_call0,
+            t_call1=t_call1, t_sync=t_sync)
+        self.last_update_info = info
+        self._note_compile("update", bucket, hit)
+        self._note_dispatch(info, flat, n)
         return [
             UpdateResult(
                 C=flat["C"][i],
@@ -328,6 +444,8 @@ class BatchedLouvainEngine:
                 fraction=float(flat["fraction"][i]),
                 iterations=int(flat["iterations"][i]),
                 q=float(flat["q"][i]),
+                n_affected=int(flat["n_affected"][i]),
+                split_moved=int(flat["split_moved"][i]),
             )
             for i in range(n)
         ]

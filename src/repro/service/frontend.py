@@ -59,9 +59,12 @@ from repro.service.admission import (
     ServiceConfig,
 )
 from repro.service.buckets import Bucket, admit, live_edges
-from repro.service.engine import BatchedLouvainEngine
+from repro.service.engine import BatchedLouvainEngine, DispatchInfo
 from repro.service.metrics import ServiceMetrics
 from repro.service.store import CapacityExceeded, ResultStore
+from repro.telemetry.prometheus import MetricsExporter
+from repro.telemetry.sinks import InMemorySink, JsonlSink, Telemetry
+from repro.telemetry.spans import RequestTrace
 
 
 class DetectionFuture:
@@ -75,17 +78,24 @@ class DetectionFuture:
     raises the engine's exception).  ``kind`` is ``"detect"`` for queued
     detections (including re-bucketed updates) and ``"update"`` for
     warm-path updates, which resolve immediately.
+
+    ``trace`` is the request's :class:`repro.telemetry.spans.RequestTrace`
+    (trace id == request id): per-phase spans accumulate as the request
+    moves through the service and the completed trace is broadcast to
+    the telemetry sinks at resolve time.
     """
 
-    __slots__ = ("req_id", "tenant", "graph_id", "kind", "t_submit", "_fut")
+    __slots__ = ("req_id", "tenant", "graph_id", "kind", "t_submit",
+                 "trace", "_fut")
 
     def __init__(self, req_id: str, tenant: str, graph_id: str, kind: str,
-                 t_submit: float):
+                 t_submit: float, trace: Optional[RequestTrace] = None):
         self.req_id = req_id
         self.tenant = tenant
         self.graph_id = graph_id
         self.kind = kind
         self.t_submit = t_submit
+        self.trace = trace
         self._fut: concurrent.futures.Future = concurrent.futures.Future()
 
     # caller side
@@ -144,11 +154,24 @@ class ServiceFrontend:
         self.config = config or ServiceConfig()
         c = self.config
         self.clock = clock or time.perf_counter
+        # telemetry hub + built-in sinks per config; the hub exists even
+        # disabled (emission early-outs on the empty sink tuple)
+        self.telemetry = Telemetry()
+        self.mem_sink: Optional[InMemorySink] = None
+        self.exporter: Optional[MetricsExporter] = None
+        if c.telemetry_enabled:
+            self.mem_sink = self.telemetry.register(InMemorySink())
+        if c.telemetry_jsonl:
+            self.telemetry.register(JsonlSink(c.telemetry_jsonl))
+        if c.exporter_port is not None:
+            self.exporter = MetricsExporter(self.mem_sink,
+                                            port=c.exporter_port)
         self.engine = BatchedLouvainEngine(
             c.louvain, dense_max_nv=c.dense_max_nv,
             dense_small_nv=c.dense_small_nv,
             dense_min_density=c.dense_min_density, sub_batch=c.sub_batch,
-            seg_impl=c.seg_impl, seg_block_m=c.seg_block_m)
+            seg_impl=c.seg_impl, seg_block_m=c.seg_block_m,
+            telemetry=self.telemetry, profile_dir=c.profile_dir)
         self.admission = AdmissionController(
             c.buckets, batch_size=c.batch_size, max_delay_s=c.max_delay_s,
             max_pending_per_tenant=c.max_pending_per_tenant,
@@ -159,7 +182,7 @@ class ServiceFrontend:
             max_entries=c.store_max_entries, ttl_s=c.store_ttl_s,
             clock=self.clock, seg_impl=c.seg_impl,
             seg_block_m=c.seg_block_m or 0)
-        self.metrics = ServiceMetrics()
+        self.metrics = ServiceMetrics(telemetry=self.telemetry)
         # monotonic request ids: never reuses after a dispatch (the old
         # n_detect + pending() scheme collided once requests were served)
         self._seq = itertools.count()
@@ -193,16 +216,24 @@ class ServiceFrontend:
             raise QueueFull(
                 f"tenant {tenant!r} is at its pending bound "
                 f"({self.config.max_pending_per_tenant})")
+        rid = f"d{next(self._seq)}-{graph_id}"
+        trace = RequestTrace(rid, tenant=tenant, kind="detect",
+                             clock=self.clock)
+        t_r0 = self.clock()
         padded, bucket = admit(graph, self.config.buckets)
-        fut = DetectionFuture(
-            f"d{next(self._seq)}-{graph_id}", tenant, graph_id, "detect", t0)
+        t_r1 = self.clock()
+        trace.mark("submit", t0, t_r0)
+        trace.mark("repad", t_r0, t_r1)
+        fut = DetectionFuture(rid, tenant, graph_id, "detect", t0,
+                              trace=trace)
         req = PendingRequest(
             req_id=fut.req_id, tenant=tenant, graph_id=graph_id,
             graph=padded, bucket=bucket, priority=priority, t_submit=t0,
             deadline=None if deadline_s is None else t0 + float(deadline_s),
             future=fut)
         try:
-            self.admission.submit(req, exempt_bound=exempt_bound)
+            with trace.span("admission"):
+                self.admission.submit(req, exempt_bound=exempt_bound)
         except QueueFull:
             if count_reject:
                 self.metrics.reject(tenant)
@@ -228,14 +259,17 @@ class ServiceFrontend:
         ValueError for statically-malformed batches.
         """
         t0 = self.clock()
+        rid = f"u{next(self._seq)}-{graph_id}"
+        trace = RequestTrace(rid, tenant=tenant, kind="update",
+                             clock=self.clock)
         upd = as_update(updates)     # static validation at the front door
         entry = self.store.get(graph_id)
         if entry is None:
             raise KeyError(f"no stored partition for {graph_id!r}")
+        trace.mark("submit", t0, self.clock())
         if self.config.update_batch_size > 1:
-            fut = DetectionFuture(
-                f"u{next(self._seq)}-{graph_id}", tenant, graph_id,
-                "update", t0)
+            fut = DetectionFuture(rid, tenant, graph_id, "update", t0,
+                                  trace=trace)
             with self._upd_lock:
                 self._updates.setdefault(entry.bucket, []).append(
                     UpdateRequest(graph_id=graph_id, tenant=tenant,
@@ -245,7 +279,7 @@ class ServiceFrontend:
         n_va0 = self.store.n_vertex_added
         n_vr0 = self.store.n_vertex_removed
         try:
-            new = self.store.apply_update(graph_id, upd)
+            new = self.store.apply_update(graph_id, upd, trace=trace)
         except CapacityExceeded:
             # rebuild the updated graph at full precision and re-detect.
             # The old entry is already invalidated, so this continuation
@@ -263,8 +297,10 @@ class ServiceFrontend:
         self.metrics.n_vertex_added += self.store.n_vertex_added - n_va0
         self.metrics.n_vertex_removed += (self.store.n_vertex_removed
                                           - n_vr0)
-        fut = DetectionFuture(
-            f"u{next(self._seq)}-{graph_id}", tenant, graph_id, "update", t0)
+        fut = DetectionFuture(rid, tenant, graph_id, "update", t0,
+                              trace=trace)
+        trace.mark("resolve", now, self.clock())
+        self.telemetry.trace(trace)
         fut.set_result(new)
         return fut
 
@@ -274,12 +310,25 @@ class ServiceFrontend:
         plus every ready warm-update batch; loops until no bucket is
         ready, so a backlog drains in batch-size-wide slices."""
         batches: List[Batch] = []
+        if self.telemetry.enabled:
+            for t in self.admission.tenants():
+                self.telemetry.gauge("tenant_queue_depth",
+                                     self.admission.pending(t),
+                                     {"tenant": t})
         while True:
             got = 0
             for bucket in self.admission.ready_buckets(self.clock(),
                                                        force=force):
+                t_c0 = self.clock()
                 reqs = self.admission.compose(bucket)
+                t_c1 = self.clock()
                 if reqs:
+                    for r in reqs:
+                        tr = r.future.trace if r.future is not None else None
+                        if tr is not None:
+                            tr.mark("queue-wait", _t_enqueued(tr, r.t_submit),
+                                    t_c0)
+                            tr.mark("drr-compose", t_c0, t_c1)
                     batches.append(("detect", bucket, reqs))
                     got += len(reqs)
             if not got:
@@ -307,6 +356,13 @@ class ServiceFrontend:
                     del q[:size]
                 if not q:
                     del self._updates[bucket]
+        t_pop = self.clock()
+        for _, _, ureqs in batches:
+            for r in ureqs:
+                tr = r.future.trace
+                if tr is not None:
+                    tr.mark("queue-wait", _t_enqueued(tr, r.t_submit), now)
+                    tr.mark("drr-compose", now, t_pop)
         return batches
 
     def execute(self, batches: List[Batch]) -> int:
@@ -325,16 +381,28 @@ class ServiceFrontend:
                     self.metrics.fail(r.tenant)
                     r.future.set_exception(e)
                 continue
+            info = self.engine.last_detect_info
             now = self.clock()
             for req, res in zip(reqs, results):
+                tr = req.future.trace if req.future is not None else None
+                if tr is not None and info is not None:
+                    _mark_engine_spans(tr, info)
+                t_s0 = self.clock()
                 entry = self.store.put(
                     req.graph_id, req.graph, res.C,
                     n_communities=res.n_communities,
                     n_disconnected=res.n_disconnected, q=res.q,
                 )
+                t_s1 = self.clock()
                 self.metrics.observe("detect", now - req.t_submit, now,
                                      tenant=req.tenant)
                 self.metrics.edges_processed += float(live_edges(req.graph))
+                if tr is not None:
+                    tr.mark("store-commit", t_s0, t_s1)
+                    # resolve closes the trace just before the future
+                    # lands so a woken caller always sees a full span set
+                    tr.mark("resolve", t_s1, self.clock())
+                    self.telemetry.trace(tr)
                 req.future.set_result(entry)
                 served += 1
         return served
@@ -355,7 +423,12 @@ class ServiceFrontend:
             try:
                 if entry is None:   # evicted/expired since submit
                     raise KeyError(gid)
+                t_p0 = self.clock()
                 plans.append(self.store.prepare_update_seq(gid, batches))
+                t_p1 = self.clock()
+                for r in rs:
+                    if r.future.trace is not None:
+                        r.future.trace.mark("repad", t_p0, t_p1)
                 plan_reqs.append(rs)
             except CapacityExceeded:
                 # same continuation as the immediate path: re-detect the
@@ -398,12 +471,20 @@ class ServiceFrontend:
                         self.metrics.fail(r.tenant)
                         r.future.set_exception(e)
                 continue
+            # count the batch BEFORE resolving futures: a caller woken by
+            # its future must already see n_update_batches reflect the
+            # dispatch that served it (the old post-loop increment raced)
+            self.metrics.n_update_batches += 1
+            self.metrics.n_updates_batched += len(idxs)
+            info = self.engine.last_update_info
             now = self.clock()
             for i, res in zip(idxs, results):
                 plan = plans[i]
+                t_s0 = self.clock()
                 entry = self.store.commit_update(
                     plan, C=res.C, n_communities=res.n_communities,
                     n_disconnected=res.n_disconnected, q=res.q)
+                t_s1 = self.clock()
                 if entry is None:
                     # the entry moved on (evicted/re-detected) while the
                     # batch computed; the stale write was dropped — fail
@@ -421,10 +502,15 @@ class ServiceFrontend:
                 for r in plan_reqs[i]:
                     self.metrics.observe("update", now - r.t_submit, now,
                                          tenant=r.tenant)
+                    tr = r.future.trace
+                    if tr is not None:
+                        if info is not None:
+                            _mark_engine_spans(tr, info)
+                        tr.mark("store-commit", t_s0, t_s1)
+                        tr.mark("resolve", t_s1, self.clock())
+                        self.telemetry.trace(tr)
                     r.future.set_result(entry)
                     served += 1
-            self.metrics.n_update_batches += 1
-            self.metrics.n_updates_batched += len(idxs)
         return served
 
     def dispatch(self, *, force: bool = False) -> int:
@@ -457,6 +543,15 @@ class ServiceFrontend:
             out = [r for q in self._updates.values() for r in q]
             self._updates.clear()
             return out
+
+    def close(self):
+        """Shut down the telemetry side: stop the exporter's HTTP thread
+        and close every registered sink (flushes the JSONL log).  The
+        serving structures stay usable — this only detaches observers."""
+        if self.exporter is not None:
+            self.exporter.close()
+            self.exporter = None
+        self.telemetry.close()
 
 
 class AsyncCommunityService:
@@ -508,6 +603,10 @@ class AsyncCommunityService:
     def metrics(self) -> ServiceMetrics:
         return self.frontend.metrics
 
+    @property
+    def telemetry(self) -> Telemetry:
+        return self.frontend.telemetry
+
     def result(self, graph_id: str):
         return self.frontend.result(graph_id)
 
@@ -549,6 +648,7 @@ class AsyncCommunityService:
                 w.cancel()
         self._slot_waiters.clear()
         self._compute.shutdown(wait=True)
+        self.frontend.close()
 
     # -- dispatcher --------------------------------------------------------
     async def _execute(self, batches) -> int:
@@ -625,6 +725,26 @@ class AsyncCommunityService:
             else:
                 break
         return served
+
+
+def _t_enqueued(trace: RequestTrace, fallback: float) -> float:
+    """When a request entered its queue: the end of the last span marked
+    at submit time (admission for detects, submit for queued updates)."""
+    return trace.spans[-1].t_end if trace.spans else fallback
+
+
+def _mark_engine_spans(trace: RequestTrace, info: DispatchInfo):
+    """Stamp one dispatch's batch-level phases onto a member request's
+    trace: compile (empty interval on a cache hit), engine-dispatch
+    (host prep + traced jax call), device-sync (device->host blocking
+    conversion).  Every request in the batch shares these intervals."""
+    hit = info.compile_hit
+    trace.mark("compile", info.t_call0,
+               info.t_call0 if hit else info.t_call1,
+               hit="true" if hit else "false")
+    trace.mark("engine-dispatch", info.t_start,
+               info.t_call1 if hit else info.t_call0)
+    trace.mark("device-sync", info.t_call1, info.t_sync)
 
 
 def _graph_with_updates(g: Graph, batches) -> Graph:

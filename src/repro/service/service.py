@@ -76,8 +76,16 @@ class CommunityService:
         return self.frontend.admission
 
     @property
+    def telemetry(self):
+        return self.frontend.telemetry
+
+    @property
     def clock(self):
         return self.frontend.clock
+
+    def close(self):
+        """Stop the telemetry exporter/sinks (no-op when none attached)."""
+        self.frontend.close()
 
     # -- request entry points ---------------------------------------------
     def submit_detect(self, graph_id: str, graph: Graph, *,

@@ -297,7 +297,7 @@ class ResultStore:
             )
 
     def apply_update(self, graph_id: str, updates, *, tau: float = 1e-3,
-                     max_iters: int = 10) -> StoreEntry:
+                     max_iters: int = 10, trace=None) -> StoreEntry:
         """Route one update batch through the warm path, immediately.
 
         prepare -> one jitted :func:`repro.core.dynamic.warm_update` call
@@ -306,19 +306,47 @@ class ResultStore:
         same partitions.  Returns the refreshed entry; raises as
         documented on :meth:`prepare_update`, plus KeyError if the entry
         moved on while the warm compute ran (stale commit dropped).
+
+        ``trace``: optional :class:`repro.telemetry.spans.RequestTrace`
+        receiving the per-phase spans (repad = the host prepare fold,
+        compile = jit cache consult, engine-dispatch, device-sync,
+        store-commit).
         """
-        plan = self.prepare_update(graph_id, updates)
+        if trace is None:
+            plan = self.prepare_update(graph_id, updates)
+        else:
+            with trace.span("repad"):
+                plan = self.prepare_update(graph_id, updates)
+        # the top-level jit caches per (shape, static-args) signature: a
+        # growing cache across two stamps means this call compiled
+        cache_n = (warm_update._cache_size()
+                   if hasattr(warm_update, "_cache_size") else None)
+        t0 = self.clock()
         out = warm_update(
             plan.graph, jnp.asarray(plan.C_prev), jnp.asarray(plan.touched),
             tau=tau, max_iters=max_iters, scan=plan.scan,
             seg_impl=self.seg_impl, block_m=self.seg_block_m,
         )
-        entry = self.commit_update(
-            plan, C=np.asarray(out["C"]),
-            n_communities=int(out["n_communities"]),
-            n_disconnected=int(out["n_disconnected"]),
-            q=float(out["q"]),
-        )
+        t1 = self.clock()
+        C = np.asarray(out["C"])
+        n_comms = int(out["n_communities"])
+        n_disc = int(out["n_disconnected"])
+        q = float(out["q"])
+        t2 = self.clock()
+        if trace is not None:
+            hit = (cache_n is None
+                   or warm_update._cache_size() == cache_n)
+            trace.mark("compile", t0, t0 if hit else t1,
+                       hit="true" if hit else "false")
+            trace.mark("engine-dispatch", t0 if hit else t1, t1)
+            trace.mark("device-sync", t1, t2)
+        if trace is None:
+            entry = self.commit_update(plan, C=C, n_communities=n_comms,
+                                       n_disconnected=n_disc, q=q)
+        else:
+            with trace.span("store-commit"):
+                entry = self.commit_update(plan, C=C, n_communities=n_comms,
+                                           n_disconnected=n_disc, q=q)
         if entry is None:
             raise KeyError(
                 f"{graph_id!r}: entry superseded while the update ran")
