@@ -4,7 +4,8 @@
 Runs ``benchmarks/bench_service.py`` (which itself enforces the hard
 acceptance bars: engine/async >= 3.5x vs the fused sequential baseline,
 update batch >= 3x — plain edge deltas AND the vertex-churn update mix —
-fused sortscan backend >= 1.2x end-to-end, exact
+fused sortscan backend >= 1.2x end-to-end, deferred-compaction stream
+ingest >= 0.8x immediate, exact
 partition parity) plus the kernel-level
 paired sweep metric from ``benchmarks/bench_kernels.py``, parses the
 CSV/marker output into a metrics snapshot, compares against the committed
@@ -50,6 +51,7 @@ SPEEDUPS = {
     "speedup_louvain_fused": "louvain_fused_speedup",
     "speedup_sweep_fused": "kernel_sweep_fused_speedup",
     "speedup_telemetry_on": "telemetry_on_speedup",
+    "speedup_stream_deferred": "stream_deferred_speedup",
 }
 # marker-line metrics recorded in the snapshot but NEVER gated: the
 # queue/engine/host phase shares from the instrumented bench run are a
@@ -67,6 +69,7 @@ INFORMATIONAL = {
 THROUGHPUTS = {
     "service_engine_batch32": "engine_graphs_per_s",
     "service_update_batch32": "update_batch_graphs_per_s",
+    "service_stream_ingest": "stream_events_per_s",
 }
 GATED = set(SPEEDUPS.values())
 
@@ -101,9 +104,10 @@ def parse_metrics(out: str) -> dict:
             parts = line.split(",")
             if len(parts) >= 3 and parts[0] in THROUGHPUTS:
                 derived = parts[2]
-                if derived.endswith(" graphs/s"):
-                    metrics[THROUGHPUTS[parts[0]]] = float(
-                        derived[:-len(" graphs/s")])
+                for unit in (" graphs/s", " events/s"):
+                    if derived.endswith(unit):
+                        metrics[THROUGHPUTS[parts[0]]] = float(
+                            derived[:-len(unit)])
     missing = ({*SPEEDUPS.values(), *THROUGHPUTS.values(),
                 *INFORMATIONAL.values()} - set(metrics))
     if missing:

@@ -6,7 +6,7 @@
 # Tiers:
 #   tier1  — the full pytest suite (ROADMAP's tier-1 verify).  Fast-ish,
 #            deterministic; runs on every push/PR (.github/workflows/ci.yml).
-#   smoke  — the four serve_communities end-to-end smokes: the sync pump
+#   smoke  — the five serve_communities end-to-end smokes: the sync pump
 #            driver, the async multi-tenant driver, the fully-dynamic
 #            churn driver (edge deletions AND vertex additions/removals
 #            through the batched warm path, with the vertex round-trip /
@@ -14,7 +14,10 @@
 #            (telemetry attached; scrapes the live Prometheus exporter
 #            mid-run and asserts the body parses with per-tenant served
 #            counters, per-phase latency histograms and compile hit/miss
-#            counters).  Also in the GitHub workflow.
+#            counters), and the temporal-tracking stream driver (planted
+#            merge/split/death/birth lifecycle script + removal-heavy
+#            event stream with deferred compaction through the windowed
+#            snapshot path).  Also in the GitHub workflow.
 #   bench  — acceptance benchmarks + regression check: scripts/check_bench.py
 #            runs benchmarks/bench_service.py + bench_kernels.py, enforces
 #            the speedup bars, writes benchmarks/BENCH_service.json and
@@ -45,6 +48,8 @@ run_smoke() {
   python -m repro.launch.serve_communities --churn --smoke
   echo "== replay (open-loop load + live exporter scrape) smoke =="
   python -m repro.launch.serve_communities --replay --smoke
+  echo "== stream (temporal tracking + deferred compaction) smoke =="
+  python -m repro.launch.serve_communities --stream --smoke
 }
 
 run_bench() {

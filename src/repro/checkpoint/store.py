@@ -104,6 +104,38 @@ def restore_checkpoint(ckpt_dir: str, tree_like, *, step: Optional[int] = None,
     return tree, step
 
 
+def load_checkpoint_arrays(ckpt_dir: str, *, step: Optional[int] = None):
+    """Load one checkpoint's raw leaves keyed by manifest path.
+
+    Structure-free twin of :func:`restore_checkpoint` for callers that
+    rebuild rich host objects from the arrays (e.g. the timeline-service
+    checkpoint, :mod:`repro.timeline.checkpoint`) instead of filling a
+    ``tree_like``.  Dict-key path segments are normalized back to the
+    plain key (``['x']`` -> ``x``), so a checkpoint saved from a flat
+    ``{name: array}`` tree round-trips to the same names.
+
+    Returns ``(arrays, extra, step)`` — ``arrays`` a dict path->ndarray,
+    ``extra`` the manifest's extra dict — or ``(None, None, None)`` when
+    no checkpoint exists.
+    """
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        return None, None, None
+    d = os.path.join(ckpt_dir, f"step-{step:010d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(d, "arrays.npz"))
+
+    def norm(path: str) -> str:
+        return "/".join(
+            s[2:-2] if s.startswith("['") and s.endswith("']") else s
+            for s in path.split("/"))
+
+    arrays = {norm(p): data[f"leaf_{i}"]
+              for i, p in enumerate(manifest["paths"])}
+    return arrays, manifest.get("extra", {}), step
+
+
 class CheckpointManager:
     """Keep-last-k manager with optional async writes and NaN rollback."""
 

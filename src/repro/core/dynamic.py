@@ -374,6 +374,99 @@ def apply_vertex_updates(g: Graph, C_prev, *, add: int = 0, remove=(),
     return g2, C2, t_new, info
 
 
+def tombstone_vertices(g: Graph, C_prev, remove, *, touched=None):
+    """Deferred-compaction removal: detach ids WITHOUT the remap.
+
+    The compaction of :func:`apply_vertex_updates` re-sorts the whole
+    COO per removal batch; under removal-heavy streams the service can
+    instead *tombstone* — delete the removed ids' incident edges (slots
+    return to the padding pool) and leave the ids in place as edgeless
+    own-label singletons — and pay one compaction for a whole window of
+    removals later (``ResultStore(compact_window=...)``).  Surviving
+    internal ids do NOT shift; ``n_nodes`` is unchanged; each tombstone
+    still counts as a (degenerate, connected) singleton community until
+    the flush compacts it away.
+
+    ``C_prev`` label hygiene mirrors :func:`apply_vertex_updates`:
+    surviving communities are re-labeled by their min *surviving* member
+    id, and each removed id becomes its own-id singleton — so a removed
+    label-carrier cannot collide with the community it used to name.
+    Tombstoned ids from earlier batches keep their own-id labels
+    (they're singletons, so the min-member rule is a fixpoint for them).
+
+    Returns ``(g_new, C_new, touched_new, info)`` with the same touched
+    rules (a)/(b) as :func:`apply_vertex_updates` — deleted-edge
+    endpoints and the removed ids' whole former communities — and
+    ``info['perm'] = None`` (no remap happened; ``info['deferred']``
+    carries the tombstoned ids).  Raises ``ValueError`` for out-of-range
+    or duplicate ids (re-removing an already-tombstoned id is the
+    *caller's* bookkeeping to reject — this function cannot tell a
+    tombstone from a live isolated vertex).
+    """
+    n = int(g.n_nodes)
+    nv = g.nv
+    rem = np.asarray(remove, np.int64).ravel()
+    if not rem.size:
+        t = (np.zeros(nv, bool) if touched is None
+             else np.array(touched, dtype=bool, copy=True))
+        C = None if C_prev is None else np.asarray(C_prev, np.int32).copy()
+        return g, C, t, dict(n_deleted=0, n_added=0, n_removed=0,
+                             perm=None, deferred=rem)
+    if int(rem.min()) < 0 or int(rem.max()) >= n:
+        raise ValueError(
+            f"remove ids must be in [0, n_nodes={n}); got range "
+            f"[{int(rem.min())}, {int(rem.max())}]")
+    if np.unique(rem).size != rem.size:
+        raise ValueError("duplicate ids in remove")
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    w = np.asarray(g.w)
+    dead = np.zeros(nv, bool)
+    dead[rem] = True
+    live = src < g.n_cap
+    inc = live & (dead[src] | dead[dst])
+    n_deleted = int(inc.sum())
+    t = (np.zeros(nv, bool) if touched is None
+         else np.array(touched, dtype=bool, copy=True))
+    # (a) surviving endpoints of deleted incident edges
+    t[src[inc]] = True
+    t[dst[inc]] = True
+    C = None if C_prev is None else np.asarray(C_prev)
+    if C is not None and n:
+        # (b) the removed ids' whole former communities
+        lab_dead = np.zeros(nv, bool)
+        lab_dead[C[rem]] = True
+        t[:n] |= lab_dead[C[:n]]
+    t[rem] = False       # a tombstone has no neighbors to re-evaluate
+    keep = live & ~inc
+    pad = src.size - int(keep.sum())
+    ghost = np.int32(g.n_cap)
+    g2 = Graph(
+        src=np.concatenate([src[keep],
+                            np.full(pad, ghost, np.int32)]).astype(np.int32),
+        dst=np.concatenate([dst[keep],
+                            np.full(pad, ghost, np.int32)]).astype(np.int32),
+        w=np.concatenate([w[keep], np.zeros(pad, np.float32)]).astype(
+            np.float32),
+        n_nodes=g.n_nodes, n_cap=g.n_cap, m_cap=g.m_cap,
+    )
+    if C is None:
+        C2 = None
+    else:
+        # min-*surviving*-member representative per surviving community;
+        # removed ids become own-id singletons (see docstring)
+        alive_ids = np.flatnonzero(~dead[:n])
+        lab = C[alive_ids]
+        rep = np.full(nv, nv, np.int64)
+        np.minimum.at(rep, lab, alive_ids)
+        C2 = np.full(nv, nv - 1, np.int32)
+        C2[alive_ids] = rep[lab]
+        C2[rem] = rem
+    info = dict(n_deleted=n_deleted, n_added=0, n_removed=int(rem.size),
+                perm=None, deferred=rem)
+    return g2, C2, t, info
+
+
 def rebuild_with_vertex_ops(g: Graph, *, add: int = 0, remove=()) -> Graph:
     """Capacity-free vertex rewrite for the re-bucketing fallback: the
     same remove-compact-then-add semantics as :func:`apply_vertex_updates`

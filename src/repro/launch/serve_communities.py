@@ -36,10 +36,28 @@ landing in three buckets, plus warm edge updates):
   a vertex add-then-remove round trip restoring the COO bit-for-bit with
   the freed vertex slots reusable (capacity reclaim).
 
+* ``--stream``: the temporal-tracking driver — a streaming-graph
+  workload against the async service with
+  ``ServiceConfig(timeline_enabled=True)``.  Phase 1 replays the
+  *planted* lifecycle script (:func:`repro.data.streams.
+  planted_timeline_script`) window by window and checks the emitted
+  lifecycle events against ground truth; phase 2 ingests a
+  removal-heavy synthetic event stream with deferred compaction
+  (``--compact-window``) and reports events/s through the windowed
+  path.  ``--stream --smoke`` asserts the acceptance contract: the
+  exact merge -> split -> death -> birth event sequence, correct
+  ``membership_at`` answers in external-id space across >= 3
+  vertex-compaction rounds, zero internally-disconnected communities
+  at every snapshot, and a live exporter scrape carrying the stream
+  counters (``repro_stream_events_ingested_total``,
+  ``repro_timeline_snapshots_total``, ``repro_timeline_events_total``,
+  ``repro_stream_lag_seconds_bucket``).
+
   PYTHONPATH=src python -m repro.launch.serve_communities --smoke
   PYTHONPATH=src python -m repro.launch.serve_communities --async --smoke
   PYTHONPATH=src python -m repro.launch.serve_communities --churn --smoke
   PYTHONPATH=src python -m repro.launch.serve_communities --replay --smoke
+  PYTHONPATH=src python -m repro.launch.serve_communities --stream --smoke
   PYTHONPATH=src python -m repro.launch.serve_communities \
       --async --tenants 4 --requests 200 --max-pending 12 --batch 16
 """
@@ -567,6 +585,156 @@ async def main_replay_async(args):
 
 
 # ---------------------------------------------------------------------------
+# stream driver: temporal tracking over a streaming graph (async service)
+# ---------------------------------------------------------------------------
+
+async def _stream_planted(svc, *, smoke: bool):
+    """Replay the planted lifecycle script window by window; returns the
+    per-window lifecycle kinds actually observed."""
+    from repro.data.streams import planted_timeline_script
+
+    g0, windows, expected = planted_timeline_script()
+    seen: list = []
+    svc.subscribe_lifecycle(lambda evs: seen.extend(evs))
+    # stamp the seed detect at t=0 so window snapshots start at t=1
+    svc.frontend.set_snapshot_time("planted", 0.0)
+    await svc.submit_detect("planted", g0)
+    await svc.drain()
+    for i, evs in enumerate(windows):
+        fut = await svc.ingest_window("planted", evs, t=float(i + 1))
+        await fut
+    await svc.drain()
+
+    snaps = svc.timeline_snapshots("planted")
+    got = [sorted(e.kind for e in svc.lifecycle_events("planted")
+                  if e.t == s.t and e.kind != "continuation")
+           for s in snaps if s.t > 0]
+    exp = [sorted(k) for k in expected]
+    print(f"planted: {len(snaps)} snapshots, lifecycle per window "
+          f"{[k or ['-'] for k in got]}")
+    if smoke:
+        assert got == exp, f"lifecycle mismatch: got {got}, want {exp}"
+        assert all(s.n_disconnected == 0 for s in snaps), \
+            [(s.t, s.n_disconnected) for s in snaps]
+        m = svc.membership_at
+        # mover (3) absorbed into target (0) at t=2, separated again at
+        # t=3; clique 2 (vertex 2) dies at t=4; the t=5 newcomer exists
+        assert m("planted", 3, 2.0) == m("planted", 0, 2.0)
+        assert m("planted", 3, 1.5) != m("planted", 0, 1.5)
+        assert m("planted", 3, 3.0) != m("planted", 0, 3.0)
+        assert m("planted", 2, 3.0) is not None
+        assert m("planted", 2, 4.0) is None
+        assert m("planted", int(g0.n_nodes), None) is not None
+        assert len(seen) >= 4, f"subscriber saw {len(seen)} events"
+    return got
+
+
+async def _stream_churn(svc, args, *, smoke: bool):
+    """Removal-heavy event stream under deferred compaction; returns the
+    events/s report."""
+    from repro.data.streams import graph_event_stream
+    from repro.graph import ring_of_cliques
+
+    g0 = ring_of_cliques(n_cliques=6, clique_size=6)
+    svc.frontend.set_snapshot_time("churn", 0.0)
+    await svc.submit_detect("churn", g0)
+    await svc.drain()
+    horizon = 8.0 if smoke else args.duration_s
+    window = 1.0
+    stream = graph_event_stream(
+        g0, rate=args.rate, seed=args.seed + 7,
+        mix=(("edge_add", 0.3), ("edge_del", 0.1), ("vertex_add", 0.2),
+             ("vertex_del", 0.4)),
+        min_vertices=12)
+    flushes0 = svc.store.n_compaction_flushes
+    n_events = 0
+    end = window
+    buf: list = []
+    t0 = time.perf_counter()
+    for e in stream:
+        if e.t >= horizon:
+            break
+        while e.t >= end:                  # commit every elapsed window
+            fut = await svc.ingest_window("churn", buf, t=end)
+            await fut
+            buf, end = [], end + window
+        buf.append(e)
+        n_events += 1
+    fut = await svc.ingest_window("churn", buf, t=end)
+    await fut
+    await svc.drain()
+    dt = time.perf_counter() - t0
+
+    snaps = svc.timeline_snapshots("churn")
+    flushes = svc.store.n_compaction_flushes - flushes0
+    report = dict(
+        n_events=n_events, n_windows=len(snaps) - 1,
+        events_per_s=n_events / dt if dt > 0 else 0.0,
+        n_compaction_flushes=flushes,
+        n_deferred_removed=int(svc.store.n_deferred_removed))
+    print(f"churn stream: {n_events} events in {len(snaps) - 1} windows, "
+          f"{report['events_per_s']:,.0f} events/s end-to-end, "
+          f"{flushes} compaction flushes "
+          f"({report['n_deferred_removed']} removals deferred)")
+    if smoke:
+        assert all(s.n_disconnected == 0 for s in snaps), \
+            [(s.t, s.n_disconnected) for s in snaps]
+        if svc.config.compact_window > 0:
+            assert flushes >= 3, \
+                f"want >= 3 compaction rounds, got {flushes}"
+        # external-id contract: the latest snapshot answers membership_at
+        # for every live external id, and retired ids answer None
+        final = snaps[-1]
+        for x, c in zip(final.ext.tolist(), final.cid.tolist()):
+            assert svc.membership_at("churn", x) == c, (x, c)
+        retired = ({int(x) for x in snaps[0].ext.tolist()}
+                   - {int(x) for x in final.ext.tolist()})
+        assert retired, "removal-heavy stream retired no vertices"
+        for x in sorted(retired)[:8]:
+            assert svc.membership_at("churn", x) is None, x
+    return report
+
+
+async def main_stream_async(args):
+    import urllib.request
+
+    from repro.telemetry.prometheus import metric_names, parse_prometheus
+
+    config = ServiceConfig(
+        louvain=LouvainConfig(), batch_size=4,
+        max_delay_s=args.max_delay_ms / 1e3, sub_batch=args.sub_batch,
+        update_batch_size=1,             # one window -> one snapshot
+        timeline_enabled=True, compact_window=args.compact_window,
+        telemetry_enabled=True, exporter_port=0,
+    )
+    async with AsyncCommunityService(config) as svc:
+        got = await _stream_planted(svc, smoke=args.smoke)
+        report = await _stream_churn(svc, args, smoke=args.smoke)
+        # scrape the LIVE endpoint before teardown, like --replay --smoke
+        url = svc.frontend.exporter.url
+        body = urllib.request.urlopen(url, timeout=10).read().decode()
+    parsed = parse_prometheus(body)
+    names = metric_names(parsed)
+    print(f"scraped {url}: {len(parsed)} samples, "
+          f"{len(names)} metric families")
+
+    if args.smoke:
+        for want in ("repro_stream_events_ingested_total",
+                     "repro_timeline_snapshots_total",
+                     "repro_timeline_events_total",
+                     "repro_stream_lag_seconds_bucket"):
+            assert want in names, f"{want} missing from scrape"
+        kinds = {dict(lk).get("kind") for name, lk in parsed
+                 if name == "repro_timeline_events_total"}
+        for want in ("merge", "split", "death", "birth"):
+            assert want in kinds, f"no {want} events counted: {kinds}"
+        print(f"STREAM SMOKE OK ({sum(len(k) for k in got)} planted "
+              f"lifecycle events, {report['n_events']} churn events, "
+              f"{report['n_compaction_flushes']} compaction flushes)")
+    return report
+
+
+# ---------------------------------------------------------------------------
 
 def main_churn(args):
     n_graphs = 9 if args.smoke else max(9, args.requests // 4)
@@ -623,6 +791,13 @@ def main(argv=None):
     ap.add_argument("--replay", action="store_true",
                     help="open-loop load-replay harness with telemetry + "
                          "live exporter scrape")
+    ap.add_argument("--stream", action="store_true",
+                    help="temporal-tracking driver: planted lifecycle "
+                         "script + removal-heavy event stream with "
+                         "deferred compaction (async service)")
+    ap.add_argument("--compact-window", type=int, default=4,
+                    help="deferred-compaction threshold for --stream "
+                         "(0 = compact immediately)")
     ap.add_argument("--rate", type=float, default=60.0,
                     help="offered arrival rate for --replay (req/s)")
     ap.add_argument("--duration-s", type=float, default=3.0,
@@ -660,6 +835,11 @@ def main(argv=None):
             args.rate = 50.0
             args.duration_s = 1.5
         return asyncio.run(main_replay_async(args))
+
+    if args.stream:
+        if args.smoke:
+            args.rate = 40.0      # matched to the >= 3-flush assertion
+        return asyncio.run(main_stream_async(args))
 
     if args.async_:
         if args.smoke:

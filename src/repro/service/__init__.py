@@ -36,6 +36,14 @@ stack:
   arrival rate; rate sweeps locate the saturation knee and the telemetry
   layer yields the per-phase latency breakdown.
 
+Temporal tracking (PR 7, :mod:`repro.timeline`): with
+``ServiceConfig(timeline_enabled=True)`` every store commit becomes a
+snapshot with persistent community ids and lifecycle events
+(birth/death/merge/split/continuation); ``ingest_window`` folds
+timestamped external-id graph-event windows into warm updates, and
+``compact_window > 0`` defers vertex-removal compaction so removal-heavy
+streams pay the id remap once per window.
+
 Observability: every request carries a per-phase trace
 (``DetectionFuture.trace``), and ``ServiceConfig(telemetry_enabled=...,
 exporter_port=...)`` attaches aggregation sinks plus a Prometheus-text
@@ -62,6 +70,9 @@ from repro.service.service import CommunityService
 from repro.service.store import (
     CapacityExceeded, ResultStore, StoreEntry, UpdatePlan,
 )
+from repro.timeline import (
+    LifecycleEvent, TimelineManager, WindowedIngest,
+)
 
 __all__ = [
     "AdmissionController",
@@ -77,6 +88,7 @@ __all__ = [
     "DetectionFuture",
     "DispatchInfo",
     "GraphUpdate",
+    "LifecycleEvent",
     "PendingRequest",
     "QueueFull",
     "ReplayConfig",
@@ -86,8 +98,10 @@ __all__ = [
     "ServiceMetrics",
     "StoreEntry",
     "TenantMetrics",
+    "TimelineManager",
     "UpdatePlan",
     "UpdateResult",
+    "WindowedIngest",
     "choose_bucket",
     "choose_scan",
     "run_replay",

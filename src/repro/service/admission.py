@@ -102,6 +102,31 @@ class ServiceConfig:
       profile_dir: wrap every engine dispatch in
                    ``jax.profiler.trace(profile_dir)`` for on-device deep
                    dives (expensive; None = off).
+
+    Temporal tracking (:mod:`repro.timeline`):
+      timeline_enabled: attach a :class:`repro.timeline.tracker.
+                   TimelineManager` to the store's commit hook — every
+                   committed partition becomes a snapshot with persistent
+                   community ids + lifecycle events, queryable via
+                   ``membership_at``/``community_timeline``/
+                   ``lifecycle_events`` and fed by ``ingest_window``.
+      timeline_jaccard_min: weighted-Jaccard floor for the
+                   snapshot-to-snapshot matcher (below it communities
+                   never relate).
+      timeline_weight_by_degree: weight matcher member sets by weighted
+                   degree instead of uniformly.
+      timeline_max_snapshots / timeline_max_events / timeline_max_rows /
+      timeline_max_communities: bounded-memory timeline retention
+                   (per-graph snapshot deque, global lifecycle log,
+                   per-community row deque, tracked-community cap).
+      compact_window: > 0 defers vertex-removal compaction in the store —
+                   removals tombstone immediately (results stay correct)
+                   and the O(m log m) remap is paid once per
+                   ``compact_window`` removals (see
+                   :class:`repro.service.store.ResultStore`).  NOTE: with
+                   deferral on, a capacity overflow is surfaced to the
+                   caller instead of triggering the re-bucketing rebuild.
+                   0 = immediate compaction (PR 5 semantics).
     """
 
     louvain: LouvainConfig = dataclasses.field(default_factory=LouvainConfig)
@@ -124,6 +149,14 @@ class ServiceConfig:
     telemetry_jsonl: Optional[str] = None
     exporter_port: Optional[int] = None
     profile_dir: Optional[str] = None
+    timeline_enabled: bool = False
+    timeline_jaccard_min: float = 0.1
+    timeline_weight_by_degree: bool = False
+    timeline_max_snapshots: int = 64
+    timeline_max_events: int = 4096
+    timeline_max_rows: int = 256
+    timeline_max_communities: int = 4096
+    compact_window: int = 0
 
     def __post_init__(self):
         if self.batch_size < 1:
@@ -141,6 +174,17 @@ class ServiceConfig:
         if self.exporter_port is not None and not self.telemetry_enabled:
             raise ValueError("exporter_port requires telemetry_enabled "
                              "(the exporter scrapes the in-memory sink)")
+        if self.compact_window < 0:
+            raise ValueError(
+                f"compact_window must be >= 0, got {self.compact_window}")
+        if not (0.0 < self.timeline_jaccard_min <= 1.0):
+            raise ValueError("timeline_jaccard_min must be in (0, 1], got "
+                             f"{self.timeline_jaccard_min}")
+        for knob in ("timeline_max_snapshots", "timeline_max_events",
+                     "timeline_max_rows", "timeline_max_communities"):
+            if getattr(self, knob) < 1:
+                raise ValueError(
+                    f"{knob} must be >= 1, got {getattr(self, knob)}")
         object.__setattr__(self, "buckets", tuple(sorted(self.buckets)))
 
 

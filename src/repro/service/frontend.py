@@ -65,6 +65,9 @@ from repro.service.store import CapacityExceeded, ResultStore
 from repro.telemetry.prometheus import MetricsExporter
 from repro.telemetry.sinks import InMemorySink, JsonlSink, Telemetry
 from repro.telemetry.spans import RequestTrace
+from repro.timeline.tracker import (
+    TimelineConfig, TimelineManager, translate_window,
+)
 
 
 class DetectionFuture:
@@ -176,12 +179,29 @@ class ServiceFrontend:
             c.buckets, batch_size=c.batch_size, max_delay_s=c.max_delay_s,
             max_pending_per_tenant=c.max_pending_per_tenant,
             weights=dict(c.tenant_weights), clock=self.clock)
+        # temporal tracking: the TimelineManager observes every store
+        # commit (fresh detects, warm updates, compaction flushes) through
+        # the on_commit hook — one snapshot per committed partition
+        self.timelines: Optional[TimelineManager] = None
+        if c.timeline_enabled:
+            self.timelines = TimelineManager(
+                TimelineConfig(
+                    jaccard_min=c.timeline_jaccard_min,
+                    weight_by_degree=c.timeline_weight_by_degree,
+                    max_snapshots=c.timeline_max_snapshots,
+                    max_events=c.timeline_max_events,
+                    max_rows=c.timeline_max_rows,
+                    max_communities=c.timeline_max_communities),
+                telemetry=self.telemetry)
         self.store = ResultStore(
             dense_max_nv=c.dense_max_nv, dense_small_nv=c.dense_small_nv,
             dense_min_density=c.dense_min_density,
             max_entries=c.store_max_entries, ttl_s=c.store_ttl_s,
             clock=self.clock, seg_impl=c.seg_impl,
-            seg_block_m=c.seg_block_m or 0)
+            seg_block_m=c.seg_block_m or 0,
+            compact_window=c.compact_window,
+            on_commit=(self._on_store_commit
+                       if self.timelines is not None else None))
         self.metrics = ServiceMetrics(telemetry=self.telemetry)
         # monotonic request ids: never reuses after a dispatch (the old
         # n_detect + pending() scheme collided once requests were served)
@@ -281,12 +301,25 @@ class ServiceFrontend:
         try:
             new = self.store.apply_update(graph_id, upd, trace=trace)
         except CapacityExceeded:
+            # Deferred compaction keeps the entry on a capacity overflow
+            # (the store did NOT invalidate): a re-bucketing rebuild would
+            # replay tombstone-space ids against a compacted graph, so the
+            # overflow is surfaced instead — flush_compaction + retry, or
+            # grow the bucket ladder.
+            if self.config.compact_window:
+                raise
             # rebuild the updated graph at full precision and re-detect.
             # The old entry is already invalidated, so this continuation
             # is exempt from the tenant queue bound: a QueueFull here
             # would lose the graph's result with nothing queued to
             # replace it.
             g = _graph_with_updates(entry.graph, [upd])
+            if self.timelines is not None:
+                # let the timeline track external ids THROUGH the rebuild:
+                # the fresh detect's commit carries no UpdatePlan, so the
+                # composed old->new map is registered out of band
+                self.timelines.register_rebucket(
+                    graph_id, [upd], int(entry.graph.n_nodes))
             self.metrics.n_rebucketed += 1
             return self.submit_detect(graph_id, g, tenant=tenant,
                                       exempt_bound=True)
@@ -303,6 +336,115 @@ class ServiceFrontend:
         self.telemetry.trace(trace)
         fut.set_result(new)
         return fut
+
+    # -- temporal tracking -------------------------------------------------
+    def _on_store_commit(self, graph_id: str, entry, plan) -> None:
+        """ResultStore commit hook (fires outside the store lock)."""
+        self.timelines.observe_commit(graph_id, entry, plan)
+
+    def _require_timelines(self) -> TimelineManager:
+        if self.timelines is None:
+            raise RuntimeError(
+                "temporal tracking is disabled; construct the service with "
+                "ServiceConfig(timeline_enabled=True)")
+        return self.timelines
+
+    def ingest_window(self, graph_id: str, events, *, t: Optional[float] =
+                      None, tenant: str = DEFAULT_TENANT,
+                      wait: bool = True) -> DetectionFuture:
+        """Fold one window of external-id graph events into ONE warm
+        update -> ONE snapshot.
+
+        ``events``: :class:`repro.data.streams.GraphEvent` records (any
+        iterable; set-semantics vertex folding, net-delta edge folding —
+        see :func:`repro.timeline.translate_window`).  ``t`` stamps the
+        snapshot with the window-end event time (wall clock otherwise).
+        Requires ``timeline_enabled`` and ``update_batch_size == 1`` (a
+        wider update batch would fold several windows into one snapshot).
+
+        Returns the update's future.  When the window overflows into a
+        re-bucketed detect (``compact_window == 0`` only), ``wait=True``
+        pumps the dispatcher until it resolves — callers that run their
+        own dispatcher (the async service) pass ``wait=False`` and await
+        the future instead.
+        """
+        tl = self._require_timelines()
+        if self.config.update_batch_size != 1:
+            raise RuntimeError(
+                "ingest_window requires update_batch_size == 1 so each "
+                "window commits as its own snapshot; got "
+                f"{self.config.update_batch_size}")
+        t0 = self.clock()
+        entry = self.store.get(graph_id)
+        if entry is None:
+            raise KeyError(f"no stored partition for {graph_id!r} — "
+                           "submit_detect the base graph first")
+        idmap = tl.ensure_track(graph_id, int(entry.graph.n_nodes))
+        upd, stats = translate_window(
+            events, idmap=idmap, entry=entry,
+            compact_window=self.config.compact_window)
+        if self.telemetry.enabled:
+            self.telemetry.counter("stream_events_ingested",
+                                   stats["n_events"])
+            dropped = stats["dropped_edges"] + stats["dropped_vertices"]
+            if dropped:
+                self.telemetry.counter("stream_events_dropped", dropped)
+        tl.set_time(graph_id, t)
+        if stats["adds_ext"]:
+            tl.register_pending_adds(graph_id, stats["adds_ext"])
+        fut = self.submit_update(graph_id, upd, tenant=tenant)
+        # stream lag: window close -> snapshot committed (both clocks
+        # ours, so the histogram is monotone even under event-time t)
+        fut.add_done_callback(
+            lambda _f: self.telemetry.observe(
+                "stream_lag_seconds", max(self.clock() - t0, 0.0)))
+        if wait and fut.kind == "detect":
+            while not fut.done():
+                if self.dispatch(force=True) == 0 and not fut.done():
+                    time.sleep(1e-3)    # another dispatcher owns the batch
+        return fut
+
+    def membership_at(self, graph_id: str, external: int,
+                      t: Optional[float] = None) -> Optional[int]:
+        """Persistent community id of an external vertex at snapshot time
+        ``t`` (latest when None); None if unknown/retired at ``t``."""
+        return self._require_timelines().membership_at(graph_id, external, t)
+
+    def community_timeline(self, community_id: int):
+        """The :class:`repro.timeline.store.CommunityTimeline` row for a
+        persistent community id (None when unknown/truncated)."""
+        return self._require_timelines().timeline(community_id)
+
+    def lifecycle_events(self, graph_id: Optional[str] = None, *,
+                         kind: Optional[str] = None):
+        return self._require_timelines().lifecycle_events(graph_id,
+                                                          kind=kind)
+
+    def timeline_snapshots(self, graph_id: str):
+        return self._require_timelines().snapshots(graph_id)
+
+    def timeline_communities(self, graph_id: Optional[str] = None, *,
+                             alive_only: bool = False):
+        return self._require_timelines().communities(
+            graph_id, alive_only=alive_only)
+
+    def external_ids(self, graph_id: str):
+        return self._require_timelines().external_ids(graph_id)
+
+    def subscribe_lifecycle(self, fn):
+        """Register ``fn(events: List[LifecycleEvent])``, called after
+        each snapshot that produced lifecycle events (compute thread;
+        exceptions are swallowed + counted)."""
+        return self._require_timelines().subscribe(fn)
+
+    def unsubscribe_lifecycle(self, fn) -> bool:
+        return self._require_timelines().unsubscribe(fn)
+
+    def set_snapshot_time(self, graph_id: str, t: Optional[float]):
+        """Stamp the next commit's snapshot with event-time ``t`` (for
+        callers driving submit_update/submit_detect directly instead of
+        :meth:`ingest_window`)."""
+        self._require_timelines().set_time(graph_id, t)
 
     # -- dispatch ---------------------------------------------------------
     def collect(self, *, force: bool = False) -> List[Batch]:
@@ -430,15 +572,25 @@ class ServiceFrontend:
                     if r.future.trace is not None:
                         r.future.trace.mark("repad", t_p0, t_p1)
                 plan_reqs.append(rs)
-            except CapacityExceeded:
+            except CapacityExceeded as ce:
                 # same continuation as the immediate path: re-detect the
                 # merged graph, exempt from the tenant bound, and chain
                 # the queued futures to the re-bucketed detect.  The
                 # rebuild itself can fail (e.g. a later batch references
                 # ids past the rebuilt vertex set) — that must fail these
-                # futures, not the whole dispatch.
+                # futures, not the whole dispatch.  Under deferred
+                # compaction there is no rebuild (the entry survived; see
+                # submit_update): the overflow fails these futures.
+                if self.config.compact_window:
+                    for r in rs:
+                        self.metrics.fail(r.tenant)
+                        r.future.set_exception(ce)
+                    continue
                 try:
                     g = _graph_with_updates(entry.graph, batches)
+                    if self.timelines is not None:
+                        self.timelines.register_rebucket(
+                            gid, batches, int(entry.graph.n_nodes))
                     self.metrics.n_rebucketed += 1
                     fut2 = self.submit_detect(gid, g, tenant=rs[0].tenant,
                                               exempt_bound=True)
@@ -613,6 +765,32 @@ class AsyncCommunityService:
     def pending(self, tenant: Optional[str] = None) -> int:
         return self.frontend.pending(tenant)
 
+    # temporal-tracking queries are host-side dict/array lookups under the
+    # manager lock — cheap enough to run on the event loop directly
+    @property
+    def timelines(self) -> Optional[TimelineManager]:
+        return self.frontend.timelines
+
+    def membership_at(self, graph_id: str, external: int,
+                      t: Optional[float] = None) -> Optional[int]:
+        return self.frontend.membership_at(graph_id, external, t)
+
+    def community_timeline(self, community_id: int):
+        return self.frontend.community_timeline(community_id)
+
+    def lifecycle_events(self, graph_id: Optional[str] = None, *,
+                         kind: Optional[str] = None):
+        return self.frontend.lifecycle_events(graph_id, kind=kind)
+
+    def timeline_snapshots(self, graph_id: str):
+        return self.frontend.timeline_snapshots(graph_id)
+
+    def subscribe_lifecycle(self, fn):
+        return self.frontend.subscribe_lifecycle(fn)
+
+    def unsubscribe_lifecycle(self, fn) -> bool:
+        return self.frontend.unsubscribe_lifecycle(fn)
+
     # -- lifecycle ---------------------------------------------------------
     async def start(self) -> "AsyncCommunityService":
         if self._task is None:
@@ -710,6 +888,22 @@ class AsyncCommunityService:
             partial(self.frontend.submit_update, graph_id, updates,
                     tenant=tenant))
         self._work.set()     # a rebucketed update enqueued a detect
+        return fut
+
+    async def ingest_window(self, graph_id: str, events, *,
+                            t: Optional[float] = None,
+                            tenant: str = DEFAULT_TENANT) -> DetectionFuture:
+        """Async :meth:`ServiceFrontend.ingest_window`: the translate +
+        warm compute runs on the executor; a re-bucketed window resolves
+        through this service's own dispatcher (``wait=False`` — pumping
+        on the compute thread would deadlock the single-worker
+        executor)."""
+        loop = asyncio.get_running_loop()
+        fut = await loop.run_in_executor(
+            self._compute,
+            partial(self.frontend.ingest_window, graph_id, list(events),
+                    t=t, tenant=tenant, wait=False))
+        self._work.set()
         return fut
 
     async def drain(self) -> int:

@@ -133,3 +133,37 @@ class CommunityService:
 
     def pending(self, tenant: Optional[str] = None) -> int:
         return self.frontend.pending(tenant)
+
+    # -- temporal tracking (requires ServiceConfig(timeline_enabled=True))
+    @property
+    def timelines(self):
+        return self.frontend.timelines
+
+    def ingest_window(self, graph_id: str, events, *,
+                      t: Optional[float] = None,
+                      tenant: str = DEFAULT_TENANT) -> DetectionFuture:
+        """Fold one window of external-id graph events into one snapshot
+        (see :meth:`repro.service.frontend.ServiceFrontend.ingest_window`;
+        the sync adapter pumps a re-bucketed window itself)."""
+        return self.frontend.ingest_window(graph_id, events, t=t,
+                                           tenant=tenant, wait=True)
+
+    def membership_at(self, graph_id: str, external: int,
+                      t: Optional[float] = None) -> Optional[int]:
+        return self.frontend.membership_at(graph_id, external, t)
+
+    def community_timeline(self, community_id: int):
+        return self.frontend.community_timeline(community_id)
+
+    def lifecycle_events(self, graph_id: Optional[str] = None, *,
+                         kind: Optional[str] = None):
+        return self.frontend.lifecycle_events(graph_id, kind=kind)
+
+    def timeline_snapshots(self, graph_id: str):
+        return self.frontend.timeline_snapshots(graph_id)
+
+    def subscribe_lifecycle(self, fn):
+        return self.frontend.subscribe_lifecycle(fn)
+
+    def unsubscribe_lifecycle(self, fn) -> bool:
+        return self.frontend.unsubscribe_lifecycle(fn)

@@ -36,6 +36,20 @@ batched path runs the same compute vmapped
 (:meth:`repro.service.engine.BatchedLouvainEngine.update_batch`) between
 the same prepare/commit, so both produce identical partitions.
 
+Deferred compaction (PR 7): ``compact_window > 0`` turns vertex removals
+into *tombstones* — incident edges are deleted immediately (results are
+correct right away: a tombstone is an edgeless own-label singleton that
+cannot affect modularity or connectivity) but the O(m log m) remap/COO
+rewrite is paid once per window, at fold start, when the pending set
+reaches ``compact_window`` or additions would overflow ``n_cap`` (or
+explicitly via :meth:`ResultStore.flush_compaction`).  Until the flush,
+``n_communities`` is inflated by one per tombstone
+(:attr:`StoreEntry.n_live_communities` subtracts them) and internal ids
+do NOT shift; the flush publishes the composed remap through the commit
+hook so :class:`repro.timeline.tracker.TimelineManager` keeps external
+ids stable.  ``compact_window == 0`` (default) keeps the exact
+immediate-compaction semantics of PR 5.
+
 Eviction (the store used to be unbounded — a ROADMAP item):
 
 * ``max_entries`` caps residency with LRU order — ``get``/``apply_update``
@@ -59,11 +73,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dynamic import (
-    CapacityError, GraphUpdate, as_update, prepare_graph_update,
-    warm_update,
+    CapacityError, GraphUpdate, apply_edge_updates, apply_vertex_updates,
+    as_update, check_vertex_ids, directed_deltas, gross_deleted,
+    prepare_graph_update, tombstone_vertices, touched_mask, warm_update,
 )
 from repro.graph.container import Graph
 from repro.service.buckets import Bucket, bucket_of, choose_scan
+
+
+def _empty_ids() -> np.ndarray:
+    return np.empty(0, np.int64)
 
 
 @dataclasses.dataclass
@@ -76,6 +95,15 @@ class StoreEntry:
     n_disconnected: int
     q: float
     t_stored: float = 0.0          # clock time of the last put (TTL basis)
+    # deferred-compaction tombstones: internal ids removed from the graph
+    # (edgeless own-label singletons) but not yet compacted away; sorted.
+    # Each inflates n_communities by one until the flush subtracts it.
+    deferred: np.ndarray = dataclasses.field(default_factory=_empty_ids)
+
+    @property
+    def n_live_communities(self) -> int:
+        """Community count net of deferred-tombstone singletons."""
+        return int(self.n_communities) - int(self.deferred.size)
 
 
 @dataclasses.dataclass
@@ -95,6 +123,18 @@ class UpdatePlan:
     # composed old->new vertex id map across the folded batches (None when
     # no batch carried vertex ops; -1 marks removed ids)
     id_map: Optional[np.ndarray] = None
+    # deferred-compaction bookkeeping: ids tombstoned by THIS plan (in the
+    # plan's post-flush id space), the tombstone set the committed entry
+    # will carry, and how many old tombstones the fold's flush compacted
+    deferred_removed: Optional[np.ndarray] = None
+    deferred_after: Optional[np.ndarray] = None
+    n_flushed: int = 0
+
+    def __post_init__(self):
+        if self.deferred_removed is None:
+            self.deferred_removed = _empty_ids()
+        if self.deferred_after is None:
+            self.deferred_after = _empty_ids()
 
 
 class CapacityExceeded(Exception):
@@ -108,9 +148,13 @@ class ResultStore:
                  dense_min_density: Optional[float] = None,
                  max_entries: Optional[int] = None,
                  ttl_s: Optional[float] = None, clock=None,
-                 seg_impl: str = "auto", seg_block_m: int = 0):
+                 seg_impl: str = "auto", seg_block_m: int = 0,
+                 compact_window: int = 0, on_commit=None):
         if max_entries is not None and max_entries < 1:
             raise ValueError(f"max_entries must be >= 1, got {max_entries}")
+        if compact_window < 0:
+            raise ValueError(
+                f"compact_window must be >= 0, got {compact_window}")
         self._entries: "OrderedDict[str, StoreEntry]" = OrderedDict()
         # versions survive invalidation AND eviction so they stay monotone
         # per graph id across rebucket/evict -> fresh detect -> put
@@ -129,6 +173,19 @@ class ResultStore:
         self.max_entries = max_entries
         self.ttl_s = ttl_s
         self.clock = clock or time.perf_counter
+        # deferred compaction: with compact_window > 0 vertex removals are
+        # tombstoned (no remap) and the compaction is paid once per window
+        # of removals — at fold start when the pending set reaches the
+        # window, when additions would overflow n_cap, or explicitly via
+        # flush_compaction().  0 = immediate semantics (the default).
+        self.compact_window = int(compact_window)
+        # commit hook: called as on_commit(graph_id, entry, plan) OUTSIDE
+        # the store lock after every put that publishes fresh results —
+        # plan is None for fresh detect puts, the UpdatePlan for warm
+        # commits, and a synthetic flush plan for flush_compaction().
+        # Exceptions are swallowed + counted (the store must not die for
+        # a subscriber).
+        self.on_commit = on_commit
         self.n_warm_updates = 0
         self.n_invalidations = 0
         self.n_evicted = 0
@@ -139,10 +196,26 @@ class ResultStore:
         # commits dropped because the entry moved on (evicted/invalidated/
         # re-detected) between prepare_update and commit_update
         self.n_stale_commits = 0
+        self.n_deferred_removed = 0   # vertices tombstoned awaiting flush
+        self.n_compaction_flushes = 0
+        self.n_commit_hook_errors = 0
+        self.last_hook_error: Optional[str] = None
+
+    def _fire(self, graph_id: str, entry: StoreEntry,
+              plan: Optional["UpdatePlan"]) -> None:
+        """Run the commit hook outside the lock; never let it raise."""
+        if self.on_commit is None:
+            return
+        try:
+            self.on_commit(graph_id, entry, plan)
+        except Exception as e:          # noqa: BLE001 — subscriber fault
+            self.n_commit_hook_errors += 1
+            self.last_hook_error = repr(e)
 
     # -- basic CRUD -------------------------------------------------------
     def put(self, graph_id: str, graph: Graph, C: np.ndarray, *,
-            n_communities: int, n_disconnected: int, q: float) -> StoreEntry:
+            n_communities: int, n_disconnected: int, q: float,
+            deferred=None, _notify: bool = True) -> StoreEntry:
         with self._lock:
             version = self._versions.get(graph_id, 0) + 1
             self._versions[graph_id] = version
@@ -151,6 +224,8 @@ class ResultStore:
                 version=version,
                 n_communities=n_communities, n_disconnected=n_disconnected,
                 q=q, t_stored=self.clock(),
+                deferred=np.sort(np.asarray(
+                    deferred if deferred is not None else (), np.int64)),
             )
             self._entries[graph_id] = entry
             self._entries.move_to_end(graph_id)
@@ -158,7 +233,24 @@ class ResultStore:
                 while len(self._entries) > self.max_entries:
                     self._entries.popitem(last=False)
                     self.n_evicted += 1
-            return entry
+        # a direct put IS a fresh-detect publish; warm commits route the
+        # plan through commit_update's own _fire (also outside the lock)
+        if _notify:
+            self._fire(graph_id, entry, None)
+        return entry
+
+    def restore_entry(self, graph_id: str, graph: Graph, C: np.ndarray, *,
+                      n_communities: int, n_disconnected: int, q: float,
+                      version: int, deferred=None) -> StoreEntry:
+        """Checkpoint-restore write: land an entry at an exact version
+        WITHOUT firing the commit hook (timeline state is restored
+        separately — re-observing the restore would double-count)."""
+        with self._lock:
+            self._versions[graph_id] = int(version) - 1
+            return self.put(
+                graph_id, graph, C, n_communities=n_communities,
+                n_disconnected=n_disconnected, q=q, deferred=deferred,
+                _notify=False)
 
     def get(self, graph_id: str) -> Optional[StoreEntry]:
         with self._lock:
@@ -186,6 +278,12 @@ class ResultStore:
     def __len__(self) -> int:
         with self._lock:
             return len(self._entries)
+
+    def graph_ids(self) -> list:
+        """Resident graph ids, LRU order (oldest first) — the iteration
+        surface for checkpointing; does not touch recency."""
+        with self._lock:
+            return list(self._entries.keys())
 
     # -- incremental update path ------------------------------------------
     @staticmethod
@@ -245,22 +343,51 @@ class ResultStore:
         g = entry.graph
         C = np.asarray(entry.C, np.int32)
         touched = np.zeros((g.nv,), bool)
-        n_deleted = n_added = n_removed = 0
+        n_deleted = n_added = n_removed = n_flushed = 0
         id_map: Optional[np.ndarray] = None
-        for upd in batches:
-            try:
-                g, C, touched, info = prepare_graph_update(
-                    g, C, upd, touched=touched)
-            except CapacityError as e:
+        defer = self.compact_window > 0
+        dead_set = set(np.asarray(entry.deferred, np.int64).tolist())
+        new_dead: list = []
+        # flush-at-fold-start rule (mirrored by translate_window): pay the
+        # pending compaction before this fold when the tombstone set hit
+        # the window, when additions would overflow n_cap, or when the
+        # knob is off but tombstones linger (config change across restore)
+        total_add = sum(int(b.add) for b in batches)
+        if dead_set and (not defer
+                         or len(dead_set) >= self.compact_window
+                         or int(g.n_nodes) + total_add > int(g.n_cap)):
+            flush_ids = np.asarray(sorted(dead_set), np.int64)
+            g, C, touched, finfo = apply_vertex_updates(
+                g, C, remove=flush_ids, touched=touched)
+            id_map = finfo["perm"]
+            n_flushed = int(flush_ids.size)
+            dead_set = set()
+            # flushed ids were already counted into n_removed when they
+            # were tombstoned — the flush itself moves no metric
+        try:
+            for upd in batches:
+                if defer:
+                    g, C, touched, info = self._fold_deferred_batch(
+                        g, C, upd, touched, dead_set, new_dead)
+                else:
+                    g, C, touched, info = prepare_graph_update(
+                        g, C, upd, touched=touched)
+                n_deleted += info["n_deleted"]
+                n_added += info["n_added"]
+                n_removed += info["n_removed"]
+                perm = info["perm"]
+                if perm is not None:
+                    id_map = (perm if id_map is None else np.where(
+                        id_map >= 0, perm[np.clip(id_map, 0, None)], -1))
+        except CapacityError as e:
+            # immediate mode: the entry cannot absorb the update — drop it
+            # and let the caller re-bucket via a fresh detect.  Deferred
+            # mode keeps the entry (the frontend refuses the re-bucketing
+            # rebuild there — see ServiceFrontend — so invalidating would
+            # orphan the graph; the caller can flush_compaction + retry).
+            if not defer:
                 self.invalidate(graph_id)
-                raise CapacityExceeded(str(e)) from e
-            n_deleted += info["n_deleted"]
-            n_added += info["n_added"]
-            n_removed += info["n_removed"]
-            perm = info["perm"]
-            if perm is not None:
-                id_map = (perm if id_map is None else np.where(
-                    id_map >= 0, perm[np.clip(id_map, 0, None)], -1))
+            raise CapacityExceeded(str(e)) from e
         return UpdatePlan(
             graph_id=graph_id, graph=g,
             C_prev=np.asarray(C, np.int32),
@@ -269,7 +396,65 @@ class ResultStore:
             n_deleted=n_deleted,
             version=entry.version,
             n_added=n_added, n_removed=n_removed, id_map=id_map,
+            deferred_removed=np.asarray(sorted(new_dead), np.int64),
+            deferred_after=np.asarray(sorted(dead_set), np.int64),
+            n_flushed=n_flushed,
         )
+
+    def _fold_deferred_batch(self, g: Graph, C, upd: GraphUpdate, touched,
+                             dead_set: set, new_dead: list):
+        """One batch under deferred compaction: tombstone removals (no
+        remap), then additions, then edge deltas.  Mirrors
+        :func:`repro.core.dynamic.prepare_graph_update`'s validate-first
+        contract; additionally rejects re-removal of a tombstoned id and
+        edges addressing one (ValueError, entry untouched)."""
+        n = int(g.n_nodes)
+        rem = np.asarray(upd.remove, np.int64).ravel()
+        if rem.size:
+            if int(rem.max()) >= n or int(rem.min()) < 0:
+                raise ValueError(
+                    f"remove ids must be in [0, n_nodes={n}); got range "
+                    f"[{int(rem.min())}, {int(rem.max())}]")
+            clash = dead_set.intersection(rem.tolist())
+            if clash:
+                raise ValueError(
+                    "remove ids already tombstoned (awaiting compaction): "
+                    f"{sorted(clash)[:8]}")
+        if upd.has_edges:
+            # ids do NOT shift under deferral: additions claim [n, n+add)
+            check_vertex_ids(upd.u, upd.v, n + int(upd.add))
+            bad = dead_set.union(rem.tolist())
+            if bad:
+                bad_ids = np.asarray(sorted(bad), np.int64)
+                hit = (np.isin(np.asarray(upd.u, np.int64), bad_ids)
+                       | np.isin(np.asarray(upd.v, np.int64), bad_ids))
+                if hit.any():
+                    ends = (set(np.asarray(upd.u)[hit].tolist())
+                            | set(np.asarray(upd.v)[hit].tolist()))
+                    raise ValueError(
+                        "edge endpoints reference tombstoned vertex ids: "
+                        f"{sorted(ends & bad)[:8]}")
+        out = dict(n_deleted=0, n_added=0, n_removed=0, perm=None)
+        if rem.size:
+            g, C, touched, info = tombstone_vertices(
+                g, C, rem, touched=touched)
+            out["n_deleted"] += info["n_deleted"]
+            out["n_removed"] += info["n_removed"]
+            dead_set.update(int(i) for i in rem)
+            new_dead.extend(int(i) for i in rem)
+        if upd.add:
+            g, C, touched, info = apply_vertex_updates(
+                g, C, add=int(upd.add), touched=touched)
+            out["n_added"] += info["n_added"]
+            # the perm is the identity prefix (pure growth) — nothing to
+            # compose into the plan's id_map
+        if upd.has_edges:
+            g_old = g
+            g = apply_edge_updates(
+                g, *directed_deltas(upd.u, upd.v, upd.dw))
+            out["n_deleted"] += gross_deleted(g_old, g)
+            touched = touched | touched_mask(g.nv, upd.u, upd.v)
+        return g, C, touched, out
 
     def commit_update(self, plan: UpdatePlan, *, C, n_communities: int,
                       n_disconnected: int, q: float) -> Optional[StoreEntry]:
@@ -290,11 +475,54 @@ class ResultStore:
             self.n_deletions += plan.n_deleted
             self.n_vertex_added += plan.n_added
             self.n_vertex_removed += plan.n_removed
-            return self.put(
+            self.n_deferred_removed += int(plan.deferred_removed.size)
+            if plan.n_flushed:
+                self.n_compaction_flushes += 1
+            entry = self.put(
                 plan.graph_id, plan.graph, np.asarray(C),
                 n_communities=n_communities, n_disconnected=n_disconnected,
-                q=q,
+                q=q, deferred=plan.deferred_after, _notify=False,
             )
+        self._fire(plan.graph_id, entry, plan)
+        return entry
+
+    def flush_compaction(self, graph_id: str) -> StoreEntry:
+        """Pay the deferred compaction NOW (host-only, no warm compute).
+
+        The tombstones are edgeless own-label singletons, so compacting
+        them cannot change the partition of the survivors, modularity, or
+        connectivity — only the id space (survivors shift down per the
+        compaction contract) and the community count (each tombstone was
+        an inflating singleton).  Publishes a fresh version and fires the
+        commit hook with a synthetic flush :class:`UpdatePlan` carrying
+        the remap in ``id_map`` so external ids survive.  No-op (entry
+        returned unchanged, no hook) when nothing is pending; KeyError
+        for unknown/evicted ids.
+        """
+        with self._lock:
+            entry = self.get(graph_id)
+            if entry is None:
+                raise KeyError(graph_id)
+            dead = np.asarray(entry.deferred, np.int64)
+            if not dead.size:
+                return entry
+            g2, C2, _t, info = apply_vertex_updates(
+                entry.graph, entry.C, remove=dead)
+            self.n_compaction_flushes += 1
+            new_entry = self.put(
+                graph_id, g2, np.asarray(C2, np.int32),
+                n_communities=int(entry.n_communities) - int(dead.size),
+                n_disconnected=entry.n_disconnected, q=entry.q,
+                deferred=(), _notify=False)
+            plan = UpdatePlan(
+                graph_id=graph_id, graph=g2,
+                C_prev=np.asarray(entry.C, np.int32),
+                touched=np.zeros(g2.nv, bool),
+                bucket=entry.bucket, scan="", n_deleted=0,
+                version=entry.version, id_map=info["perm"],
+                n_flushed=int(dead.size))
+        self._fire(graph_id, new_entry, plan)
+        return new_entry
 
     def apply_update(self, graph_id: str, updates, *, tau: float = 1e-3,
                      max_iters: int = 10, trace=None) -> StoreEntry:

@@ -1,0 +1,58 @@
+"""Temporal community tracking over the dynamic-update service.
+
+The dynamic core (PRs 3/5) answers "what are the communities now" after
+edge/vertex churn; this package answers "what *happened* to them":
+
+* :mod:`repro.timeline.idmap`   — stable **external vertex ids** over
+  the core's order-preserving compaction remaps (and deferred
+  tombstones), so clients address vertices by one id for life;
+* :mod:`repro.timeline.matcher` — snapshot-to-snapshot community
+  matching (weighted Jaccard on external-id member sets) assigning
+  persistent community identities and emitting lifecycle events:
+  birth, death, merge, split, continuation;
+* :mod:`repro.timeline.store`   — bounded-memory timeline store:
+  membership snapshots (``membership_at``), per-community rows
+  (``timeline``), the lifecycle event log;
+* :mod:`repro.timeline.tracker` — :class:`TimelineManager` (hangs off
+  the ResultStore commit hook; one snapshot per commit), window
+  translation from external-id event streams
+  (:func:`translate_window`), and :class:`WindowedIngest`;
+* :mod:`repro.timeline.checkpoint` — save/restore of timelines + warm
+  store entries through :mod:`repro.checkpoint.store`.
+
+Wired into the service by ``ServiceConfig(timeline_enabled=True)`` —
+see the README "Temporal tracking" section for the event schema, window
+semantics and the external-id contract.  The paper's zero-disconnected
+invariant holds at every window boundary: each snapshot is produced by
+the warm path's split pass, and the stream smoke asserts
+``n_disconnected == 0`` on every one.
+"""
+from repro.timeline.checkpoint import (
+    restore_service_checkpoint, save_service_checkpoint,
+)
+from repro.timeline.idmap import ExternalIdMap, compose_batch_maps
+from repro.timeline.matcher import (
+    LIFECYCLE_KINDS, LifecycleEvent, match_snapshots, weighted_jaccard,
+)
+from repro.timeline.store import CommunityTimeline, Snapshot, TimelineStore
+from repro.timeline.tracker import (
+    TimelineConfig, TimelineManager, WindowedIngest, translate_window,
+)
+
+__all__ = [
+    "CommunityTimeline",
+    "ExternalIdMap",
+    "LIFECYCLE_KINDS",
+    "LifecycleEvent",
+    "Snapshot",
+    "TimelineConfig",
+    "TimelineManager",
+    "TimelineStore",
+    "WindowedIngest",
+    "compose_batch_maps",
+    "match_snapshots",
+    "restore_service_checkpoint",
+    "save_service_checkpoint",
+    "translate_window",
+    "weighted_jaccard",
+]

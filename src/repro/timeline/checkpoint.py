@@ -1,0 +1,110 @@
+"""Durable timeline-service checkpoints.
+
+Persists the full temporal-tracking state of a :class:`repro.service.
+frontend.ServiceFrontend` — every resident :class:`~repro.service.store.
+StoreEntry` (graph arrays, membership, deferred tombstones, version) plus
+the :class:`~repro.timeline.tracker.TimelineManager`'s id maps, matcher
+state, snapshots, community timelines and lifecycle events — through the
+same atomic tmp->rename checkpoint store the train loop uses
+(:mod:`repro.checkpoint.store`).
+
+Restore rebuilds warm store entries via :meth:`ResultStore.restore_entry`
+(which deliberately does NOT fire the commit hook: the timeline history
+comes from the checkpoint, not from replaying the restore as a fresh
+snapshot), then wipes-and-loads the manager with
+:meth:`TimelineManager.load_state`.  After a round trip, every
+``membership_at``/``timeline``/``lifecycle_events`` answer is identical
+to the pre-checkpoint service, and warm updates resume from the exact
+entry version that was saved.
+
+Checkpoint at a quiescent point: in-flight windows (pending id-map
+stamps) are transient hints and are not captured.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.checkpoint.store import (
+    latest_step, load_checkpoint_arrays, save_checkpoint,
+)
+from repro.graph.container import Graph
+
+_KIND = "timeline-service"
+
+
+def save_service_checkpoint(frontend, ckpt_dir: str, *,
+                            step: Optional[int] = None) -> int:
+    """Write one atomic checkpoint of ``frontend``'s store + timelines.
+
+    ``step`` defaults to ``latest_step + 1`` (0 for a fresh dir).
+    Returns the step written.
+    """
+    if step is None:
+        prev = latest_step(ckpt_dir)
+        step = 0 if prev is None else prev + 1
+    arrays = {}
+    graphs_meta = []
+    store = frontend.store
+    for gi, gid in enumerate(store.graph_ids()):
+        entry = store.get(gid)
+        if entry is None:  # evicted between listing and get
+            continue
+        g = entry.graph
+        arrays[f"graph{gi}.src"] = np.asarray(g.src, np.int32)
+        arrays[f"graph{gi}.dst"] = np.asarray(g.dst, np.int32)
+        arrays[f"graph{gi}.w"] = np.asarray(g.w, np.float32)
+        arrays[f"graph{gi}.C"] = np.asarray(entry.C, np.int32)
+        arrays[f"graph{gi}.deferred"] = np.asarray(entry.deferred, np.int64)
+        graphs_meta.append(dict(
+            index=gi, graph_id=gid,
+            n_nodes=int(g.n_nodes), n_cap=int(g.n_cap), m_cap=int(g.m_cap),
+            n_communities=int(entry.n_communities),
+            n_disconnected=int(entry.n_disconnected),
+            q=float(entry.q), version=int(entry.version)))
+    tl_meta = {}
+    tl = getattr(frontend, "timelines", None)
+    if tl is not None:
+        tl_arrays, tl_meta = tl.state()
+        for k, v in tl_arrays.items():
+            arrays[f"tl.{k}"] = v
+    save_checkpoint(ckpt_dir, step, arrays, extra=dict(
+        kind=_KIND, graphs=graphs_meta, timeline=tl_meta))
+    return step
+
+
+def restore_service_checkpoint(frontend, ckpt_dir: str, *,
+                               step: Optional[int] = None) -> Optional[int]:
+    """Restore store entries + timeline state from a checkpoint.
+
+    Returns the restored step, or ``None`` when no checkpoint exists.
+    """
+    arrays, extra, step = load_checkpoint_arrays(ckpt_dir, step=step)
+    if arrays is None:
+        return None
+    if extra.get("kind") != _KIND:
+        raise ValueError(
+            f"not a {_KIND} checkpoint: kind={extra.get('kind')!r}")
+    store = frontend.store
+    for gm in extra["graphs"]:
+        gi, gid = gm["index"], gm["graph_id"]
+        g = Graph(
+            src=arrays[f"graph{gi}.src"].astype(np.int32),
+            dst=arrays[f"graph{gi}.dst"].astype(np.int32),
+            w=arrays[f"graph{gi}.w"].astype(np.float32),
+            n_nodes=np.int32(gm["n_nodes"]),
+            n_cap=int(gm["n_cap"]), m_cap=int(gm["m_cap"]))
+        store.restore_entry(
+            gid, g, arrays[f"graph{gi}.C"].astype(np.int32),
+            n_communities=gm["n_communities"],
+            n_disconnected=gm["n_disconnected"],
+            q=gm["q"], version=gm["version"],
+            deferred=arrays[f"graph{gi}.deferred"])
+    tl = getattr(frontend, "timelines", None)
+    tl_meta = extra.get("timeline") or {}
+    if tl is not None and tl_meta:
+        tl_arrays = {k[len("tl."):]: v for k, v in arrays.items()
+                     if k.startswith("tl.")}
+        tl.load_state(tl_arrays, tl_meta)
+    return step

@@ -1,0 +1,793 @@
+"""Temporal community tracking (repro.timeline + repro.data.streams).
+
+Covers, bottom-up:
+
+* :class:`ExternalIdMap` — external-id stability over the compaction
+  contract, deferred tombstones (including the resurrection regression:
+  a growth commit while tombstones linger must NOT mint/bind into dead
+  slots), state round-trip, and a hypothesis property over >= 3 random
+  compaction rounds (skips gracefully without hypothesis — the same
+  contract is pinned by the deterministic sweep test).
+* the weighted-Jaccard matcher — continuation/merge/split/birth/death,
+  the simultaneous merge+split window, empty-window continuations,
+  input-order determinism.
+* :class:`TimelineStore` — membership_at bisect semantics and every
+  retention bound (snapshots, rows, events, community cap).
+* :func:`translate_window` — window folding (cancellation,
+  net-zero edges), id-shift mirroring in immediate AND deferred mode,
+  and the flush-prediction mirror of the store's rule.
+* service integration — the planted merge->split->death->birth script
+  end-to-end (sync and async), deferred-compaction equivalence
+  (identical live external sets, zero disconnected, flush preserves
+  membership), external-id stability across >= 3 real compaction
+  rounds, the ResultStore-eviction retention regression (an evicted
+  compute entry keeps its timeline queryable), and the checkpoint
+  round-trip (identical ``membership_at`` after restore, warm ingest
+  resumes).
+"""
+import asyncio
+import dataclasses
+import tempfile
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.data.streams import (
+    GraphEvent, graph_event_stream, planted_timeline_script,
+)
+from repro.graph import ring_of_cliques
+from repro.service import (
+    AsyncCommunityService, CommunityService, ServiceConfig, WindowedIngest,
+)
+from repro.timeline import (
+    restore_service_checkpoint, save_service_checkpoint,
+)
+from repro.timeline.idmap import ExternalIdMap, compose_batch_maps
+from repro.timeline.matcher import match_snapshots, weighted_jaccard
+from repro.timeline.store import TimelineStore
+from repro.timeline.tracker import translate_window
+
+from tests._hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+
+pytestmark = pytest.mark.service
+
+
+# ---------------------------------------------------------------------------
+# ExternalIdMap: the compaction contract in isolation
+# ---------------------------------------------------------------------------
+
+def _removal_map(n, removed):
+    """UpdatePlan.id_map for removing ``removed``: survivors shift down."""
+    alive = np.ones(n, bool)
+    alive[list(removed)] = False
+    shift = np.cumsum(alive) - 1
+    return np.where(alive, shift, -1).astype(np.int64)
+
+
+def test_idmap_initial_identity_and_growth():
+    m = ExternalIdMap(4)
+    assert m.n_slots == 4 and m.n_live == 4
+    assert [m.external_of(i) for i in range(4)] == [0, 1, 2, 3]
+    fresh, retired = m.apply(None, 6)           # pure growth by 2
+    assert fresh == [4, 5] and retired == []
+    assert m.internal_of(4) == 4 and m.internal_of(5) == 5
+    assert m.next_external == 6
+
+
+def test_idmap_compaction_keeps_externals():
+    m = ExternalIdMap(6)
+    id_map = _removal_map(6, [1, 4])
+    fresh, retired = m.apply(id_map, 4)
+    assert fresh == [] and retired == [1, 4]
+    # survivors keep their external names at shifted internal slots
+    assert m.internal_of(0) == 0
+    assert m.internal_of(2) == 1
+    assert m.internal_of(3) == 2
+    assert m.internal_of(5) == 3
+    assert m.internal_of(1) is None and m.is_retired(1)
+    # a later add claims a FRESH external, never a recycled one
+    fresh, _ = m.apply(None, 5)
+    assert fresh == [6]
+
+
+def test_idmap_growth_with_lingering_tombstones_regression():
+    """A pure-growth commit while deferred tombstones linger must not
+    treat the dead slots as fresh: before the fix, ``apply(None, n)``
+    counted the lingering ``-1`` slots as addition slots, broke the
+    fresh-id binding and minted new externals INTO tombstones —
+    resurrecting removed vertices (observed live at compact_window=8)."""
+    m = ExternalIdMap(6)
+    m.retire_internal([1, 3])
+    assert m.externals().tolist() == [0, -1, 2, -1, 4, 5]
+    fresh, retired = m.apply(None, 8, fresh_ids=[100, 101])
+    # binding honored: exactly the two genuinely-new slots, in order
+    assert fresh == [100, 101] and retired == []
+    assert m.internal_of(100) == 6 and m.internal_of(101) == 7
+    # tombstone slots stay dead — nothing resurrected
+    assert m.externals().tolist() == [0, -1, 2, -1, 4, 5, 100, 101]
+    assert m.is_retired(1) and m.is_retired(3)
+
+
+def test_idmap_tombstone_survives_remap_not_fresh():
+    """Same property through the remap branch: a tombstone slot carried
+    by a partial flush is still dead on the far side."""
+    m = ExternalIdMap(6)
+    m.retire_internal([3])
+    id_map = _removal_map(6, [5])       # flush removes only slot 5
+    fresh, retired = m.apply(id_map, 5)
+    assert fresh == [] and retired == [5]
+    assert m.externals().tolist() == [0, 1, 2, -1, 4]
+    assert m.is_retired(3)
+
+
+def test_idmap_fresh_binding_rejected_wholesale_on_collision():
+    m = ExternalIdMap(4)
+    m.retire_internal([0])
+    id_map = _removal_map(4, [0])
+    m.apply(id_map, 3)                  # flush the tombstone
+    # external 0 is retired; binding it again must be rejected and the
+    # slots mint from the monotone counter instead
+    fresh, _ = m.apply(None, 5, fresh_ids=[0, 99])
+    assert fresh == [4, 5]
+    assert m.internal_of(0) is None and m.internal_of(99) is None
+
+
+def test_idmap_state_roundtrip():
+    m = ExternalIdMap(5)
+    m.retire_internal([2])
+    m.apply(None, 6, fresh_ids=[41])
+    ext, nxt, retired = m.state()
+    m2 = ExternalIdMap.from_state(ext, nxt, retired)
+    assert m2.externals().tolist() == m.externals().tolist()
+    assert m2.next_external == m.next_external
+    assert m2.is_retired(2)
+    assert m2.internal_of(41) == m.internal_of(41)
+
+
+def test_compose_batch_maps_matches_sequential_contract():
+    # batch 1: remove {1}, add 2;  batch 2: remove {0, 4}, add 1
+    batches = [SimpleNamespace(remove=np.asarray([1]), add=2,
+                               u=np.empty(0), v=np.empty(0), dw=np.empty(0)),
+               SimpleNamespace(remove=np.asarray([0, 4]), add=1,
+                               u=np.empty(0), v=np.empty(0), dw=np.empty(0))]
+    from repro.core.dynamic import GraphUpdate
+    batches = [GraphUpdate(u=np.empty(0, np.int32), v=np.empty(0, np.int32),
+                           dw=np.empty(0, np.float32), add=b.add,
+                           remove=np.asarray(b.remove, np.int64))
+               for b in batches]
+    id_map, n_final = compose_batch_maps(4, batches)
+    # start 0..3 -> remove 1 -> [0,2,3] + adds [4,5] (internal 3,4)
+    # -> remove internal {0,4} (= original 0 and add#2) -> [2,3,add#1]
+    assert n_final == 4                   # 4 -1 +2 -2 +1
+    assert id_map.tolist() == [-1, -1, 0, 1]
+
+
+def test_idmap_stability_across_three_compaction_rounds():
+    """Deterministic sweep of the >= 3-round stability contract (always
+    runs, independent of hypothesis availability)."""
+    rng = np.random.default_rng(3)
+    m = ExternalIdMap(16)
+    alive = {e: e for e in range(16)}         # external -> internal mirror
+    ever_retired = set()
+    n = 16
+    for _ in range(5):
+        k = int(rng.integers(1, 4))
+        internals = sorted(rng.choice(n, size=k, replace=False).tolist())
+        removed_ext = [e for e, i in alive.items() if i in internals]
+        n_add = int(rng.integers(0, 3))
+        id_map = _removal_map(n, internals)
+        n_new = n - k + n_add
+        fresh, retired = m.apply(id_map, n_new)
+        assert sorted(retired) == sorted(removed_ext)
+        ever_retired.update(retired)
+        # survivors keep their externals at the shifted slot
+        survivors = {e: int(id_map[i]) for e, i in alive.items()
+                     if e not in removed_ext}
+        for e, i in survivors.items():
+            assert m.internal_of(e) == i, (e, i)
+        # fresh externals are brand new, never recycled
+        assert not (set(fresh) & set(alive)) and \
+            not (set(fresh) & ever_retired)
+        alive = survivors
+        base = n - k
+        alive.update({f: base + j for j, f in enumerate(fresh)})
+        n = n_new
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(
+    st.tuples(st.lists(st.integers(0, 30), min_size=0, max_size=4),
+              st.integers(0, 3)),
+    min_size=3, max_size=8))
+def test_idmap_stability_property(ops):
+    """Property form: arbitrary interleavings of removals and additions
+    across >= 3 compaction rounds never rename a survivor and never
+    reuse an external id.  (Skips when hypothesis is absent; the
+    deterministic sweep above pins the same contract.)"""
+    m = ExternalIdMap(8)
+    alive = {e: e for e in range(8)}
+    ever_seen = set(alive)
+    n = 8
+    for internals, n_add in ops:
+        internals = sorted({i for i in internals if i < n})
+        if len(internals) >= n:
+            internals = internals[:n - 1]
+        removed_ext = {e for e, i in alive.items() if i in internals}
+        id_map = _removal_map(n, internals) if internals else None
+        n_new = n - len(internals) + n_add
+        fresh, retired = m.apply(id_map, n_new)
+        assert set(retired) == removed_ext
+        shift = (id_map if id_map is not None
+                 else np.arange(n_new, dtype=np.int64))
+        for e, i in alive.items():
+            if e in removed_ext:
+                assert m.internal_of(e) is None
+            else:
+                assert m.internal_of(e) == int(shift[i])
+        assert not (set(fresh) & ever_seen)       # never reused
+        ever_seen.update(fresh)
+        alive = {e: int(shift[i]) for e, i in alive.items()
+                 if e not in removed_ext}
+        base = n - len(internals)
+        alive.update({f: base + j for j, f in enumerate(fresh)})
+        n = n_new
+
+
+# ---------------------------------------------------------------------------
+# matcher: lifecycle decisions at one window boundary
+# ---------------------------------------------------------------------------
+
+def _mem(*ids, w=1.0):
+    return {int(i): float(w) for i in ids}
+
+
+def _match(prev, new, **kw):
+    counter = [100]
+
+    def mint():
+        counter[0] += 1
+        return counter[0]
+    kw.setdefault("t", 1.0)
+    kw.setdefault("graph_id", "g")
+    return match_snapshots(prev, new, next_id=mint, **kw)
+
+
+def test_weighted_jaccard():
+    assert weighted_jaccard({}, {}) == 0.0
+    assert weighted_jaccard(_mem(1, 2), _mem(3, 4)) == 0.0
+    assert weighted_jaccard(_mem(1, 2), _mem(1, 2)) == 1.0
+    # weighted: min over intersection, max over union
+    a = {1: 2.0, 2: 1.0}
+    b = {1: 1.0, 3: 1.0}
+    assert weighted_jaccard(a, b) == pytest.approx(1.0 / 4.0)
+
+
+def test_match_empty_window_is_all_continuations():
+    prev = {0: _mem(1, 2, 3), 1: _mem(4, 5, 6)}
+    assigned, events = _match(prev, [_mem(1, 2, 3), _mem(4, 5, 6)])
+    assert sorted(assigned) == [0, 1]
+    assert all(e.kind == "continuation" for e in events)
+    assert all(e.overlap == 1.0 for e in events)
+
+
+def test_match_merge():
+    prev = {0: _mem(*range(0, 8)), 1: _mem(*range(8, 16))}
+    assigned, events = _match(prev, [_mem(*range(0, 16))])
+    assert assigned == [0]                    # heir = bigger overlap tie->0
+    (ev,) = [e for e in events if e.kind == "merge"]
+    assert ev.community == 0 and ev.parents == (1,)
+
+
+def test_match_split():
+    prev = {7: _mem(*range(0, 8))}
+    assigned, events = _match(prev, [_mem(*range(0, 5)), _mem(*range(5, 8))])
+    assert assigned[0] == 7                   # larger child continues
+    assert assigned[1] > 100                  # fresh id for the split child
+    (ev,) = [e for e in events if e.kind == "split"]
+    assert ev.community == assigned[1] and ev.parents == (7,)
+
+
+def test_match_simultaneous_merge_and_split():
+    prev = {0: _mem(*range(0, 8)), 1: _mem(*range(8, 16)),
+            2: _mem(*range(16, 24))}
+    new = [_mem(*range(0, 16)),               # 0 absorbs 1 (merge)
+           _mem(*range(16, 20)),              # 2 splits in half
+           _mem(*range(20, 24))]
+    assigned, events = _match(prev, new)
+    kinds = sorted(e.kind for e in events)
+    assert kinds == ["continuation", "merge", "split"]
+    merge = next(e for e in events if e.kind == "merge")
+    assert merge.community == 0 and merge.parents == (1,)
+    split = next(e for e in events if e.kind == "split")
+    assert split.parents == (2,)
+    assert 2 in assigned                      # one half continues id 2
+
+
+def test_match_total_removal_is_death():
+    prev = {5: _mem(1, 2, 3), 6: _mem(7, 8, 9)}
+    assigned, events = _match(prev, [_mem(7, 8, 9)])
+    assert assigned == [6]
+    (death,) = [e for e in events if e.kind == "death"]
+    assert death.community == 5 and death.size == 0
+
+
+def test_match_birth_no_overlap():
+    prev = {0: _mem(1, 2, 3)}
+    assigned, events = _match(prev, [_mem(1, 2, 3), _mem(50, 51, 52)])
+    assert assigned[0] == 0 and assigned[1] > 100
+    (birth,) = [e for e in events if e.kind == "birth"]
+    assert birth.community == assigned[1] and birth.size == 3
+
+
+def test_match_deterministic_under_input_order():
+    prev = {0: _mem(*range(0, 6)), 1: _mem(*range(6, 12))}
+    new = [_mem(*range(0, 6)), _mem(*range(6, 12))]
+    a1, e1 = _match(prev, new)
+    a2, e2 = _match(dict(reversed(list(prev.items()))), new)
+    assert a1 == a2
+    assert [(e.kind, e.community) for e in e1] == \
+        [(e.kind, e.community) for e in e2]
+
+
+def test_match_jaccard_min_gates_relation():
+    prev = {0: _mem(*range(0, 10))}
+    new = [_mem(0, *range(100, 109))]         # overlap 1/19 < 0.1
+    assigned, events = _match(prev, new, jaccard_min=0.1)
+    kinds = sorted(e.kind for e in events)
+    assert kinds == ["birth", "death"]
+    assert assigned[0] > 100
+
+
+# ---------------------------------------------------------------------------
+# TimelineStore: bisect semantics + every retention bound
+# ---------------------------------------------------------------------------
+
+def _snap(store, gid, t, groups, events=()):
+    store.record_snapshot(gid, t, [(cid, _mem(*mem))
+                                   for cid, mem in groups], list(events))
+
+
+def test_store_membership_bisect_semantics():
+    s = TimelineStore()
+    _snap(s, "g", 1.0, [(0, (1, 2)), (1, (3,))])
+    _snap(s, "g", 2.0, [(0, (1,)), (1, (2, 3))])
+    assert s.membership_at("g", 2, 0.5) is None        # before history
+    assert s.membership_at("g", 2, 1.0) == 0
+    assert s.membership_at("g", 2, 1.7) == 0           # floor to t=1
+    assert s.membership_at("g", 2, 2.0) == 1
+    assert s.membership_at("g", 2, 99.0) == 1          # after last
+    assert s.membership_at("g", 2) == 1                # None = latest
+    assert s.membership_at("g", 42, 1.5) is None       # unknown vertex
+    assert s.membership_at("nope", 1) is None          # unknown graph
+
+
+def test_store_snapshot_retention_rolls_off():
+    s = TimelineStore(max_snapshots=2)
+    for t in (1.0, 2.0, 3.0):
+        _snap(s, "g", t, [(0, (1,))])
+    assert [x.t for x in s.snapshots("g")] == [2.0, 3.0]
+    assert s.membership_at("g", 1, 1.0) is None        # fell off horizon
+    assert s.n_snapshots == 3                          # counter is lifetime
+
+
+def test_store_row_and_event_bounds():
+    s = TimelineStore(max_rows=2, max_events=3)
+    from repro.timeline.matcher import LifecycleEvent
+    for t in (1.0, 2.0, 3.0, 4.0):
+        _snap(s, "g", t, [(0, (1, 2))],
+              [LifecycleEvent("continuation", t, "g", 0, size=2)])
+    tl = s.timeline(0)
+    assert len(tl.rows) == 2 and tl.rows[-1][0] == 4.0
+    assert len(s.lifecycle_events("g")) == 3           # deque maxlen
+    assert s.n_events == 4
+
+
+def test_store_community_cap_evicts_dead_first():
+    s = TimelineStore(max_communities=2)
+    from repro.timeline.matcher import LifecycleEvent
+    _snap(s, "g", 1.0, [(0, (1,)), (1, (2,))],
+          [LifecycleEvent("death", 1.0, "g", 0)])
+    _snap(s, "g", 2.0, [(1, (2,)), (2, (3,))])
+    assert s.timeline(0) is None                       # dead evicted first
+    assert s.timeline(1) is not None and s.timeline(2) is not None
+    assert s.n_truncated_communities == 1
+
+
+def test_store_drop_graph_scopes_by_graph():
+    s = TimelineStore()
+    from repro.timeline.matcher import LifecycleEvent
+    _snap(s, "a", 1.0, [(0, (1,))],
+          [LifecycleEvent("birth", 1.0, "a", 0, size=1)])
+    _snap(s, "b", 1.0, [(1, (1,))],
+          [LifecycleEvent("birth", 1.0, "b", 1, size=1)])
+    assert s.drop_graph("a") == 1
+    assert s.snapshots("a") == [] and s.timeline(0) is None
+    assert s.lifecycle_events("a") == []
+    assert len(s.snapshots("b")) == 1 and s.timeline(1) is not None
+
+
+# ---------------------------------------------------------------------------
+# translate_window: window folding + the id-contract mirror
+# ---------------------------------------------------------------------------
+
+def _entry(n, n_cap=None, deferred=None):
+    return SimpleNamespace(
+        graph=SimpleNamespace(n_nodes=n, n_cap=n_cap or n + 8),
+        deferred=(None if deferred is None
+                  else np.asarray(deferred, np.int64)))
+
+
+def test_translate_add_then_del_cancels_with_edges():
+    idmap = ExternalIdMap(4)
+    evs = [GraphEvent(0.1, "vertex_add", u=10),
+           GraphEvent(0.2, "edge_add", u=10, v=1, w=1.0),
+           GraphEvent(0.3, "vertex_del", u=10)]
+    upd, stats = translate_window(evs, idmap=idmap, entry=_entry(4))
+    assert upd.add == 0 and upd.remove.size == 0 and upd.u.size == 0
+    assert stats["dropped_edges"] == 1 and stats["adds_ext"] == []
+
+
+def test_translate_net_zero_edge_folds_away():
+    idmap = ExternalIdMap(4)
+    evs = [GraphEvent(0.1, "edge_add", u=0, v=1, w=2.0),
+           GraphEvent(0.2, "edge_del", u=0, v=1, w=2.0),
+           GraphEvent(0.3, "edge_add", u=2, v=3, w=1.5)]
+    upd, _ = translate_window(evs, idmap=idmap, entry=_entry(4))
+    assert upd.u.tolist() == [2] and upd.v.tolist() == [3]
+    assert upd.dw.tolist() == [1.5]
+
+
+def test_translate_immediate_mode_shifts_ids():
+    idmap = ExternalIdMap(6)
+    evs = [GraphEvent(0.1, "vertex_del", u=1),
+           GraphEvent(0.2, "edge_add", u=4, v=5, w=1.0),
+           GraphEvent(0.3, "vertex_add", u=60)]
+    upd, stats = translate_window(evs, idmap=idmap, entry=_entry(6))
+    assert upd.remove.tolist() == [1]
+    # post-compaction internals: 4 -> 3, 5 -> 4; add claims n' = 5
+    assert (upd.u.tolist(), upd.v.tolist()) == ([3], [4])
+    assert upd.add == 1 and stats["adds_ext"] == [60]
+    assert stats["flush_predicted"] is False
+
+
+def test_translate_deferred_mode_keeps_ids_and_mirrors_flush():
+    idmap = ExternalIdMap(6)
+    evs = [GraphEvent(0.1, "vertex_del", u=1),
+           GraphEvent(0.2, "edge_add", u=4, v=5, w=1.0),
+           GraphEvent(0.3, "vertex_add", u=60)]
+    upd, stats = translate_window(
+        evs, idmap=idmap, entry=_entry(6), compact_window=4)
+    # no shift under deferral; adds claim [n, n+add)
+    assert (upd.u.tolist(), upd.v.tolist()) == ([4], [5])
+    assert upd.add == 1 and stats["flush_predicted"] is False
+
+    # pending tombstones at the window threshold -> flush predicted, ids
+    # computed in the post-flush space
+    idmap2 = ExternalIdMap(6)
+    idmap2.retire_internal([0])
+    upd2, stats2 = translate_window(
+        [GraphEvent(0.1, "edge_add", u=4, v=5, w=1.0)],
+        idmap=idmap2, entry=_entry(6, deferred=[0]), compact_window=1)
+    assert stats2["flush_predicted"] is True
+    assert (upd2.u.tolist(), upd2.v.tolist()) == ([3], [4])
+
+
+def test_translate_drops_unknown_and_retired_references():
+    idmap = ExternalIdMap(4)
+    idmap.retire_internal([2])
+    evs = [GraphEvent(0.1, "edge_add", u=0, v=99, w=1.0),   # unknown
+           GraphEvent(0.2, "edge_add", u=0, v=2, w=1.0),    # retired
+           GraphEvent(0.3, "vertex_del", u=2),              # already gone
+           GraphEvent(0.4, "vertex_add", u=2)]              # retired name
+    upd, stats = translate_window(
+        evs, idmap=idmap, entry=_entry(4, deferred=[2]), compact_window=8)
+    assert upd.u.size == 0 and upd.add == 0 and upd.remove.size == 0
+    assert stats["dropped_edges"] == 2
+    assert stats["dropped_vertices"] == 2
+
+
+# ---------------------------------------------------------------------------
+# service integration: the planted lifecycle script, end to end
+# ---------------------------------------------------------------------------
+
+def _timeline_cfg(**kw):
+    kw.setdefault("timeline_enabled", True)
+    kw.setdefault("telemetry_enabled", False)
+    return ServiceConfig(**kw)
+
+
+def _replay_planted(svc):
+    """Seed detect at t=0 + the five script windows through the sync
+    windowed path; returns (windows' expected kinds, g0)."""
+    g0, windows, expected = planted_timeline_script()
+    svc.frontend.set_snapshot_time("g", 0.0)
+    svc.submit_detect("g", g0)
+    svc.pump(force=True)
+    wi = WindowedIngest(svc.frontend, "g", window=1.0)
+    for evs in windows:
+        for e in evs:
+            wi.ingest(e)
+    wi.flush()
+    return expected, g0
+
+
+def test_planted_lifecycle_end_to_end_sync():
+    svc = CommunityService(config=_timeline_cfg())
+    try:
+        expected, g0 = _replay_planted(svc)
+        snaps = svc.timeline_snapshots("g")
+        assert all(s.n_disconnected == 0 for s in snaps)
+        got = {s.t: sorted(e.kind for e in svc.lifecycle_events("g")
+                           if e.t == s.t and e.kind != "continuation")
+               for s in snaps if s.t > 0}
+        assert got == {float(i + 1): sorted(k)
+                       for i, k in enumerate(expected)}
+        m = svc.membership_at
+        # merge: mover clique (ids == 3 mod 4) joins target (== 0 mod 4)
+        assert m("g", 3, 1.5) != m("g", 0, 1.5)
+        assert m("g", 3, 2.0) == m("g", 0, 2.0)
+        # split: the paper's pass cuts the re-disconnected component
+        assert m("g", 3, 3.0) != m("g", 0, 3.0)
+        # death: clique 2 removed wholesale
+        assert m("g", 2, 3.0) is not None and m("g", 2, 4.0) is None
+        # birth: the added clique's first external id
+        assert m("g", int(g0.n_nodes)) is not None
+        # community_timeline coherence for the dead community
+        dead_cid = m("g", 2, 3.0)
+        tl = svc.community_timeline(dead_cid)
+        assert tl is not None and tl.dead_t == 4.0 and not tl.alive
+    finally:
+        svc.close()
+
+
+def test_planted_lifecycle_end_to_end_async():
+    """The ISSUE acceptance path: the same script through
+    AsyncCommunityService.ingest_window, with a lifecycle subscription."""
+    async def go():
+        g0, windows, expected = planted_timeline_script()
+        seen = []
+        async with AsyncCommunityService(_timeline_cfg(
+                batch_size=4, update_batch_size=1)) as svc:
+            svc.subscribe_lifecycle(lambda evs: seen.extend(evs))
+            svc.frontend.set_snapshot_time("g", 0.0)
+            await (await svc.submit_detect("g", g0))
+            for i, evs in enumerate(windows):
+                fut = await svc.ingest_window("g", evs, t=float(i + 1))
+                await fut
+            snaps = svc.timeline_snapshots("g")
+            assert all(s.n_disconnected == 0 for s in snaps)
+            got = {s.t: sorted(e.kind for e in svc.lifecycle_events("g")
+                               if e.t == s.t and e.kind != "continuation")
+                   for s in snaps if s.t > 0}
+            assert got == {float(i + 1): sorted(k)
+                           for i, k in enumerate(expected)}
+            assert svc.membership_at("g", 3, 2.0) == \
+                svc.membership_at("g", 0, 2.0)
+            assert svc.membership_at("g", 2, 4.0) is None
+            kinds = {e.kind for e in seen}
+            assert {"merge", "split", "death", "birth"} <= kinds
+    asyncio.run(go())
+
+
+def test_empty_window_is_a_snapshot_of_continuations():
+    svc = CommunityService(config=_timeline_cfg())
+    try:
+        g0 = ring_of_cliques(n_cliques=4, clique_size=5)
+        svc.frontend.set_snapshot_time("g", 0.0)
+        svc.submit_detect("g", g0)
+        svc.pump(force=True)
+        wi = WindowedIngest(svc.frontend, "g", window=1.0)
+        # an event at t=2.5 closes the empty windows [0,1) and [1,2);
+        # the event itself lands in [2,3) and is flushed explicitly
+        wi.ingest(GraphEvent(2.5, "edge_add", u=0, v=1, w=0.5))
+        wi.flush()
+        snaps = svc.timeline_snapshots("g")
+        assert [s.t for s in snaps] == [0.0, 1.0, 2.0, 3.0]
+        for s in snaps[1:3]:                  # the empty windows
+            evs = [e for e in svc.lifecycle_events("g") if e.t == s.t]
+            assert evs and all(e.kind == "continuation" for e in evs)
+    finally:
+        svc.close()
+
+
+# ---------------------------------------------------------------------------
+# deferred compaction vs immediate: equivalence + stability
+# ---------------------------------------------------------------------------
+
+def _churn_members(compact_window, horizon=8.0):
+    g0 = ring_of_cliques(n_cliques=6, clique_size=6)
+    svc = CommunityService(config=_timeline_cfg(
+        compact_window=compact_window))
+    svc.frontend.set_snapshot_time("g", 0.0)
+    svc.submit_detect("g", g0)
+    svc.pump(force=True)
+    wi = WindowedIngest(svc.frontend, "g", window=1.0)
+    stream = graph_event_stream(
+        g0, rate=40.0, seed=7,
+        mix=(("edge_add", 0.3), ("edge_del", 0.1), ("vertex_add", 0.2),
+             ("vertex_del", 0.4)), min_vertices=12)
+    for e in stream:
+        if e.t > horizon:
+            break
+        wi.ingest(e)
+    wi.flush()
+    snaps = svc.timeline_snapshots("g")
+    final = snaps[-1]
+    return svc, {int(x): int(c) for x, c in zip(final.ext, final.cid)}, snaps
+
+
+def test_deferred_compaction_equivalence_and_flush():
+    svc0, m0, snaps0 = _churn_members(0)
+    svc4, m4, snaps4 = _churn_members(4)
+    try:
+        assert svc0.store.n_compaction_flushes == 0
+        assert svc4.store.n_compaction_flushes >= 3   # >= 3 real rounds
+        assert all(s.n_disconnected == 0 for s in snaps0 + snaps4)
+        # the live external-id SET is mode-independent (groupings may
+        # differ — deferral changes sweep order, both partitions valid)
+        assert set(m0) == set(m4)
+        assert svc4.timelines.n_binding_mismatches == 0
+        # every live external answers membership_at; retired ids don't
+        for x, c in m4.items():
+            assert svc4.membership_at("g", x) == c
+        ext = svc4.timelines.external_ids("g")
+        retired = sorted(set(range(36)) - set(m4))[:5]
+        for x in retired:
+            assert svc4.timelines.internal_of("g", x) is None
+        # an explicit flush drains tombstones WITHOUT changing membership
+        entry = svc4.store.get("g")
+        assert entry.deferred.size > 0
+        e2 = svc4.store.flush_compaction("g")
+        assert e2.deferred.size == 0
+        final = svc4.timeline_snapshots("g")[-1]
+        assert {int(x): int(c)
+                for x, c in zip(final.ext, final.cid)} == m4
+        assert ext is not None
+    finally:
+        svc0.close()
+        svc4.close()
+
+
+def test_external_ids_stable_across_three_real_compactions():
+    """Immediate mode: every removal window is a compaction round; the
+    external view must never notice the internal renumbering."""
+    g0 = ring_of_cliques(n_cliques=4, clique_size=6)      # externals 0..23
+    svc = CommunityService(config=_timeline_cfg())
+    try:
+        svc.frontend.set_snapshot_time("g", 0.0)
+        svc.submit_detect("g", g0)
+        svc.pump(force=True)
+        wi = WindowedIngest(svc.frontend, "g", window=1.0)
+        # three windows, each removing two low internal ids -> every
+        # surviving internal shifts every round
+        doomed = [(0, 1), (2, 3), (4, 5)]
+        for i, pair in enumerate(doomed):
+            for x in pair:
+                wi.ingest(GraphEvent(i + 0.5, "vertex_del", u=x))
+        wi.flush()
+        gone = {x for pair in doomed for x in pair}
+        ext = svc.timelines.external_ids("g")
+        assert sorted(ext.tolist()) == sorted(set(range(24)) - gone)
+        for x in sorted(set(range(24)) - gone):
+            assert svc.membership_at("g", x) is not None
+        for x in gone:
+            assert svc.membership_at("g", x) is None
+            assert svc.timelines.internal_of("g", x) is None
+        # snapshot count: seed + 3 windows + trailing partial flush
+        assert len(svc.timeline_snapshots("g")) >= 4
+    finally:
+        svc.close()
+
+
+# ---------------------------------------------------------------------------
+# retention: ResultStore eviction must not orphan timeline history
+# ---------------------------------------------------------------------------
+
+def test_store_eviction_keeps_timeline_queryable():
+    svc = CommunityService(config=_timeline_cfg(store_max_entries=2))
+    try:
+        for i in range(3):
+            svc.frontend.set_snapshot_time(f"g{i}", float(i))
+            svc.submit_detect(f"g{i}", ring_of_cliques(
+                n_cliques=3, clique_size=5))
+            svc.pump(force=True)
+        # g0's COMPUTE entry was LRU-evicted...
+        assert svc.store.get("g0") is None
+        assert svc.store.n_evicted == 1
+        # ...but its timeline history is intact and queryable
+        assert len(svc.timeline_snapshots("g0")) == 1
+        assert svc.membership_at("g0", 0) is not None
+        assert svc.lifecycle_events("g0")
+        # the ONE retention control is the explicit drop
+        assert svc.timelines.drop_graph("g0") == 1
+        assert svc.timeline_snapshots("g0") == []
+        assert svc.membership_at("g0", 0) is None
+        # other graphs untouched
+        assert svc.membership_at("g2", 0) is not None
+    finally:
+        svc.close()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: save/restore the whole temporal state
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_preserves_membership_and_resumes():
+    svc = CommunityService(config=_timeline_cfg())
+    svc2 = CommunityService(config=_timeline_cfg())
+    try:
+        _replay_planted(svc)
+        with tempfile.TemporaryDirectory() as d:
+            step = save_service_checkpoint(svc.frontend, d)
+            assert restore_service_checkpoint(svc2.frontend, d) == step
+        s1 = svc.timeline_snapshots("g")
+        s2 = svc2.timeline_snapshots("g")
+        assert len(s1) == len(s2) > 0
+        for a, b in zip(s1, s2):
+            assert a.t == b.t and np.array_equal(a.ext, b.ext) \
+                and np.array_equal(a.cid, b.cid) \
+                and a.n_communities == b.n_communities \
+                and a.n_disconnected == b.n_disconnected
+        # identical membership_at for every ever-seen external at every
+        # snapshot time (plus off-boundary and out-of-range probes)
+        exts = sorted({int(e) for s in s1 for e in s.ext})
+        for t in [s.t for s in s1] + [1.5, 2.5, 99.0]:
+            for e in exts:
+                assert svc.membership_at("g", e, t) == \
+                    svc2.membership_at("g", e, t), (e, t)
+        e1 = svc.lifecycle_events("g")
+        e2 = svc2.lifecycle_events("g")
+        assert [(x.kind, x.t, x.community, x.parents) for x in e1] == \
+            [(x.kind, x.t, x.community, x.parents) for x in e2]
+        for cid in {x.community for x in e1}:
+            t1, t2 = svc.community_timeline(cid), svc2.community_timeline(cid)
+            assert (t1 is None) == (t2 is None)
+            if t1 is not None:
+                assert t1.born_t == t2.born_t and t1.dead_t == t2.dead_t \
+                    and t1.origin == t2.origin \
+                    and list(t1.rows) == list(t2.rows)
+        # the restored service resumes the warm path at the saved version
+        assert svc.store.get("g").version == svc2.store.get("g").version
+        wi = WindowedIngest(svc2.frontend, "g", window=1.0, t0=5.0)
+        wi.ingest(GraphEvent(5.5, "edge_add", u=0, v=3, w=1.0))
+        wi.flush()
+        s2b = svc2.timeline_snapshots("g")
+        assert len(s2b) == len(s1) + 1 and s2b[-1].n_disconnected == 0
+    finally:
+        svc.close()
+        svc2.close()
+
+
+# ---------------------------------------------------------------------------
+# streams: deterministic generators
+# ---------------------------------------------------------------------------
+
+def test_graph_event_stream_is_deterministic_and_valid():
+    g0 = ring_of_cliques(n_cliques=4, clique_size=5)
+
+    def take(n):
+        out = []
+        for e in graph_event_stream(g0, rate=50.0, seed=13):
+            out.append(e)
+            if len(out) == n:
+                return out
+    a, b = take(200), take(200)
+    assert a == b                                       # same seed, same tape
+    assert all(x.t <= y.t for x, y in zip(a, a[1:]))    # nondecreasing time
+    minted = [e.u for e in a if e.kind == "vertex_add"]
+    assert len(minted) == len(set(minted))              # ids never reused
+    assert all(e.u >= int(g0.n_nodes) for e in a if e.kind == "vertex_add")
+
+
+def test_planted_script_shape_and_determinism():
+    g0, windows, expected = planted_timeline_script()
+    g0b, windows_b, _ = planted_timeline_script()
+    assert windows == windows_b
+    assert expected == [[], ["merge"], ["split"], ["death"], ["birth"]]
+    assert len(windows) == 5 and windows[0] == []
+    for i, evs in enumerate(windows):
+        for e in evs:
+            assert i * 1.0 < e.t < (i + 1) * 1.0        # inside the window
+    with pytest.raises(ValueError):
+        planted_timeline_script(clique=2)
