@@ -32,7 +32,7 @@ import asyncio
 
 import numpy as np
 
-from repro.core import LouvainConfig, louvain
+from repro.core import DetectOptions, LouvainConfig, louvain
 from repro.graph import sbm_graph
 from repro.service import (
     AsyncCommunityService, CommunityService, QueueFull, ServiceConfig,
@@ -48,7 +48,8 @@ def ego(uid: int):
 
 async def main_async():
     config = ServiceConfig(
-        louvain=LouvainConfig(), batch_size=8, max_delay_s=0.02,
+        detect=DetectOptions(louvain=LouvainConfig()),
+        batch_size=8, max_delay_s=0.02,
         max_pending_per_tenant=6, store_max_entries=64,
         tenant_weights=(("feed", 2.0), ("ads", 1.0)),  # feed gets 2x share
     )

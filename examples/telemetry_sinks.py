@@ -29,7 +29,7 @@ import urllib.request
 
 import numpy as np
 
-from repro.core import LouvainConfig
+from repro.core import DetectOptions, LouvainConfig
 from repro.graph import sbm_graph
 from repro.service import CommunityService, ServiceConfig
 from repro.telemetry import MetricSink, metric_names, parse_prometheus
@@ -76,7 +76,8 @@ def main():
     jsonl = tempfile.NamedTemporaryFile(
         mode="w", suffix=".jsonl", delete=False)
     cfg = ServiceConfig(
-        louvain=LouvainConfig(), batch_size=4, max_delay_s=0.01,
+        detect=DetectOptions(louvain=LouvainConfig()),
+        batch_size=4, max_delay_s=0.01,
         telemetry_enabled=True,          # in-memory sink (the default)
         telemetry_jsonl=jsonl.name,      # + JSONL event log
         exporter_port=0,                 # + /metrics on an ephemeral port

@@ -33,7 +33,7 @@ import numpy as np
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
 
-from repro.core import LouvainConfig, louvain  # noqa: E402
+from repro.core import DetectOptions, LouvainConfig, louvain  # noqa: E402
 from repro.graph import sbm_graph  # noqa: E402
 from repro.graph.container import repad  # noqa: E402
 from repro.service.buckets import _CALIB_FILE  # noqa: E402
@@ -67,9 +67,11 @@ def measure(nv_rungs, densities, repeats):
             if int(g.num_edges()) > m_cap:
                 continue
             g = repad(g, n_cap, m_cap)
-            t_dense = _bench(lambda: louvain(g, CFG, scan="dense")[0],
-                             repeats)
-            t_sort = _bench(lambda: louvain(g, CFG, scan="sort")[0], repeats)
+            t_dense = _bench(
+                lambda: louvain(g, options=DetectOptions(
+                    louvain=CFG, scan="dense"))[0], repeats)
+            t_sort = _bench(lambda: louvain(g, options=DetectOptions(
+                louvain=CFG, scan="sort"))[0], repeats)
             rows.append(dict(n_cap=n_cap, m_cap=m_cap,
                              density=round(m_cap / nv / nv, 5),
                              t_dense_ms=round(t_dense * 1e3, 2),

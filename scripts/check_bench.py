@@ -62,6 +62,10 @@ INFORMATIONAL = {
     "phase_share_queue": "phase_share_queue",
     "phase_share_engine": "phase_share_engine",
     "phase_share_host": "phase_share_host",
+    # forced-host 2-device mesh shares cores: overhead ceiling, not a
+    # speedup — parity (bit-identical partitions) is asserted in-bench
+    "speedup_sharded_2dev": "sharded_2dev_speedup",
+    "sharded_parity": "sharded_parity",
 }
 # CSV rows whose derived field leads with "<x> graphs/s"; recorded in the
 # snapshot for trend visibility, NOT gated (absolute wall-clock collapses

@@ -6,7 +6,7 @@
 # Tiers:
 #   tier1  — the full pytest suite (ROADMAP's tier-1 verify).  Fast-ish,
 #            deterministic; runs on every push/PR (.github/workflows/ci.yml).
-#   smoke  — the five serve_communities end-to-end smokes: the sync pump
+#   smoke  — the six serve_communities end-to-end smokes: the sync pump
 #            driver, the async multi-tenant driver, the fully-dynamic
 #            churn driver (edge deletions AND vertex additions/removals
 #            through the batched warm path, with the vertex round-trip /
@@ -17,7 +17,11 @@
 #            counters), and the temporal-tracking stream driver (planted
 #            merge/split/death/birth lifecycle script + removal-heavy
 #            event stream with deferred compaction through the windowed
-#            snapshot path).  Also in the GitHub workflow.
+#            snapshot path), and the sharded driver (single-graph
+#            detection over a 2-device forced-host mesh: bit-identical
+#            parity + zero-disconnected asserted, halo-exchange counters
+#            scraped from the live Prometheus exporter).  Also in the
+#            GitHub workflow.
 #   bench  — acceptance benchmarks + regression check: scripts/check_bench.py
 #            runs benchmarks/bench_service.py + bench_kernels.py, enforces
 #            the speedup bars, writes benchmarks/BENCH_service.json and
@@ -50,6 +54,8 @@ run_smoke() {
   python -m repro.launch.serve_communities --replay --smoke
   echo "== stream (temporal tracking + deferred compaction) smoke =="
   python -m repro.launch.serve_communities --stream --smoke
+  echo "== sharded (2-device mesh parity + halo telemetry) smoke =="
+  python -m repro.launch.serve_communities --sharded --smoke
 }
 
 run_bench() {

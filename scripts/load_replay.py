@@ -28,7 +28,7 @@ import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
 
-from repro.core import LouvainConfig                        # noqa: E402
+from repro.core import DetectOptions, LouvainConfig         # noqa: E402
 from repro.service.admission import ServiceConfig           # noqa: E402
 from repro.service.replay import (                          # noqa: E402
     ReplayConfig, run_replay, sweep_rates,
@@ -100,7 +100,7 @@ def main(argv=None):
         pool_size=args.pool, n_min=args.n_min, n_max=args.n_max,
         size_alpha=args.size_alpha, seed=args.seed, warm=not args.no_warm)
     config = ServiceConfig(
-        louvain=LouvainConfig(), batch_size=args.batch,
+        detect=DetectOptions(louvain=LouvainConfig()), batch_size=args.batch,
         max_delay_s=args.max_delay_ms / 1e3,
         max_pending_per_tenant=args.max_pending,
         telemetry_enabled=True)

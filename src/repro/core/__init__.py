@@ -13,12 +13,19 @@ from repro.core.lpa import lpa_run
 from repro.core.dynamic import (
     CapacityError, GraphUpdate, apply_vertex_updates, update_communities,
 )
+# the unified entry point (NOTE: rebinds the package attribute `detect`
+# from the submodule to the function — import the submodule explicitly
+# via `from repro.core.detect import ...` as everywhere in-repo)
+from repro.core.api import Detection, DetectOptions, detect
 
 __all__ = [
     "CapacityError",
+    "Detection",
+    "DetectOptions",
     "GraphUpdate",
     "LouvainConfig",
     "apply_vertex_updates",
+    "detect",
     "louvain",
     "louvain_impl",
     "louvain_staged",

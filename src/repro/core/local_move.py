@@ -121,9 +121,43 @@ def _hash_parity(ids, it):
     return ((h >> 13) & 1).astype(jnp.int32)
 
 
-def realized_modularity(src, dst, w, C, Sigma, two_m, owned, axis):
-    """Q of the current partition (directed-COO convention)."""
-    internal = col.psum(jnp.sum(jnp.where(C[src] == C[dst], w, 0.0)), axis)
+def realized_modularity(src, dst, w, C, Sigma, two_m, owned, axis,
+                        gidx=None, m_total=None):
+    """Q of the current partition (directed-COO convention).
+
+    Single-device (``axis=None``): one flat reduce over the masked edge
+    weights — this runs once per local-move sweep on the service hot path,
+    so it must stay a plain [m] reduction (a per-vertex scatter here costs
+    ~40% end-to-end on the batched dense engine).
+
+    Sharded with ``gidx`` (the production driver, core/distributed.py):
+    each shard scatters its masked weights to their **global edge slots**
+    (``gidx``, from the order-preserving vertex-aligned partition; padding
+    routes to the dump slot ``m_total``) and the ``psum`` merge only adds
+    disjoint-support zeros (``x + 0.0 == x`` for the non-negative values
+    here) — the replicated ``[m_total]`` vector is bitwise the
+    single-device masked-weight vector, and the same flat reduce over it
+    matches the single-device scalar ulp-for-ulp.  A psum of per-shard
+    *scalar* partials would merge in a different order than the
+    single-device fold and break the exact parity contract.
+
+    Sharded without ``gidx`` (the approximate multi-device harness): fall
+    back to per-vertex grouping — K_in is exact shard-locally under the
+    vertex-aligned partition, so the psum is still exact, but the final
+    [nv] reduce is NOT the single-device fold order.
+    """
+    w_in = jnp.where(C[src] == C[dst], w, 0.0)
+    if axis is None:
+        internal = jnp.sum(w_in)
+    elif gidx is not None:
+        full = col.psum(
+            jax.ops.segment_sum(w_in, gidx, num_segments=m_total + 1), axis)
+        internal = jnp.sum(full[:m_total])
+    else:
+        nv = C.shape[0]
+        K_in = col.psum(
+            jax.ops.segment_sum(w_in, src, num_segments=nv), axis)
+        internal = jnp.sum(K_in)
     # Sigma is replicated; sum of squares is collective-free
     sig2 = jnp.sum(Sigma * Sigma)
     return internal / two_m - sig2 / (two_m * two_m)
@@ -234,11 +268,12 @@ def _half_sweep(src, dst, w, C, K, Sigma, two_m, owned, movable, axis,
     # --- exact Sigma recompute (synchronous) ------------------------------
     # unsorted keys (C_new): stays an in-order XLA scatter on every backend
     # — nv-sized, off the critical path, and in-order is what keeps Sigma
-    # bit-identical across seg_impls and the dense twin
-    Sigma_new = col.psum(
-        jax.ops.segment_sum(jnp.where(owned, K, 0.0), C_new, num_segments=nv),
-        axis,
-    )
+    # bit-identical across seg_impls and the dense twin.  K and C_new are
+    # replicated here, so every shard recomputes the full Sigma identically
+    # and collective-free; a psum of owned-masked partials would fold
+    # cross-shard in a different order than the single-device scatter and
+    # break the ulp-exact sharded parity contract.
+    Sigma_new = jax.ops.segment_sum(K, C_new, num_segments=nv)
     gain = col.psum(jnp.sum(jnp.where(owned & move, best, 0.0)), axis)
     want = col.pmax((want & owned).astype(jnp.int32), axis) > 0
     return C_new, Sigma_new, moved, gain, want
@@ -315,10 +350,9 @@ def _half_sweep_scatter(src, dst, w, C, K, Sigma, two_m, owned, movable, axis,
     moved = col.psum(jnp.where(owned & move, 1, 0).astype(jnp.int32), axis) > 0
 
     # --- exact Sigma recompute (synchronous) ------------------------------
-    Sigma_new = col.psum(
-        jax.ops.segment_sum(jnp.where(owned, K, 0.0), C_new, num_segments=nv),
-        axis,
-    )
+    # replicated (K, C_new) -> collective-free, bit-identical to the
+    # single-device scatter (see _half_sweep)
+    Sigma_new = jax.ops.segment_sum(K, C_new, num_segments=nv)
     gain = col.psum(jnp.sum(jnp.where(owned & move, best, 0.0)), axis)
     want = col.pmax((want & owned).astype(jnp.int32), axis) > 0
     return C_new, Sigma_new, moved, gain, want
@@ -400,18 +434,14 @@ def _half_sweep_dense(src, dst, w, C, K, Sigma, two_m, owned, movable, axis,
         C_new = C_new.at[ghost].set(ghost)
         moved = col.psum(
             jnp.where(owned & move, 1, 0).astype(jnp.int32), axis) > 0
-        Sigma_new = col.psum(
-            jax.ops.segment_sum(
-                jnp.where(owned, K, 0.0), C_new, num_segments=nv),
-            axis,
-        )
+        Sigma_new = jax.ops.segment_sum(K, C_new, num_segments=nv)
         gain = col.psum(jnp.sum(jnp.where(owned & move, best, 0.0)), axis)
         want = col.pmax((want & owned).astype(jnp.int32), axis) > 0
     return C_new, Sigma_new, moved, gain, want
 
 
 @partial(jax.jit, static_argnames=("max_iters", "sync", "prune", "axis",
-                                   "scan", "seg_impl", "block_m"))
+                                   "scan", "seg_impl", "block_m", "m_total"))
 def local_move(
     src,
     dst,
@@ -432,6 +462,8 @@ def local_move(
     adj=None,
     seg_impl: str = "auto",
     block_m: int = 0,
+    gidx=None,
+    m_total=None,
 ):
     """Run the local-moving phase to convergence.
 
@@ -456,6 +488,11 @@ def local_move(
     ``adj`` (bool[nv, nv] or None, dense scan only): precomputed edge
     adjacency; lets the pass driver amortize one scatter across the
     local-move and split phases.
+
+    ``gidx`` / ``m_total`` (sharded only): global edge slots of this
+    shard's edges and the global edge capacity — lets the per-sweep
+    modularity reduce exactly reproduce the single-device fold (see
+    :func:`realized_modularity`).  ``m_total`` is static.
     """
     nv = C0.shape[0]
     ghost = nv - 1
@@ -504,7 +541,8 @@ def local_move(
                 target_ok=target_ok, anchored=(ph is not None), **sweep_kw,
             )
             moved_any = moved_any | moved
-        q_now = realized_modularity(src, dst, w, C, Sigma, two_m, owned, axis)
+        q_now = realized_modularity(src, dst, w, C, Sigma, two_m, owned, axis,
+                                    gidx, m_total)
         if prune:
             # neighbors of moved vertices wake up; everyone else sleeps
             if scan == "dense":
@@ -544,7 +582,8 @@ def local_move(
         return (warmup | progress) & (state.it < max_iters) & ~no_skip
 
     C_init = C0.astype(jnp.int32).at[ghost].set(ghost)
-    q0 = realized_modularity(src, dst, w, C_init, Sigma0, two_m, owned, axis)
+    q0 = realized_modularity(src, dst, w, C_init, Sigma0, two_m, owned, axis,
+                             gidx, m_total)
     init = MoveState(
         C=C_init,
         Sigma=Sigma0,

@@ -72,7 +72,7 @@ def _split_mode(split: str) -> str:
 
 def refine_labels(src, dst, w, C, two_m, *, tau, max_iters=10, axis=None,
                   owned=None, scan="sort", skip=None, seg_impl="auto",
-                  block_m=0):
+                  block_m=0, gidx=None, m_total=None):
     """Leiden refinement: local-move from singletons restricted to each
     community's bound — implemented as local_move over the community-masked
     edge set (cross-community weights zeroed), scored against the full-graph
@@ -93,6 +93,7 @@ def refine_labels(src, dst, w, C, two_m, *, tau, max_iters=10, axis=None,
         src, dst, w_in, C0, K_in, K_in, two_m,
         tau=tau, max_iters=max_iters, axis=axis, owned=owned, scan=scan,
         skip=skip, seg_impl=seg_impl, block_m=block_m,
+        gidx=gidx, m_total=m_total,
     )
     return R
 
@@ -221,9 +222,58 @@ def louvain_impl(g: Graph, cfg: LouvainConfig = LouvainConfig(), *, axis=None,
     return Ctop, stats
 
 
-louvain = partial(
+_louvain_jit = partial(
     jax.jit, static_argnames=("cfg", "axis", "scan", "seg_impl", "block_m")
 )(louvain_impl)
+
+
+def louvain(g: Graph, cfg: LouvainConfig | None = None, *, options=None,
+            mesh=None, telemetry=None, axis=None, owned=None, scan=None,
+            seg_impl=None, block_m=None, _no_warn: bool = False):
+    """Jitted GSP-Louvain — the public driver.
+
+    Preferred call shapes:
+      ``louvain(g, cfg)``                      — single device, defaults;
+      ``louvain(g, options=DetectOptions(...))`` — full knob record;
+      ``louvain(g, cfg, mesh=mesh_or_int)``    — sharded single-graph path
+        (core/distributed.py): bit-identical partition to single-device.
+
+    Flat keywords ``scan=``/``seg_impl=``/``block_m=`` keep working via
+    the deprecation shim (warns once; see core/api.py).  ``axis``/
+    ``owned`` are the expert shard_map pass-throughs and stay silent.
+    """
+    from repro.core.api import fold_legacy_kwargs
+    if options is not None:
+        if cfg is not None:
+            raise TypeError(
+                "louvain(): pass the config inside options= "
+                "(DetectOptions(louvain=cfg)), not both")
+        opts = options
+    else:
+        opts = fold_legacy_kwargs(
+            None, dict(scan=scan, seg_impl=seg_impl, block_m=block_m),
+            where="louvain()", warn=not _no_warn)
+        if cfg is not None:
+            opts = opts.replace(louvain=cfg)
+    if mesh is not None:
+        opts = opts.replace(mesh=mesh)
+    mesh = opts.resolved_mesh()
+    if mesh is not None:
+        if axis is not None or owned is not None:
+            raise ValueError(
+                "louvain(mesh=...) is incompatible with axis=/owned=")
+        if opts.scan == "dense":
+            raise ValueError("scan='dense' is single-device only")
+        from repro.core.distributed import louvain_sharded
+        return louvain_sharded(g, opts.louvain, mesh=mesh,
+                               seg_impl=opts.seg_impl, block_m=opts.block_m,
+                               telemetry=telemetry)
+    # 'auto' keeps the historical direct-call default: the sortscan layout
+    # (the dense crossover is the service engine's bucketed decision —
+    # resolve via DetectOptions.resolved_scan there)
+    scan = "sort" if opts.scan == "auto" else opts.scan
+    return _louvain_jit(g, opts.louvain, axis=axis, owned=owned, scan=scan,
+                        seg_impl=opts.seg_impl, block_m=opts.block_m)
 
 
 # --------------------------------------------------------------------------

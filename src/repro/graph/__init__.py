@@ -19,7 +19,9 @@ from repro.graph.generators import (
     grid_graph,
     random_regular_graph,
 )
-from repro.graph.partition import partition_edges_by_src, shard_graph
+from repro.graph.partition import (
+    partition_edges_by_src, reassemble_edges, shard_graph, shard_vertex_roles,
+)
 from repro.graph.sampler import neighbor_sample
 
 __all__ = [
@@ -38,6 +40,8 @@ __all__ = [
     "grid_graph",
     "random_regular_graph",
     "partition_edges_by_src",
+    "reassemble_edges",
     "shard_graph",
+    "shard_vertex_roles",
     "neighbor_sample",
 ]

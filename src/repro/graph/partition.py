@@ -9,6 +9,31 @@ and only per-vertex state needs collectives (DESIGN.md §4).
 edge counts (greedy prefix splitting), then pads every shard to the same
 static edge capacity so the result stacks into one ``[n_shards, m_shard]``
 array — directly shardable along axis 0 of a device mesh.
+
+Bit-exactness contract (what the sharded driver in core/distributed.py
+leans on): the container keeps edges sorted by ``(src, dst)`` — an
+invariant preserved by ``from_coo``/``repad``/``remap_vertices`` and by
+aggregation — so the contiguous per-shard slices taken here concatenate
+(padding dropped, shard order) back to the *exact* live-edge prefix scan
+of the single-device arrays: same edges, same order.  Every per-vertex
+run a shard sees is therefore byte-identical to the run the single-device
+sweep sees, which is what makes shard-local segment reductions fold in
+the same order as their single-device twins.  :func:`reassemble_edges`
+materializes that round trip (property-tested in tests/test_sharded.py).
+
+Vertex roles per shard (:func:`shard_vertex_roles`):
+
+* *owned*    — ``v_lo <= v < v_hi``: this shard holds ALL of v's
+  out-edges and is the single writer of v's per-vertex state.
+* *boundary* — owned with at least one cut out-edge (a neighbor owned
+  elsewhere); its community stats must be visible to other shards after
+  every half-sweep (the replicated-state merge).
+* *interior* — owned with every neighbor owned here; a shard-local
+  vertex whose halo traffic is zero.
+* *ghost*    — NOT owned but referenced as a neighbor (``dst``) by this
+  shard's edges: the halo copy whose label/Sigma the shard reads but
+  never writes.  (Distinct from the container's padding sentinel
+  ``n_cap``, which is excluded from all three sets.)
 """
 from __future__ import annotations
 
@@ -23,13 +48,33 @@ def partition_edges_by_src(g: Graph, n_shards: int) -> dict[str, np.ndarray]:
     Returns a dict of stacked numpy arrays:
       src, dst: int32[n_shards, m_shard]  (ghost-padded)
       w:        float32[n_shards, m_shard]
+      gidx:    int32[n_shards, m_shard] global edge slot of each live
+               edge in the container's arrays (the partition is
+               order-preserving, so these are contiguous ranges);
+               padding routes to the dump slot ``m_cap``
       v_lo, v_hi: int32[n_shards] owned vertex ranges [v_lo, v_hi)
+      m_valid: int32[n_shards] live (unpadded) edge count per shard
+      n_cap:   int32[] the container's padding sentinel / capacity
+      m_cap:   int32[] the container's edge capacity (gidx dump slot)
+
+    Works on numpy or jax graph leaves (PR-5 containers carry numpy
+    leaves until traced).  Live edges are exactly ``src < n_cap`` — the
+    container pads with the ghost sentinel; zero-weight tombstoned edges
+    are KEPT so shard-local folds see byte-identical per-vertex runs
+    (adding 0.0 is a no-op for the non-negative sums here, and zero-weight
+    runs are masked out of candidacy by the sweeps).
     """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
     src = np.asarray(g.src)
     dst = np.asarray(g.dst)
     w = np.asarray(g.w)
+    m_cap = src.shape[0]
     mask = src < g.n_cap
+    gidx = np.nonzero(mask)[0].astype(np.int32)
     src, dst, w = src[mask], dst[mask], w[mask]
+    if np.any(src[1:] < src[:-1]):
+        raise ValueError("edges not sorted by src: container invariant broken")
     m = src.shape[0]
     nv = g.nv
 
@@ -53,18 +98,70 @@ def partition_edges_by_src(g: Graph, n_shards: int) -> dict[str, np.ndarray]:
     S = np.full((n_shards, m_shard), ghost, np.int32)
     D = np.full((n_shards, m_shard), ghost, np.int32)
     W = np.zeros((n_shards, m_shard), np.float32)
+    G = np.full((n_shards, m_shard), m_cap, np.int32)
     for s, (e0, e1) in enumerate(per_shard):
         k = e1 - e0
         S[s, :k] = src[e0:e1]
         D[s, :k] = dst[e0:e1]
         W[s, :k] = w[e0:e1]
+        G[s, :k] = gidx[e0:e1]
     return dict(
         src=S,
         dst=D,
         w=W,
+        gidx=G,
         v_lo=np.asarray(bounds[:-1], np.int32),
         v_hi=np.asarray(bounds[1:], np.int32),
+        m_valid=np.asarray([e1 - e0 for e0, e1 in per_shard], np.int32),
+        n_cap=np.int32(g.n_cap),
+        m_cap=np.int32(m_cap),
     )
+
+
+def shard_vertex_roles(parts: dict[str, np.ndarray], s: int) -> dict:
+    """Classify shard ``s``'s vertices (see module docstring for the roles).
+
+    Returns sorted unique int32 id arrays ``owned`` / ``interior`` /
+    ``boundary`` / ``ghosts`` plus the halo sizes the telemetry reports:
+    ``n_ghosts`` (halo copies read) and ``n_cut_edges`` (edges whose
+    update crosses the shard boundary each half-sweep).
+    """
+    n_cap = int(parts["n_cap"])
+    lo, hi = int(parts["v_lo"][s]), int(parts["v_hi"][s])
+    k = int(parts["m_valid"][s])
+    src = np.asarray(parts["src"][s][:k])
+    dst = np.asarray(parts["dst"][s][:k])
+    owned = np.arange(lo, min(hi, n_cap), dtype=np.int32)
+    real_nbr = dst < n_cap  # padding sentinel never counts as a neighbor
+    cut = real_nbr & ((dst < lo) | (dst >= hi))
+    boundary = np.unique(src[cut]).astype(np.int32)
+    interior = np.setdiff1d(owned, boundary, assume_unique=True)
+    ghosts = np.unique(dst[cut]).astype(np.int32)
+    return dict(
+        owned=owned,
+        interior=interior,
+        boundary=boundary,
+        ghosts=ghosts,
+        n_ghosts=int(ghosts.shape[0]),
+        n_cut_edges=int(cut.sum()),
+    )
+
+
+def reassemble_edges(parts: dict[str, np.ndarray]):
+    """Invert :func:`partition_edges_by_src`: concatenate live shard slices.
+
+    Returns ``(src, dst, w)`` numpy arrays byte-identical to the
+    partitioned graph's live-edge prefix (same edges, same order) for ANY
+    shard count — the round-trip invariant the sharded parity tests pin.
+    """
+    ks = [int(k) for k in parts["m_valid"]]
+    src = np.concatenate([np.asarray(parts["src"][s][:k])
+                          for s, k in enumerate(ks)])
+    dst = np.concatenate([np.asarray(parts["dst"][s][:k])
+                          for s, k in enumerate(ks)])
+    w = np.concatenate([np.asarray(parts["w"][s][:k])
+                        for s, k in enumerate(ks)])
+    return src, dst, w
 
 
 def shard_graph(g: Graph, n_shards: int):

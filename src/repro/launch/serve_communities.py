@@ -53,11 +53,21 @@ landing in three buckets, plus warm edge updates):
   ``repro_timeline_snapshots_total``, ``repro_timeline_events_total``,
   ``repro_stream_lag_seconds_bucket``).
 
+* ``--sharded``: the distributed single-graph driver — detection sharded
+  over a 2-device forced-host CPU mesh through the engine's
+  ``detect_sharded`` mode (re-execs itself with
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=2`` when the host
+  exposes fewer devices).  ``--sharded --smoke`` asserts bit-identical
+  partitions vs the single-device driver on every graph family, zero
+  internally-disconnected communities, and a live exporter scrape
+  carrying the halo-exchange counters.
+
   PYTHONPATH=src python -m repro.launch.serve_communities --smoke
   PYTHONPATH=src python -m repro.launch.serve_communities --async --smoke
   PYTHONPATH=src python -m repro.launch.serve_communities --churn --smoke
   PYTHONPATH=src python -m repro.launch.serve_communities --replay --smoke
   PYTHONPATH=src python -m repro.launch.serve_communities --stream --smoke
+  PYTHONPATH=src python -m repro.launch.serve_communities --sharded --smoke
   PYTHONPATH=src python -m repro.launch.serve_communities \
       --async --tenants 4 --requests 200 --max-pending 12 --batch 16
 """
@@ -69,7 +79,7 @@ import time
 
 import numpy as np
 
-from repro.core import LouvainConfig
+from repro.core import DetectOptions, LouvainConfig
 from repro.graph import grid_graph, sbm_graph
 from repro.service import (
     AsyncCommunityService, CommunityService, GraphUpdate, QueueFull,
@@ -455,7 +465,7 @@ async def main_async(args):
     else:
         specs = tenant_specs(args.tenants, args.requests)
     config = ServiceConfig(
-        louvain=LouvainConfig(), batch_size=args.batch,
+        detect=DetectOptions(louvain=LouvainConfig()), batch_size=args.batch,
         max_delay_s=args.max_delay_ms / 1e3, sub_batch=args.sub_batch,
         max_pending_per_tenant=args.max_pending,
     )
@@ -545,7 +555,7 @@ async def main_replay_async(args):
         pool_size=8 if args.smoke else 24,
     )
     config = ServiceConfig(
-        louvain=LouvainConfig(), batch_size=args.batch,
+        detect=DetectOptions(louvain=LouvainConfig()), batch_size=args.batch,
         max_delay_s=args.max_delay_ms / 1e3, sub_batch=args.sub_batch,
         max_pending_per_tenant=args.max_pending,
         telemetry_enabled=True, exporter_port=0,
@@ -701,7 +711,7 @@ async def main_stream_async(args):
     from repro.telemetry.prometheus import metric_names, parse_prometheus
 
     config = ServiceConfig(
-        louvain=LouvainConfig(), batch_size=4,
+        detect=DetectOptions(louvain=LouvainConfig()), batch_size=4,
         max_delay_s=args.max_delay_ms / 1e3, sub_batch=args.sub_batch,
         update_batch_size=1,             # one window -> one snapshot
         timeline_enabled=True, compact_window=args.compact_window,
@@ -736,12 +746,115 @@ async def main_stream_async(args):
 
 # ---------------------------------------------------------------------------
 
+def main_sharded(args):
+    """Sharded single-graph detection end-to-end on a 2-device forced-host
+    CPU mesh: the engine's ``detect_sharded`` mode vs the single-device
+    driver, with live halo telemetry through the Prometheus exporter.
+
+    ``--sharded --smoke`` asserts the tentpole acceptance contract:
+    bit-identical partitions (labels AND modularity) on every graph
+    family, zero internally-disconnected communities on the reassembled
+    labeling, and a live ``/metrics`` scrape carrying the halo-exchange
+    counters (``repro_sharded_halo_bytes_total``,
+    ``repro_sharded_ghost_vertices``,
+    ``repro_sharded_device_sweeps_total``).
+    """
+    import os
+    import subprocess
+    import sys
+    import urllib.request
+
+    import jax
+
+    if len(jax.devices()) < 2:
+        # jax pins the host device count at first backend init — re-exec
+        # with the forced-host flag so the mesh actually has 2 devices
+        env = dict(os.environ)
+        flags = env.get("XLA_FLAGS", "")
+        env["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count=2".strip())
+        cmd = [sys.executable, "-m", "repro.launch.serve_communities",
+               "--sharded"] + (["--smoke"] if args.smoke else [])
+        raise SystemExit(subprocess.run(cmd, env=env).returncode)
+
+    from repro.core import (
+        DetectOptions, disconnected_communities, louvain, modularity,
+    )
+    from repro.graph import ring_of_cliques
+    from repro.service.engine import BatchedLouvainEngine
+    from repro.telemetry.prometheus import (
+        MetricsExporter, metric_names, parse_prometheus,
+    )
+    from repro.telemetry.sinks import InMemorySink, Telemetry
+
+    tel = Telemetry()
+    sink = tel.register(InMemorySink())
+    exporter = MetricsExporter(sink, port=0)
+    cfg = LouvainConfig()
+    engine = BatchedLouvainEngine(
+        options=DetectOptions(louvain=cfg, mesh=2), telemetry=tel)
+    graphs = [
+        ("ring", ring_of_cliques(n_cliques=12, clique_size=6)),
+        ("sbm", sbm_graph(n_nodes=220, n_blocks=5, p_in=0.4, p_out=0.02,
+                          seed=args.seed)[0]),
+        ("grid", grid_graph(12, 16)),
+    ]
+    report = {"graphs": [], "halo_bytes": 0.0}
+    for name, g in graphs:
+        t0 = time.perf_counter()
+        res = engine.detect_sharded(g)
+        t_sharded = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        C1, _ = louvain(g, cfg)
+        t_single = time.perf_counter() - t0
+        C1 = np.asarray(C1)
+        match = bool(np.array_equal(C1, res.C))
+        q1 = float(modularity(g.src, g.dst, g.w, C1))
+        det = disconnected_communities(g.src, g.dst, g.w, res.C, g.n_nodes)
+        row = dict(graph=name, match=match, n_communities=res.n_communities,
+                   n_disconnected=int(det["n_disconnected"]),
+                   q_sharded=res.q, q_single=q1,
+                   t_sharded_s=t_sharded, t_single_s=t_single)
+        report["graphs"].append(row)
+        print(f"{name:>6}: parity={'OK' if match else 'MISMATCH'} "
+              f"comms={res.n_communities} disc={row['n_disconnected']} "
+              f"q={res.q:.4f} sharded={t_sharded * 1e3:.0f}ms "
+              f"single={t_single * 1e3:.0f}ms")
+
+    # scrape the LIVE endpoint (not sink internals): the counters must
+    # survive the full render -> HTTP -> parse loop operators rely on
+    body = urllib.request.urlopen(exporter.url, timeout=10).read().decode()
+    parsed = parse_prometheus(body)
+    names = metric_names(parsed)
+    halo = sum(v for (n, lk), v in parsed.items()
+               if n == "repro_sharded_halo_bytes_total")
+    report["halo_bytes"] = halo
+    print(f"scraped {exporter.url}: {len(parsed)} samples, "
+          f"halo bytes {halo:.0f}")
+    exporter.close()
+
+    if args.smoke:
+        assert all(r["match"] for r in report["graphs"]), report["graphs"]
+        assert all(r["q_sharded"] == r["q_single"]
+                   for r in report["graphs"]), report["graphs"]
+        assert all(r["n_disconnected"] == 0 for r in report["graphs"])
+        for want in ("repro_sharded_halo_bytes_total",
+                     "repro_sharded_ghost_vertices",
+                     "repro_sharded_cut_edges",
+                     "repro_sharded_device_sweeps_total"):
+            assert want in names, f"{want} missing from scrape: {sorted(names)[:20]}"
+        assert halo > 0, "halo-exchange byte counter never incremented"
+        print(f"SHARDED SMOKE OK ({len(report['graphs'])} graphs "
+              f"bit-identical on a 2-device mesh)")
+    return report
+
+
 def main_churn(args):
     n_graphs = 9 if args.smoke else max(9, args.requests // 4)
     n_rounds = 6 if args.smoke else args.rounds
     update_batch = args.update_batch or args.batch
     config = ServiceConfig(
-        louvain=LouvainConfig(), batch_size=args.batch,
+        detect=DetectOptions(louvain=LouvainConfig()), batch_size=args.batch,
         max_delay_s=args.max_delay_ms / 1e3, sub_batch=args.sub_batch,
         update_batch_size=update_batch,
     )
@@ -795,6 +908,11 @@ def main(argv=None):
                     help="temporal-tracking driver: planted lifecycle "
                          "script + removal-heavy event stream with "
                          "deferred compaction (async service)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="sharded single-graph detection on a 2-device "
+                         "forced-host mesh: bit-identical parity vs the "
+                         "single-device driver + live halo-telemetry "
+                         "scrape (re-execs with XLA_FLAGS if needed)")
     ap.add_argument("--compact-window", type=int, default=4,
                     help="deferred-compaction threshold for --stream "
                          "(0 = compact immediately)")
@@ -829,6 +947,9 @@ def main(argv=None):
         args.update_frac = 0.35
         if not args.async_:
             args.requests = 36
+
+    if args.sharded:
+        return main_sharded(args)
 
     if args.replay:
         if args.smoke:

@@ -32,6 +32,7 @@ import time
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core import LouvainConfig
+from repro.core.api import DetectOptions, fold_legacy_kwargs
 from repro.graph.container import Graph
 from repro.service.buckets import Bucket, DEFAULT_BUCKETS
 
@@ -49,7 +50,11 @@ class ServiceConfig:
     """All service-layer configuration in one place.
 
     Engine/dispatch:
-      louvain:     the one LouvainConfig the engine serves.
+      detect:      the :class:`repro.core.DetectOptions` record — algorithm
+                   config (``detect.louvain``), scan strategy, dense
+                   crossover, segment-reduction backend and Pallas block.
+                   Engine and store compile keys derive from this one
+                   hashable record (:meth:`DetectOptions.cache_key`).
       buckets:     static (n_cap, m_cap) admission ladder (sorted).
       batch_size:  dispatch width per bucket batch.
       max_delay_s: tail-latency bound — a bucket flushes a partial batch
@@ -67,16 +72,12 @@ class ServiceConfig:
       update_max_delay_s: flush bound for a partial update batch; None
                    inherits ``max_delay_s``.
 
-    Dense/sort scan crossover (see :func:`repro.service.buckets.choose_scan`):
-      dense_max_nv / dense_small_nv / dense_min_density (None = the
-      measured backend-keyed crossover; scripts/calibrate_dense_scan.py).
-
-    Segment-reduction backend (see :mod:`repro.kernels.ops`):
-      seg_impl:    'auto' | 'xla' | 'pallas' | 'scatter' for sortscan
-                   buckets; 'auto' picks XLA on CPU, Pallas on TPU.
-                   Bit-identical results across choices.
-      seg_block_m: Pallas kernel block rows; None = per-bucket autotuned
-                   (kernels/autotune.py on-disk cache).
+    Deprecated flat knobs (``louvain``, ``dense_max_nv``, ``dense_small_nv``,
+    ``dense_min_density``, ``seg_impl``, ``seg_block_m``): accepted as
+    constructor keywords for PR<=7 compatibility and folded into ``detect``
+    through the deprecation shim (one warning per process); they also stay
+    readable as properties that resolve off ``detect``.  New code passes
+    ``detect=DetectOptions(...)``.
 
     Admission:
       max_pending_per_tenant: queue bound per tenant (backpressure).
@@ -129,18 +130,13 @@ class ServiceConfig:
                    0 = immediate compaction (PR 5 semantics).
     """
 
-    louvain: LouvainConfig = dataclasses.field(default_factory=LouvainConfig)
+    detect: DetectOptions = dataclasses.field(default_factory=DetectOptions)
     buckets: Tuple[Bucket, ...] = DEFAULT_BUCKETS
     batch_size: int = 32
     max_delay_s: float = 0.05
     sub_batch: Optional[int] = None
     update_batch_size: int = 1
     update_max_delay_s: Optional[float] = None
-    dense_max_nv: int = 1025
-    dense_small_nv: int = 129
-    dense_min_density: Optional[float] = None
-    seg_impl: str = "auto"
-    seg_block_m: Optional[int] = None
     max_pending_per_tenant: int = 64
     tenant_weights: Tuple[Tuple[str, float], ...] = ()
     store_max_entries: Optional[int] = None
@@ -157,8 +153,29 @@ class ServiceConfig:
     timeline_max_rows: int = 256
     timeline_max_communities: int = 4096
     compact_window: int = 0
+    # deprecated flat detection knobs (PR<=7 spelling) — folded into
+    # ``detect`` by __post_init__ through the one-warning shim; read back
+    # via the compatibility properties installed after the class body
+    louvain: dataclasses.InitVar[Optional[LouvainConfig]] = None
+    dense_max_nv: dataclasses.InitVar[Optional[int]] = None
+    dense_small_nv: dataclasses.InitVar[Optional[int]] = None
+    dense_min_density: dataclasses.InitVar[Optional[float]] = None
+    seg_impl: dataclasses.InitVar[Optional[str]] = None
+    seg_block_m: dataclasses.InitVar[Optional[int]] = None
 
-    def __post_init__(self):
+    def __post_init__(self, louvain, dense_max_nv, dense_small_nv,
+                      dense_min_density, seg_impl, seg_block_m):
+        legacy = dict(louvain=louvain, dense_max_nv=dense_max_nv,
+                      dense_small_nv=dense_small_nv,
+                      dense_min_density=dense_min_density,
+                      seg_impl=seg_impl, seg_block_m=seg_block_m)
+        if any(v is not None for v in legacy.values()):
+            # a default-valued detect= counts as "not passed" so the shim's
+            # options-vs-legacy exclusivity check stays meaningful
+            base = None if self.detect == DetectOptions() else self.detect
+            object.__setattr__(
+                self, "detect",
+                fold_legacy_kwargs(base, legacy, where="ServiceConfig"))
         if self.batch_size < 1:
             raise ValueError(f"batch_size must be >= 1, got {self.batch_size}")
         if self.update_batch_size < 1:
@@ -186,6 +203,22 @@ class ServiceConfig:
                 raise ValueError(
                     f"{knob} must be >= 1, got {getattr(self, knob)}")
         object.__setattr__(self, "buckets", tuple(sorted(self.buckets)))
+
+
+# Backward-compatible reads: PR<=7 code addressed the flat knobs directly
+# (``cfg.louvain``, ``cfg.seg_impl``, ...).  They now resolve off the
+# composed ``detect`` record.  Installed after the class body because the
+# names double as deprecated InitVar constructor keywords above.
+ServiceConfig.louvain = property(lambda self: self.detect.louvain)
+ServiceConfig.dense_max_nv = property(lambda self: self.detect.dense_max_nv)
+ServiceConfig.dense_small_nv = property(
+    lambda self: self.detect.dense_small_nv)
+ServiceConfig.dense_min_density = property(
+    lambda self: self.detect.dense_min_density)
+ServiceConfig.seg_impl = property(lambda self: self.detect.seg_impl)
+# block_m 0 = "autotune/default", the old field spelled that None
+ServiceConfig.seg_block_m = property(
+    lambda self: self.detect.block_m if self.detect.block_m else None)
 
 
 @dataclasses.dataclass

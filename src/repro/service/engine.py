@@ -48,11 +48,12 @@ import numpy as np
 from repro.core import (
     LouvainConfig, disconnected_communities_impl, louvain_impl, modularity,
 )
+from repro.core.api import DetectOptions, fold_legacy_kwargs
 from repro.core.dynamic import warm_update_impl
 from repro.graph.container import Graph, stack_graphs
 from repro.kernels import ops
 from repro.kernels.autotune import autotune_block_m
-from repro.service.buckets import Bucket, bucket_of, choose_scan, filler
+from repro.service.buckets import Bucket, bucket_of, filler
 from repro.telemetry.sinks import Telemetry
 
 
@@ -121,48 +122,59 @@ UpdateItem = Tuple[Graph, np.ndarray, np.ndarray]
 class BatchedLouvainEngine:
     """Vmapped GSP-Louvain over stacked same-bucket graphs."""
 
-    def __init__(self, cfg: LouvainConfig = LouvainConfig(), *,
-                 dense_max_nv: int = 1025, dense_small_nv: int = 129,
-                 dense_min_density: Optional[float] = None,
+    def __init__(self, cfg: Optional[LouvainConfig] = None, *,
+                 options: Optional[DetectOptions] = None,
                  sub_batch: Optional[int] = None,
-                 seg_impl: str = "auto",
-                 seg_block_m: Optional[int] = None,
                  telemetry: Optional[Telemetry] = None,
-                 profile_dir: Optional[str] = None):
+                 profile_dir: Optional[str] = None,
+                 dense_max_nv: Optional[int] = None,
+                 dense_small_nv: Optional[int] = None,
+                 dense_min_density: Optional[float] = None,
+                 seg_impl: Optional[str] = None,
+                 seg_block_m: Optional[int] = None):
         """Args:
-          cfg: the one Louvain config this engine serves (part of the
+          cfg: the one Louvain config this engine serves (part of every
             compile key; run several engines for several configs).
-          dense_max_nv / dense_small_nv / dense_min_density: the dense-vs-
-            sortscan crossover model (:func:`repro.service.buckets.
-            choose_scan`): dense kernels for small or dense buckets,
-            sortscan for sparse large buckets where m_cap / nv^2 falls
-            under ``dense_min_density`` (None = the measured, backend-keyed
-            crossover from scripts/calibrate_dense_scan.py).
+            Convenience positional for ``options.louvain`` — pass one or
+            the other, not both.
+          options: the :class:`repro.core.DetectOptions` record selecting
+            scan strategy, dense crossover, segment-reduction backend,
+            Pallas block and (for :meth:`detect_sharded`) the device mesh.
+            Compile keys derive from it via
+            :meth:`DetectOptions.cache_key`.
           sub_batch: dispatch width; None = auto (cache-sized on CPU, wide
             on accelerators).
-          seg_impl: segment-reduction backend for sortscan buckets
-            ('auto' | 'xla' | 'pallas' | 'scatter' — kernels/ops.py;
-            'auto' is backend-keyed: XLA on CPU, Pallas on TPU).  Part of
-            every compile key; bit-identical results across choices.
-          seg_block_m: Pallas kernel block rows; None = per-bucket
-            autotuned (kernels/autotune.py, on-disk cache — the kernel
-            ladder next to this engine's tile ladder).
           telemetry: optional hub for compile-cache hit/miss counters,
             algorithm counters (passes/sweeps/affected/split-moves) and
             the bucket fill-factor gauge; None = no emission.
           profile_dir: when set, every dispatch runs inside
             ``jax.profiler.trace(profile_dir)`` for on-device deep dives
             (TensorBoard-viewable; expensive — opt-in only).
+          dense_max_nv / dense_small_nv / dense_min_density / seg_impl /
+            seg_block_m: DEPRECATED flat spellings of the DetectOptions
+            fields; folded through the shim (one warning per process).
         """
-        self.cfg = cfg
-        self.dense_max_nv = dense_max_nv
-        self.dense_small_nv = dense_small_nv
-        self.dense_min_density = dense_min_density
+        legacy = dict(dense_max_nv=dense_max_nv,
+                      dense_small_nv=dense_small_nv,
+                      dense_min_density=dense_min_density,
+                      seg_impl=seg_impl, seg_block_m=seg_block_m)
+        opts = fold_legacy_kwargs(options, legacy,
+                                  where="BatchedLouvainEngine")
+        if cfg is not None:
+            if options is not None:
+                raise TypeError(
+                    "BatchedLouvainEngine: pass the algorithm config inside "
+                    "options=DetectOptions(louvain=...), not both cfg= and "
+                    "options=")
+            opts = opts.replace(louvain=cfg)
+        # resolve 'auto' once: the resolved backend is what compile keys,
+        # kernels and the autotuner must agree on for this engine's lifetime
+        self.options = opts.replace(seg_impl=ops.resolve_impl(opts.seg_impl))
+        self.cfg = self.options.louvain
         if sub_batch is None:
             sub_batch = 1 if jax.default_backend() == "cpu" else 8
         self.sub_batch = max(1, int(sub_batch))
-        self.seg_impl = ops.resolve_impl(seg_impl)
-        self.seg_block_m = seg_block_m
+        self.seg_impl = self.options.seg_impl
         self.telemetry = telemetry or Telemetry()
         self.profile_dir = profile_dir
         self.n_compile_hits = 0
@@ -208,21 +220,18 @@ class BatchedLouvainEngine:
 
     # -- compile cache ----------------------------------------------------
     def scan_for(self, bucket: Bucket) -> str:
-        return choose_scan(
-            bucket.nv, bucket.m_cap, dense_max_nv=self.dense_max_nv,
-            dense_small_nv=self.dense_small_nv,
-            dense_min_density=self.dense_min_density)
+        return self.options.resolved_scan(bucket.nv, bucket.m_cap)
 
     def seg_block_for(self, bucket: Bucket) -> int:
-        """The Pallas block size for a bucket: the pinned ``seg_block_m``
-        if given, else the autotuned value for the bucket's edge capacity
-        (cached on disk; 0 — i.e. backend-irrelevant — for non-Pallas
-        impls).  Recorded in the compile key either way so an impl or
-        block change recompiles."""
+        """The Pallas block size for a bucket: the pinned
+        ``options.block_m`` if nonzero, else the autotuned value for the
+        bucket's edge capacity (cached on disk; 0 — i.e.
+        backend-irrelevant — for non-Pallas impls).  Recorded in the
+        compile key either way so an impl or block change recompiles."""
         if self.seg_impl != "pallas":
             return 0
-        if self.seg_block_m is not None:
-            return int(self.seg_block_m)
+        if self.options.block_m:
+            return int(self.options.block_m)
         blk = self._seg_blocks.get(bucket)
         if blk is None:
             blk = autotune_block_m(bucket.m_cap, 2, impl=self.seg_impl)
@@ -251,8 +260,9 @@ class BatchedLouvainEngine:
         )
 
     def _detect_key(self, bucket: Bucket, n_tiles: int):
-        return (bucket, n_tiles, self.sub_batch, self.scan_for(bucket),
-                self.seg_impl, self.seg_block_for(bucket))
+        return self.options.cache_key(
+            bucket, n_tiles, self.sub_batch,
+            scan=self.scan_for(bucket), block_m=self.seg_block_for(bucket))
 
     def compiled_fn(self, bucket: Bucket, n_tiles: int):
         """The jitted executable for (bucket, n_tiles x sub_batch): a
@@ -270,9 +280,10 @@ class BatchedLouvainEngine:
         return fn
 
     def _update_key(self, bucket: Bucket, n_tiles: int, tau, max_iters):
-        return (bucket, n_tiles, self.sub_batch, self.scan_for(bucket),
-                self.seg_impl, self.seg_block_for(bucket), "update",
-                float(tau), int(max_iters))
+        return self.options.cache_key(
+            bucket, n_tiles, self.sub_batch, "update", float(tau),
+            int(max_iters),
+            scan=self.scan_for(bucket), block_m=self.seg_block_for(bucket))
 
     def update_fn(self, bucket: Bucket, n_tiles: int, *, tau: float = 1e-3,
                   max_iters: int = 10):
@@ -378,6 +389,50 @@ class BatchedLouvainEngine:
 
     def detect_one(self, g: Graph) -> DetectResult:
         return self.detect_batch([g])[0]
+
+    def detect_sharded(self, g: Graph) -> DetectResult:
+        """Single-graph detection sharded over ``options.mesh`` — the
+        one-giant-graph mode for requests that dwarf the bucket ladder.
+
+        Routes through :func:`repro.core.distributed.louvain_sharded`
+        (vertex-aligned edge partitioning + halo exchange), which produces
+        the EXACT partition the single-device path returns for the same
+        config; the detector and modularity run single-device on the
+        reassembled labeling.  Telemetry (halo bytes, ghost counts,
+        per-device sweeps) flows through the engine's hub.
+        """
+        mesh = self.options.resolved_mesh()
+        if mesh is None:
+            raise ValueError(
+                "detect_sharded requires a mesh: construct the engine with "
+                "options=DetectOptions(mesh=...)")
+        from repro.core.distributed import louvain_sharded
+        t_start = time.perf_counter()
+        C, stats = louvain_sharded(
+            g, self.cfg, mesh=mesh, seg_impl=self.options.seg_impl,
+            block_m=self.options.block_m, telemetry=self.telemetry)
+        t_call1 = time.perf_counter()
+        det = disconnected_communities_impl(
+            g.src, g.dst, g.w, jnp.asarray(C), g.n_nodes,
+            seg_impl=self.seg_impl, block_m=self.options.block_m)
+        q = modularity(g.src, g.dst, g.w, jnp.asarray(C),
+                       seg_impl=self.seg_impl, block_m=self.options.block_m)
+        t_sync = time.perf_counter()
+        info = DispatchInfo(
+            kind="detect", bucket=bucket_of(g), n=1,
+            capacity=1, compile_hit=True, t_start=t_start, t_call0=t_start,
+            t_call1=t_call1, t_sync=t_sync)
+        self.last_detect_info = info
+        return DetectResult(
+            C=np.asarray(C),
+            n_communities=int(stats["n_communities"]),
+            n_disconnected=int(det["n_disconnected"]),
+            fraction=float(det["fraction"]),
+            passes=int(stats["passes"]),
+            q=float(q),
+            sweeps=int(stats["li_total"]),
+            split_moved=int(stats["split_moved"]),
+        )
 
     # -- batched warm updates ---------------------------------------------
     def update_batch(self, items: Sequence[UpdateItem], *, tau: float = 1e-3,

@@ -170,10 +170,7 @@ class ServiceFrontend:
             self.exporter = MetricsExporter(self.mem_sink,
                                             port=c.exporter_port)
         self.engine = BatchedLouvainEngine(
-            c.louvain, dense_max_nv=c.dense_max_nv,
-            dense_small_nv=c.dense_small_nv,
-            dense_min_density=c.dense_min_density, sub_batch=c.sub_batch,
-            seg_impl=c.seg_impl, seg_block_m=c.seg_block_m,
+            options=c.detect, sub_batch=c.sub_batch,
             telemetry=self.telemetry, profile_dir=c.profile_dir)
         self.admission = AdmissionController(
             c.buckets, batch_size=c.batch_size, max_delay_s=c.max_delay_s,
@@ -194,11 +191,9 @@ class ServiceFrontend:
                     max_communities=c.timeline_max_communities),
                 telemetry=self.telemetry)
         self.store = ResultStore(
-            dense_max_nv=c.dense_max_nv, dense_small_nv=c.dense_small_nv,
-            dense_min_density=c.dense_min_density,
+            options=c.detect,
             max_entries=c.store_max_entries, ttl_s=c.store_ttl_s,
-            clock=self.clock, seg_impl=c.seg_impl,
-            seg_block_m=c.seg_block_m or 0,
+            clock=self.clock,
             compact_window=c.compact_window,
             on_commit=(self._on_store_commit
                        if self.timelines is not None else None))

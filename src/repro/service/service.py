@@ -27,6 +27,7 @@ from __future__ import annotations
 from typing import Optional, Sequence
 
 from repro.core import LouvainConfig
+from repro.core.api import fold_legacy_kwargs
 from repro.graph.container import Graph
 from repro.service.admission import (
     DEFAULT_TENANT, QueueFull, ServiceConfig,
@@ -44,14 +45,19 @@ class CommunityService:
                  buckets: Sequence[Bucket] = DEFAULT_BUCKETS,
                  batch_size: int = 32, max_delay_s: float = 0.05,
                  sub_batch: Optional[int] = None,
-                 dense_max_nv: int = 1025, clock=None):
+                 dense_max_nv: Optional[int] = None, clock=None):
         """Either pass a full ``config=ServiceConfig(...)`` or the legacy
-        kwargs (which build one); ``config`` wins when both are given."""
+        kwargs (which build one); ``config`` wins when both are given.
+        ``dense_max_nv`` is the deprecated flat spelling of
+        ``DetectOptions(dense_max_nv=...)`` and folds through the shim."""
         if config is None:
+            detect = fold_legacy_kwargs(
+                None, dict(dense_max_nv=dense_max_nv),
+                where="CommunityService").replace(louvain=cfg)
             config = ServiceConfig(
-                louvain=cfg, buckets=tuple(buckets), batch_size=batch_size,
-                max_delay_s=max_delay_s, sub_batch=sub_batch,
-                dense_max_nv=dense_max_nv)
+                detect=detect, buckets=tuple(buckets),
+                batch_size=batch_size, max_delay_s=max_delay_s,
+                sub_batch=sub_batch)
         self.frontend = ServiceFrontend(config, clock=clock)
 
     # -- delegation --------------------------------------------------------

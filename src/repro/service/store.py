@@ -72,13 +72,14 @@ from typing import Dict, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.api import DetectOptions, fold_legacy_kwargs
 from repro.core.dynamic import (
     CapacityError, GraphUpdate, apply_edge_updates, apply_vertex_updates,
     as_update, check_vertex_ids, directed_deltas, gross_deleted,
     prepare_graph_update, tombstone_vertices, touched_mask, warm_update,
 )
 from repro.graph.container import Graph
-from repro.service.buckets import Bucket, bucket_of, choose_scan
+from repro.service.buckets import Bucket, bucket_of
 
 
 def _empty_ids() -> np.ndarray:
@@ -143,13 +144,15 @@ class CapacityExceeded(Exception):
 
 
 class ResultStore:
-    def __init__(self, *, dense_max_nv: int = 1025,
-                 dense_small_nv: int = 129,
-                 dense_min_density: Optional[float] = None,
+    def __init__(self, *, options: Optional[DetectOptions] = None,
                  max_entries: Optional[int] = None,
                  ttl_s: Optional[float] = None, clock=None,
-                 seg_impl: str = "auto", seg_block_m: int = 0,
-                 compact_window: int = 0, on_commit=None):
+                 compact_window: int = 0, on_commit=None,
+                 dense_max_nv: Optional[int] = None,
+                 dense_small_nv: Optional[int] = None,
+                 dense_min_density: Optional[float] = None,
+                 seg_impl: Optional[str] = None,
+                 seg_block_m: Optional[int] = None):
         if max_entries is not None and max_entries < 1:
             raise ValueError(f"max_entries must be >= 1, got {max_entries}")
         if compact_window < 0:
@@ -163,13 +166,16 @@ class ResultStore:
         # front end reads results on the event loop while the compute
         # thread puts — every OrderedDict mutation takes this lock
         self._lock = threading.RLock()
-        self.dense_max_nv = dense_max_nv
-        self.dense_small_nv = dense_small_nv
-        self.dense_min_density = dense_min_density
+        # one DetectOptions record carries the scan crossover + the
         # segment-reduction backend for sortscan warm updates (the engine's
-        # batched path carries its own copy of the same choice)
-        self.seg_impl = seg_impl
-        self.seg_block_m = seg_block_m
+        # batched path carries its own copy of the same choice); flat
+        # PR<=7 keywords fold through the deprecation shim
+        self.options = fold_legacy_kwargs(
+            options,
+            dict(dense_max_nv=dense_max_nv, dense_small_nv=dense_small_nv,
+                 dense_min_density=dense_min_density, seg_impl=seg_impl,
+                 seg_block_m=seg_block_m),
+            where="ResultStore")
         self.max_entries = max_entries
         self.ttl_s = ttl_s
         self.clock = clock or time.perf_counter
@@ -335,11 +341,7 @@ class ResultStore:
         entry = self.get(graph_id)       # TTL-aware; refreshes recency
         if entry is None:
             raise KeyError(graph_id)
-        scan = choose_scan(
-            entry.graph.nv, entry.graph.m_cap,
-            dense_max_nv=self.dense_max_nv,
-            dense_small_nv=self.dense_small_nv,
-            dense_min_density=self.dense_min_density)
+        scan = self.options.resolved_scan(entry.graph.nv, entry.graph.m_cap)
         g = entry.graph
         C = np.asarray(entry.C, np.int32)
         touched = np.zeros((g.nv,), bool)
@@ -553,7 +555,7 @@ class ResultStore:
         out = warm_update(
             plan.graph, jnp.asarray(plan.C_prev), jnp.asarray(plan.touched),
             tau=tau, max_iters=max_iters, scan=plan.scan,
-            seg_impl=self.seg_impl, block_m=self.seg_block_m,
+            seg_impl=self.options.seg_impl, block_m=self.options.block_m,
         )
         t1 = self.clock()
         C = np.asarray(out["C"])

@@ -1,0 +1,169 @@
+"""The unified detect() API: DetectOptions validation, the legacy-kwarg
+deprecation shim (exactly one warning per process, identical results),
+and compile-key derivation via DetectOptions.cache_key.
+
+These are the dedicated shim tests — every other in-repo caller has been
+migrated to ``options=`` / ``detect=``, so this file is the only place
+the flat spellings are exercised on purpose.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import Detection, DetectOptions, LouvainConfig, detect, louvain
+from repro.core import api as api_mod
+from repro.core.api import fold_legacy_kwargs
+from repro.graph import ring_of_cliques
+from repro.service.admission import ServiceConfig
+from repro.service.buckets import Bucket
+from repro.service.engine import BatchedLouvainEngine
+from repro.service.store import ResultStore
+
+CFG = LouvainConfig(max_passes=3)
+
+
+@pytest.fixture
+def fresh_shim(monkeypatch):
+    """Arm the process-wide warn-once latch for this test only."""
+    monkeypatch.setattr(api_mod, "_warned_once", False)
+
+
+# -- DetectOptions ----------------------------------------------------------
+
+def test_options_validation():
+    with pytest.raises(ValueError):
+        DetectOptions(scan="bogus")
+    with pytest.raises(ValueError):
+        DetectOptions(seg_impl="cuda")
+    with pytest.raises(ValueError):
+        DetectOptions(block_m=-1)
+    # dict louvain (config-file loading) coerces
+    o = DetectOptions(louvain={"max_passes": 2})
+    assert isinstance(o.louvain, LouvainConfig) and o.louvain.max_passes == 2
+
+
+def test_options_hashable_and_replace():
+    a = DetectOptions(seg_impl="xla")
+    b = a.replace(block_m=128)
+    assert hash(a) != hash(b) and a != b
+    assert b.seg_impl == "xla" and b.block_m == 128
+    assert a.block_m == 0  # frozen: replace never mutates
+
+
+def test_cache_key_derivation():
+    o = DetectOptions(louvain=CFG, seg_impl="xla", block_m=64)
+    key = o.cache_key("bucket", 4, scan="sort")
+    assert key == ("bucket", 4, "sort", "xla", 64)
+    # per-bucket overrides win over the record's fields
+    assert o.cache_key(scan="dense", block_m=8) == ("dense", "xla", 8)
+
+
+def test_resolved_scan_and_mesh():
+    assert DetectOptions(scan="sort").resolved_scan(10_000, 80_000) == "sort"
+    auto = DetectOptions()                     # crossover: tiny graph, dense
+    assert auto.resolved_scan(64, 512) == "dense"
+    assert DetectOptions().resolved_mesh() is None
+    with pytest.raises(ValueError):
+        DetectOptions(mesh=10_000).resolved_mesh()
+
+
+# -- detect() ---------------------------------------------------------------
+
+def test_detect_matches_louvain():
+    g = ring_of_cliques(n_cliques=6, clique_size=5)
+    opts = DetectOptions(louvain=CFG, scan="sort")
+    res = detect(g, options=opts)
+    assert isinstance(res, Detection)
+    C, stats = louvain(g, options=opts)
+    assert np.array_equal(np.asarray(res.labels), np.asarray(C))
+    assert res.n_communities == int(stats["n_communities"])
+    assert res.n_disconnected == 0       # the paper's invariant
+    assert res.modularity > 0.5
+
+
+def test_detect_legacy_kwargs_identical(fresh_shim):
+    g = ring_of_cliques(n_cliques=5, clique_size=4)
+    ref = detect(g, options=DetectOptions(louvain=CFG, seg_impl="xla"))
+    with pytest.warns(DeprecationWarning, match="API migration table"):
+        old = detect(g, cfg=CFG, seg_impl="xla")
+    assert np.array_equal(np.asarray(ref.labels), np.asarray(old.labels))
+    assert (ref.n_communities, ref.n_disconnected, ref.modularity) == \
+           (old.n_communities, old.n_disconnected, old.modularity)
+
+
+def test_shim_warns_exactly_once_per_process(fresh_shim):
+    g = ring_of_cliques(n_cliques=4, clique_size=4)
+    with pytest.warns(DeprecationWarning):
+        detect(g, cfg=CFG)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        detect(g, cfg=CFG)                        # second call: silent
+        louvain(g, CFG, scan="sort")              # other entry points too
+        ServiceConfig(seg_impl="xla")
+    assert [w for w in rec if w.category is DeprecationWarning] == []
+
+
+def test_shim_rejects_mixing_and_unknown():
+    g = ring_of_cliques(n_cliques=4, clique_size=4)
+    with pytest.raises(TypeError, match="not both"):
+        detect(g, options=DetectOptions(), seg_impl="xla")
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        detect(g, nonsense=1)
+    with pytest.raises(TypeError):
+        fold_legacy_kwargs(DetectOptions(), {"scan": "sort"}, where="x")
+
+
+def test_louvain_legacy_scan_identical(fresh_shim):
+    g = ring_of_cliques(n_cliques=5, clique_size=4)
+    C_new, _ = louvain(g, options=DetectOptions(louvain=CFG, scan="sort"))
+    with pytest.warns(DeprecationWarning):
+        C_old, _ = louvain(g, CFG, scan="sort")
+    assert np.array_equal(np.asarray(C_new), np.asarray(C_old))
+
+
+def test_louvain_rejects_cfg_plus_options():
+    g = ring_of_cliques(n_cliques=4, clique_size=4)
+    with pytest.raises(TypeError):
+        louvain(g, CFG, options=DetectOptions(louvain=CFG))
+
+
+# -- service layer composition ---------------------------------------------
+
+def test_service_config_composes_detect(fresh_shim):
+    new = ServiceConfig(detect=DetectOptions(louvain=CFG, seg_impl="xla",
+                                             dense_max_nv=513))
+    with pytest.warns(DeprecationWarning):
+        old = ServiceConfig(louvain=CFG, seg_impl="xla", dense_max_nv=513)
+    assert new.detect == old.detect
+    # compat read properties resolve off the composed record
+    assert old.louvain is old.detect.louvain
+    assert old.seg_impl == "xla" and old.dense_max_nv == 513
+    assert new.seg_block_m is None          # block_m=0 reads back as None
+    with pytest.raises(TypeError, match="not both"):
+        ServiceConfig(detect=DetectOptions(seg_impl="xla"), seg_impl="xla")
+
+
+def test_engine_options_vs_legacy_same_keys(fresh_shim):
+    b = Bucket(64, 512)
+    eng = BatchedLouvainEngine(options=DetectOptions(louvain=CFG,
+                                                     seg_impl="xla"))
+    with pytest.warns(DeprecationWarning):
+        legacy = BatchedLouvainEngine(CFG, seg_impl="xla")
+    assert eng.options == legacy.options
+    assert eng._detect_key(b, 1) == legacy._detect_key(b, 1)
+    # the key IS the DetectOptions derivation
+    assert eng._detect_key(b, 1) == eng.options.cache_key(
+        b, 1, eng.sub_batch, scan=eng.scan_for(b),
+        block_m=eng.seg_block_for(b))
+    with pytest.raises(TypeError, match="not both"):
+        BatchedLouvainEngine(CFG, options=DetectOptions())
+
+
+def test_store_options_fold(fresh_shim):
+    new = ResultStore(options=DetectOptions(dense_max_nv=513,
+                                            seg_impl="scatter"))
+    with pytest.warns(DeprecationWarning):
+        old = ResultStore(dense_max_nv=513, seg_impl="scatter")
+    assert new.options == old.options
+    assert old.options.dense_max_nv == 513

@@ -16,8 +16,9 @@ import pytest
 from tests._hypothesis_compat import given, settings, st
 
 from repro.core import (
-    CapacityError, GraphUpdate, LouvainConfig, apply_vertex_updates,
-    disconnected_communities, louvain, modularity, update_communities,
+    CapacityError, DetectOptions, GraphUpdate, LouvainConfig,
+    apply_vertex_updates, disconnected_communities, louvain, modularity,
+    update_communities,
 )
 from repro.core.dynamic import (
     as_update, check_vertex_ids, prepare_graph_update,
@@ -350,7 +351,8 @@ def test_engine_update_batch_matches_immediate_vertex_churn():
 
 
 def test_frontend_batched_vertex_updates_match_immediate():
-    common = dict(louvain=CFG, batch_size=4, max_delay_s=0.01)
+    common = dict(detect=DetectOptions(louvain=CFG), batch_size=4,
+                  max_delay_s=0.01)
     svcB = CommunityService(config=ServiceConfig(update_batch_size=4,
                                                  **common))
     svcI = CommunityService(config=ServiceConfig(**common))
@@ -383,7 +385,7 @@ def test_frontend_batched_vertex_updates_match_immediate():
 
 def test_frontend_vertex_overflow_rebuckets():
     svc = CommunityService(config=ServiceConfig(
-        louvain=CFG, batch_size=2, max_delay_s=0.01))
+        detect=DetectOptions(louvain=CFG), batch_size=2, max_delay_s=0.01))
     svc.submit_detect("big", sbm_graph(n_nodes=62, n_blocks=3, seed=5)[0])
     svc.drain()
     e0 = svc.result("big")
@@ -405,7 +407,8 @@ def test_async_vertex_update_round_trip():
     from repro.service import AsyncCommunityService
 
     async def run():
-        config = ServiceConfig(louvain=CFG, batch_size=4, max_delay_s=0.01,
+        config = ServiceConfig(detect=DetectOptions(louvain=CFG),
+                           batch_size=4, max_delay_s=0.01,
                                update_batch_size=2)
         async with AsyncCommunityService(config) as svc:
             fut = await svc.submit_detect(

@@ -15,7 +15,9 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core import LouvainConfig, louvain, disconnected_communities
+from repro.core import (
+    DetectOptions, LouvainConfig, louvain, disconnected_communities,
+)
 from repro.core import _segments as seg
 from repro.core.local_move import _half_sweep, _half_sweep_scatter
 from repro.core.modularity import modularity
@@ -156,9 +158,11 @@ def _tier1_graphs():
 def test_louvain_partition_parity_across_impls():
     cfg = LouvainConfig()
     for name, g in _tier1_graphs().items():
-        C_ref = np.asarray(louvain(g, cfg, seg_impl="xla")[0])
+        C_ref = np.asarray(louvain(g, options=DetectOptions(
+            louvain=cfg, seg_impl="xla"))[0])
         for impl in ("scatter", "pallas"):
-            C = np.asarray(louvain(g, cfg, seg_impl=impl, block_m=256)[0])
+            C = np.asarray(louvain(g, options=DetectOptions(
+                louvain=cfg, seg_impl=impl, block_m=256))[0])
             np.testing.assert_array_equal(
                 C, C_ref, err_msg=f"{name}: seg_impl={impl} partition "
                 "diverged from xla")
@@ -180,7 +184,8 @@ def test_zero_disconnected_invariant_all_impls():
     """The paper's central guarantee survives every backend choice."""
     g = rmat_graph(scale=9, edge_factor=8, seed=11)
     for impl in IMPLS:
-        C, _ = louvain(g, LouvainConfig(), seg_impl=impl, block_m=256)
+        C, _ = louvain(g, options=DetectOptions(
+            louvain=LouvainConfig(), seg_impl=impl, block_m=256))
         det = disconnected_communities(g.src, g.dst, g.w, C, g.n_nodes,
                                        seg_impl=impl, block_m=256)
         assert int(det["n_disconnected"]) == 0, impl
@@ -227,8 +232,10 @@ def test_engine_compile_key_carries_backend():
     from repro.service.buckets import Bucket
     from repro.service.engine import BatchedLouvainEngine
 
-    eng_a = BatchedLouvainEngine(LouvainConfig(), seg_impl="xla")
-    eng_b = BatchedLouvainEngine(LouvainConfig(), seg_impl="scatter")
+    eng_a = BatchedLouvainEngine(options=DetectOptions(
+        louvain=LouvainConfig(), seg_impl="xla"))
+    eng_b = BatchedLouvainEngine(options=DetectOptions(
+        louvain=LouvainConfig(), seg_impl="scatter"))
     bucket = Bucket(1024, 16384)  # sortscan bucket under the default ladder
     assert eng_a.scan_for(bucket) == "sort"
     ka = eng_a._detect_key(bucket, 1)

@@ -4,7 +4,7 @@ updates, and the sync-adapter end-to-end path."""
 import numpy as np
 import pytest
 
-from repro.core import LouvainConfig, louvain
+from repro.core import DetectOptions, LouvainConfig, louvain
 from repro.graph import sbm_graph
 from repro.service import (
     AdmissionController, BatchedLouvainEngine, Bucket, CommunityService,
@@ -73,7 +73,8 @@ def test_choose_scan_density_crossover():
 def test_dense_scan_bit_equals_sort():
     g, _ = admit(_ego(3), BUCKETS)
     C_sort, s_sort = louvain(g, CFG)
-    C_dense, s_dense = louvain(g, CFG, scan="dense")
+    C_dense, s_dense = louvain(
+        g, options=DetectOptions(louvain=CFG, scan="dense"))
     assert np.array_equal(np.asarray(C_sort), np.asarray(C_dense))
     assert int(s_sort["passes"]) == int(s_dense["passes"])
     assert int(s_sort["n_communities"]) == int(s_dense["n_communities"])
@@ -324,7 +325,8 @@ def test_rebucket_update_exempt_from_queue_bound():
     # an overflowing update invalidates its store entry; the re-detect it
     # queues must be admitted even when the tenant queue is at its bound,
     # or the graph's result would be lost with nothing queued to replace it
-    cfg = ServiceConfig(louvain=CFG, buckets=BUCKETS, batch_size=2,
+    cfg = ServiceConfig(detect=DetectOptions(louvain=CFG),
+                        buckets=BUCKETS, batch_size=2,
                         max_delay_s=10.0, max_pending_per_tenant=1)
     fe = ServiceFrontend(cfg)
     fe.submit_detect("g", _ego(9), tenant="a")
@@ -354,7 +356,8 @@ def test_batched_updates_match_immediate_path():
                      np.ones(int(keep.sum()), np.float32)))
 
     def serve(update_batch_size):
-        cfg = ServiceConfig(louvain=CFG, buckets=BUCKETS, batch_size=4,
+        cfg = ServiceConfig(detect=DetectOptions(louvain=CFG),
+                            buckets=BUCKETS, batch_size=4,
                             max_delay_s=10.0,
                             update_batch_size=update_batch_size)
         svc = CommunityService(config=cfg)
@@ -381,7 +384,8 @@ def test_batched_updates_match_immediate_path():
 def test_batched_update_rebucket_chains_future():
     # a queued update that overflows at dispatch must still resolve its
     # future, via the re-bucketed detect
-    cfg = ServiceConfig(louvain=CFG, buckets=BUCKETS, batch_size=2,
+    cfg = ServiceConfig(detect=DetectOptions(louvain=CFG),
+                        buckets=BUCKETS, batch_size=2,
                         max_delay_s=10.0, update_batch_size=2)
     fe = ServiceFrontend(cfg)
     fe.submit_detect("g", _ego(9), tenant="a")
@@ -402,7 +406,8 @@ def test_batched_update_rebucket_chains_future():
 def test_batched_update_merges_same_graph_deltas():
     # two queued updates against one graph compose in submit order and
     # resolve to the SAME refreshed entry (one warm compute, one version)
-    cfg = ServiceConfig(louvain=CFG, buckets=BUCKETS, batch_size=2,
+    cfg = ServiceConfig(detect=DetectOptions(louvain=CFG),
+                        buckets=BUCKETS, batch_size=2,
                         max_delay_s=10.0, update_batch_size=2)
     fe = ServiceFrontend(cfg)
     fe.submit_detect("g", _ego(4), tenant="a")
@@ -434,7 +439,8 @@ def test_batched_fold_matches_immediate_clamping():
     # two immediate calls (per-batch clamping), not like one netted
     # batch: the edge ends up present with the re-added weight
     def run(update_batch_size):
-        cfg = ServiceConfig(louvain=CFG, buckets=BUCKETS, batch_size=2,
+        cfg = ServiceConfig(detect=DetectOptions(louvain=CFG),
+                        buckets=BUCKETS, batch_size=2,
                             max_delay_s=10.0,
                             update_batch_size=update_batch_size)
         fe = ServiceFrontend(cfg)

@@ -1,0 +1,268 @@
+"""Sharded single-graph detection: bit-identical parity with the
+single-device driver, halo-exchange correctness, and partition round
+trips.
+
+Multi-device cases run in subprocesses (jax pins the host device count at
+first init; ``XLA_FLAGS=--xla_force_host_platform_device_count``), exactly
+like tests/test_distributed.py.  Partition/reassembly properties are pure
+numpy and run in-process.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, st
+
+from repro.graph import (
+    partition_edges_by_src, reassemble_edges, ring_of_cliques, sbm_graph,
+    shard_vertex_roles,
+)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, n_devices: int = 8):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n_devices}")
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    return out.stdout
+
+
+# -- bit-identical parity with the single-device driver ---------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_sharded_parity_bitwise(n_shards):
+    """The tentpole contract: a forced-host CPU mesh produces the EXACT
+    partition (and therefore bitwise-equal modularity) the single-device
+    driver returns, with zero internally-disconnected communities, across
+    the tier-1 graph families."""
+    out = _run(f"""
+        import numpy as np
+        from repro.core import LouvainConfig, louvain, modularity
+        from repro.core import disconnected_communities
+        from repro.core.distributed import louvain_sharded
+        from repro.graph import grid_graph, ring_of_cliques, sbm_graph
+
+        graphs = [
+            ("ring", ring_of_cliques(n_cliques=12, clique_size=6)),
+            ("sbm", sbm_graph(n_nodes=200, n_blocks=5, p_in=0.4,
+                              p_out=0.02, seed=3)[0]),
+            ("grid", grid_graph(12, 12)),
+        ]
+        cfg = LouvainConfig()
+        for name, g in graphs:
+            C1, s1 = louvain(g, cfg)
+            C1 = np.asarray(C1)
+            Cs, ss = louvain_sharded(g, cfg, mesh={n_shards})
+            assert np.array_equal(C1, np.asarray(Cs)), name
+            q1 = float(modularity(g.src, g.dst, g.w, C1))
+            qs = float(modularity(g.src, g.dst, g.w, np.asarray(Cs)))
+            assert q1 == qs, (name, q1, qs)
+            det = disconnected_communities(
+                g.src, g.dst, g.w, np.asarray(Cs), g.n_nodes)
+            assert int(det["n_disconnected"]) == 0, name
+            assert s1["n_communities"] == ss["n_communities"], name
+        print("OK")
+    """, n_devices=n_shards)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_parity_across_split_modes():
+    out = _run("""
+        import numpy as np
+        from repro.core import LouvainConfig, louvain
+        from repro.core.distributed import louvain_sharded
+        from repro.graph import ring_of_cliques
+
+        g = ring_of_cliques(n_cliques=10, clique_size=5)
+        for split in ("none", "sp-pj", "sp-lp", "sl-pj", "refine"):
+            cfg = LouvainConfig(split=split)
+            C1, _ = louvain(g, cfg)
+            Cs, _ = louvain_sharded(g, cfg, mesh=2)
+            assert np.array_equal(np.asarray(C1), np.asarray(Cs)), split
+        print("OK")
+    """, n_devices=2)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_invariant_to_shard_count():
+    """partition -> detect -> reassemble is invariant to the shard count:
+    1-, 2- and 4-shard runs all reproduce the single-device labels."""
+    out = _run("""
+        import numpy as np
+        from repro.core import LouvainConfig, louvain
+        from repro.core.distributed import louvain_sharded
+        from repro.graph import sbm_graph
+
+        g = sbm_graph(n_nodes=160, n_blocks=4, p_in=0.35, p_out=0.02,
+                      seed=11)[0]
+        cfg = LouvainConfig()
+        ref = np.asarray(louvain(g, cfg)[0])
+        for s in (1, 2, 4):
+            Cs, _ = louvain_sharded(g, cfg, mesh=s)
+            assert np.array_equal(ref, np.asarray(Cs)), s
+        print("OK")
+    """, n_devices=4)
+    assert "OK" in out
+
+
+# -- halo exchange ----------------------------------------------------------
+
+@pytest.mark.slow
+def test_halo_cut_edge_decides_tiebreak():
+    """Hand-built 2-shard graph where a CUT edge decides the local-move
+    choice: vertex 2 is pulled equally by its own triangle {0,1,2} (both
+    edges shard-local) and by the remote triangle {3,4,5} (via the cut
+    edge 2-3, weight 2.0).  The remote pull is only visible through the
+    halo exchange — dropping or double-counting it changes the partition.
+    The sharded labels must equal the single-device labels exactly
+    (identical Eq.-2 gains => identical deterministic tie-break)."""
+    out = _run("""
+        import numpy as np
+        from repro.core import LouvainConfig, louvain
+        from repro.core.distributed import louvain_sharded
+        from repro.graph import from_undirected
+        from repro.graph.partition import partition_edges_by_src
+
+        #   0-1-2 triangle, 3-4-5 triangle, bridge 2-3 of weight 2.0
+        und = [(0, 1, 1.0), (0, 2, 1.0), (1, 2, 1.0),
+               (3, 4, 1.0), (3, 5, 1.0), (4, 5, 1.0),
+               (2, 3, 2.0)]
+        src = np.array([e[0] for e in und], np.int32)
+        dst = np.array([e[1] for e in und], np.int32)
+        w = np.array([e[2] for e in und], np.float32)
+        g = from_undirected(6, src, dst, w)
+
+        # 2 shards split vertices {0,1,2} / {3,4,5}: the directed pair of
+        # the bridge appears once per shard, each side a cut edge
+        parts = partition_edges_by_src(g, 2)
+        roles0 = None
+        from repro.graph.partition import shard_vertex_roles
+        roles0 = shard_vertex_roles(parts, 0)
+        assert roles0["n_cut_edges"] == 1
+        assert list(roles0["boundary"]) == [2]
+        assert list(roles0["ghosts"]) == [3]
+
+        cfg = LouvainConfig()
+        C1 = np.asarray(louvain(g, cfg)[0])
+        Cs, _ = louvain_sharded(g, cfg, mesh=2)
+        assert np.array_equal(C1, np.asarray(Cs)), (C1, np.asarray(Cs))
+        print("OK")
+    """, n_devices=2)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_telemetry_counters():
+    """The sharded driver threads per-shard telemetry through the PR-6
+    hub: ghost-vertex gauges, halo-byte counters, per-device sweep
+    counters and partition/pass spans."""
+    out = _run("""
+        import numpy as np
+        from repro.core import LouvainConfig
+        from repro.core.distributed import louvain_sharded
+        from repro.graph import ring_of_cliques
+        from repro.telemetry.sinks import InMemorySink, Telemetry
+
+        tel = Telemetry()
+        sink = tel.register(InMemorySink())
+        g = ring_of_cliques(n_cliques=8, clique_size=6)
+        C, stats = louvain_sharded(g, LouvainConfig(), mesh=2,
+                                   telemetry=tel)
+        assert sink.counter_total("sharded_halo_bytes") > 0
+        sweeps = sum(sink.counter_value("sharded_device_sweeps",
+                                        {"shard": str(s)}) for s in (0, 1))
+        assert sweeps > 0
+        assert stats["ghost_vertices"] >= 2  # ring cut in two places
+        phases = sink.phase_durations()
+        assert "sharded-pass" in phases, sorted(phases)
+        assert "sharded-partition" in phases, sorted(phases)
+        print("OK")
+    """, n_devices=2)
+    assert "OK" in out
+
+
+# -- partition / vertex-role units (in-process, pure numpy) -----------------
+
+def test_shard_vertex_roles_ring_of_cliques():
+    """Planted ring of cliques, 4 shards of 4 cliques' worth of vertices
+    each... boundary vertices are exactly the two ring-bridge endpoints a
+    shard owns; everything else interior; ghosts are the remote bridge
+    endpoints."""
+    g = ring_of_cliques(n_cliques=8, clique_size=4)  # 32 vertices
+    parts = partition_edges_by_src(g, 4)
+    nv = 32
+    for s in range(4):
+        roles = shard_vertex_roles(parts, s)
+        lo, hi = int(parts["v_lo"][s]), int(parts["v_hi"][s])
+        owned = np.arange(lo, min(hi, nv))
+        assert np.array_equal(roles["owned"], owned)
+        assert np.array_equal(
+            np.sort(np.concatenate([roles["interior"], roles["boundary"]])),
+            owned)
+        # each shard owns 2 cliques = 2 ring bridges leaving the shard:
+        # one forward (last clique's bridge vertex) and one backward
+        assert roles["boundary"].size == 2, roles["boundary"]
+        assert roles["n_ghosts"] == 2
+        # ghosts are owned elsewhere, never locally
+        assert not np.any((roles["ghosts"] >= lo) & (roles["ghosts"] < hi))
+        # every cut edge leaves a boundary vertex
+        assert roles["n_cut_edges"] == 2
+
+
+def test_partition_reassemble_round_trip():
+    g = ring_of_cliques(n_cliques=6, clique_size=5)
+    live = int((np.asarray(g.src) < g.n_cap).sum())
+    ref = (np.asarray(g.src)[:live], np.asarray(g.dst)[:live],
+           np.asarray(g.w)[:live])
+    for s in (1, 2, 3, 4):
+        parts = partition_edges_by_src(g, s)
+        src, dst, w = reassemble_edges(parts)
+        assert np.array_equal(src, ref[0]), s
+        assert np.array_equal(dst, ref[1]), s
+        assert np.array_equal(w, ref[2]), s
+
+
+def test_partition_rejects_unsorted_and_bad_counts():
+    g = ring_of_cliques(n_cliques=4, clique_size=4)
+    with pytest.raises(ValueError):
+        partition_edges_by_src(g, 0)
+    shuffled = np.asarray(g.src).copy()
+    shuffled[:2] = shuffled[:2][::-1]
+    bad = type(g)(src=shuffled, dst=g.dst, w=g.w, n_nodes=g.n_nodes,
+                  n_cap=g.n_cap, m_cap=g.m_cap)
+    if shuffled[0] != shuffled[1]:   # only meaningful if actually unsorted
+        with pytest.raises(ValueError):
+            partition_edges_by_src(bad, 2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=12, max_value=80),
+       st.integers(min_value=1, max_value=6),
+       st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_partition_round_trip_property(n, s, seed):
+    """Property: for ANY sbm graph and shard count, partitioning and
+    reassembling reproduces the live directed edge list byte-for-byte
+    (the invariant the bit-identical sharded fold rests on)."""
+    g, _ = sbm_graph(n_nodes=n, n_blocks=max(2, n // 10), p_in=0.3,
+                     p_out=0.05, seed=seed)
+    live = int((np.asarray(g.src) < g.n_cap).sum())
+    parts = partition_edges_by_src(g, s)
+    src, dst, w = reassemble_edges(parts)
+    assert np.array_equal(src, np.asarray(g.src)[:live])
+    assert np.array_equal(dst, np.asarray(g.dst)[:live])
+    assert np.array_equal(w, np.asarray(g.w)[:live])
+    assert int(parts["m_valid"].sum()) == live
