@@ -1,6 +1,6 @@
 """Service benchmark: batched engine vs sequential single-graph calls.
 
-Nine sections:
+Ten sections:
 
 1. **Engine throughput, one bucket** — an ego-net workload in the
    (64, 2048) bucket.  The sequential baseline is the repo's public
@@ -85,6 +85,15 @@ Nine sections:
    "devices" share the same cores, so on this runner it reports the
    sharding machinery's overhead ceiling, not a speedup; it becomes one
    on real multi-chip meshes.
+
+9. **Resilience tax** — the section-6 workload through two front ends:
+   one with the full resilience stack armed but idle (retry policy +
+   watchdog, per-bucket circuit breaker, degraded fallbacks enabled —
+   ``fault_plan=None``, so nothing ever fires) vs a plain front end,
+   measured paired.  Acceptance: the armed path keeps >= 0.95x the
+   plain path's throughput — fault-tolerance must be close to free when
+   nothing is failing (the breaker bookkeeping and the policy wrapper
+   sit on every dispatch and commit).
 
 CSV rows use the suite convention ``name,us_per_call,derived`` (run.py);
 ``scripts/check_bench.py`` parses the ``# <metric>,<value>`` lines into
@@ -619,6 +628,59 @@ def bench_telemetry_overhead(graphs):
         print(f"# phase_share_{group},{bd[group]:.4f}")
 
 
+def bench_resilience_tax(graphs):
+    """Section 9: what the armed-but-idle resilience stack costs on the
+    hot serving path.
+
+    Two ServiceFrontends over the same batch-32 workload — one with the
+    retry policy (watchdog included), the per-bucket circuit breaker and
+    degraded fallbacks all configured but no fault plan (so every
+    dispatch pays the policy wrapper, the watchdog thread, breaker
+    bookkeeping and the wrapped commit, yet nothing ever fails), one
+    plain.  Each frontend owns its engine, so both warm their compile
+    caches outside the timed region; the ratio is measured paired.
+    """
+    from repro.resilience import BreakerConfig, RetryPolicy
+    from repro.service.frontend import ServiceFrontend
+
+    def make(armed):
+        kw = {}
+        if armed:
+            kw = dict(retry=RetryPolicy(max_attempts=3, backoff_s=0.01,
+                                        watchdog_s=30.0),
+                      breaker=BreakerConfig(failure_threshold=5,
+                                            cooldown_s=1.0),
+                      degrade_enabled=True)
+        fe = ServiceFrontend(ServiceConfig(
+            detect=DetectOptions(louvain=LouvainConfig()),
+            buckets=(BUCKET,), batch_size=B,
+            max_delay_s=2.0, max_pending_per_tenant=B, **kw))
+        run_once(fe)                      # compile outside timing
+        return fe
+
+    def run_once(fe):
+        futs = [fe.submit_detect(f"g{i}", g)
+                for i, g in enumerate(graphs)]
+        fe.dispatch(force=True)
+        for f in futs:
+            f.result()
+
+    fe_off = make(False)
+    fe_on = make(True)
+
+    def attempt():
+        t_off = timeit_best(run_once, fe_off, repeats=3)
+        t_on = timeit_best(run_once, fe_on, repeats=3)
+        return t_off / t_on
+
+    ratio = accept_speedup("speedup_resilience_on", attempt, bar=0.95)
+    t_on = timeit_best(run_once, fe_on, repeats=3)
+    row("service_resilience_on_batch32", t_on,
+        f"{B / t_on:.1f} graphs/s,{ratio:.2f}x_vs_plain")
+    assert fe_on.resilience.n_retries == 0, \
+        "idle fault-free run recorded retries"
+
+
 def bench_stream_ingest():
     """Section 7: events/s through the windowed temporal-tracking path,
     deferred vs immediate vertex compaction.
@@ -764,6 +826,7 @@ def main():
     bench_telemetry_overhead(graphs)
     bench_stream_ingest()
     bench_sharded()
+    bench_resilience_tax(graphs)
 
 
 if __name__ == "__main__":

@@ -52,6 +52,7 @@ SPEEDUPS = {
     "speedup_sweep_fused": "kernel_sweep_fused_speedup",
     "speedup_telemetry_on": "telemetry_on_speedup",
     "speedup_stream_deferred": "stream_deferred_speedup",
+    "speedup_resilience_on": "resilience_on_speedup",
 }
 # marker-line metrics recorded in the snapshot but NEVER gated: the
 # queue/engine/host phase shares from the instrumented bench run are a

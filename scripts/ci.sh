@@ -6,7 +6,7 @@
 # Tiers:
 #   tier1  — the full pytest suite (ROADMAP's tier-1 verify).  Fast-ish,
 #            deterministic; runs on every push/PR (.github/workflows/ci.yml).
-#   smoke  — the six serve_communities end-to-end smokes: the sync pump
+#   smoke  — the seven serve_communities end-to-end smokes: the sync pump
 #            driver, the async multi-tenant driver, the fully-dynamic
 #            churn driver (edge deletions AND vertex additions/removals
 #            through the batched warm path, with the vertex round-trip /
@@ -20,8 +20,12 @@
 #            snapshot path), and the sharded driver (single-graph
 #            detection over a 2-device forced-host mesh: bit-identical
 #            parity + zero-disconnected asserted, halo-exchange counters
-#            scraped from the live Prometheus exporter).  Also in the
-#            GitHub workflow.
+#            scraped from the live Prometheus exporter), and the chaos
+#            driver (deterministic fault injection with retries, a
+#            circuit breaker and degraded fallbacks vs a fault-free
+#            reference run: goodput floor, bit-identical non-degraded
+#            results, breaker recovery and a kill-and-restore automatic
+#            checkpoint round trip).  Also in the GitHub workflow.
 #   bench  — acceptance benchmarks + regression check: scripts/check_bench.py
 #            runs benchmarks/bench_service.py + bench_kernels.py, enforces
 #            the speedup bars, writes benchmarks/BENCH_service.json and
@@ -56,6 +60,8 @@ run_smoke() {
   python -m repro.launch.serve_communities --stream --smoke
   echo "== sharded (2-device mesh parity + halo telemetry) smoke =="
   python -m repro.launch.serve_communities --sharded --smoke
+  echo "== chaos (fault injection + retry/degrade + kill-and-restore) smoke =="
+  python -m repro.launch.serve_communities --chaos --smoke
 }
 
 run_bench() {

@@ -27,6 +27,32 @@ import jax
 import numpy as np
 
 
+class CheckpointCorrupt(Exception):
+    """A checkpoint directory failed to read back — truncated/partial
+    ``arrays.npz``, unparseable or missing ``manifest.json``, or a
+    manifest/array mismatch.  One typed error for every corruption mode,
+    so recovery code can fall back to an earlier snapshot instead of
+    pattern-matching raw ``KeyError`` / ``BadZipFile`` internals."""
+
+
+def _read_step_dir(d: str):
+    """Read one step directory's (manifest, leaves), raising
+    :class:`CheckpointCorrupt` on any decode failure.  Leaves are
+    materialized eagerly so a truncated zip member surfaces here, not at
+    first use."""
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "arrays.npz"))
+        leaves = [np.asarray(data[f"leaf_{i}"])
+                  for i in range(len(manifest["paths"]))]
+    except Exception as e:
+        raise CheckpointCorrupt(
+            f"checkpoint at {d} is corrupt or incomplete: "
+            f"{type(e).__name__}: {e}") from e
+    return manifest, leaves
+
+
 def _flatten_with_paths(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     paths = ["/".join(str(k) for k in path) for path, _ in flat]
@@ -60,13 +86,20 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, *, extra: Optional[dict] = N
     return final
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
+def checkpoint_steps(ckpt_dir: str) -> list:
+    """All step numbers present in ``ckpt_dir``, sorted ascending
+    (``[]`` when the directory is absent or empty)."""
     if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [
-        int(d.split("-")[1]) for d in os.listdir(ckpt_dir) if d.startswith("step-")
-    ]
-    return max(steps) if steps else None
+        return []
+    return sorted(
+        int(d.split("-")[1]) for d in os.listdir(ckpt_dir)
+        if d.startswith("step-")
+    )
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = checkpoint_steps(ckpt_dir)
+    return steps[-1] if steps else None
 
 
 def restore_checkpoint(ckpt_dir: str, tree_like, *, step: Optional[int] = None,
@@ -82,10 +115,7 @@ def restore_checkpoint(ckpt_dir: str, tree_like, *, step: Optional[int] = None,
     if step is None:
         return None, None
     d = os.path.join(ckpt_dir, f"step-{step:010d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
-    data = np.load(os.path.join(d, "arrays.npz"))
-    leaves = [data[f"leaf_{i}"] for i in range(len(manifest["paths"]))]
+    manifest, leaves = _read_step_dir(d)
     paths, like_leaves, treedef = _flatten_with_paths(tree_like)
     if paths != manifest["paths"]:
         raise ValueError(
@@ -122,17 +152,15 @@ def load_checkpoint_arrays(ckpt_dir: str, *, step: Optional[int] = None):
     if step is None:
         return None, None, None
     d = os.path.join(ckpt_dir, f"step-{step:010d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
-    data = np.load(os.path.join(d, "arrays.npz"))
+    manifest, leaves = _read_step_dir(d)
 
     def norm(path: str) -> str:
         return "/".join(
             s[2:-2] if s.startswith("['") and s.endswith("']") else s
             for s in path.split("/"))
 
-    arrays = {norm(p): data[f"leaf_{i}"]
-              for i, p in enumerate(manifest["paths"])}
+    arrays = {norm(p): leaf
+              for p, leaf in zip(manifest["paths"], leaves)}
     return arrays, manifest.get("extra", {}), step
 
 

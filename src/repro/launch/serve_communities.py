@@ -62,12 +62,25 @@ landing in three buckets, plus warm edge updates):
   internally-disconnected communities, and a live exporter scrape
   carrying the halo-exchange counters.
 
+* ``--chaos``: the resilience driver — the detect workload replayed
+  fault-free and then under a deterministic :class:`FaultPlan` (engine
+  raises + a watchdog-bounded hang + store-commit failures + transient
+  capacity errors + a crashing telemetry sink) with retries, a
+  per-bucket circuit breaker and degraded fallbacks armed, followed by
+  a breaker open/half-open/reclose cycle and a kill-and-restore round
+  trip through the automatic checkpointer whose newest snapshot is
+  torn.  ``--chaos --smoke`` asserts goodput >= 0.8x fault-free, no
+  permanently-pending future, bit-identical non-degraded results with
+  zero internally-disconnected communities, flagged degraded results,
+  breaker recovery, and warm updates resuming at the restored version.
+
   PYTHONPATH=src python -m repro.launch.serve_communities --smoke
   PYTHONPATH=src python -m repro.launch.serve_communities --async --smoke
   PYTHONPATH=src python -m repro.launch.serve_communities --churn --smoke
   PYTHONPATH=src python -m repro.launch.serve_communities --replay --smoke
   PYTHONPATH=src python -m repro.launch.serve_communities --stream --smoke
   PYTHONPATH=src python -m repro.launch.serve_communities --sharded --smoke
+  PYTHONPATH=src python -m repro.launch.serve_communities --chaos --smoke
   PYTHONPATH=src python -m repro.launch.serve_communities \
       --async --tenants 4 --requests 200 --max-pending 12 --batch 16
 """
@@ -892,6 +905,244 @@ def main_churn(args):
     return report
 
 
+def main_chaos(args):
+    """Resilient-serving driver: the same synthetic request families
+    replayed twice — once fault-free for reference partitions, once under
+    a deterministic :class:`FaultPlan` (engine raises, a hang bounded by
+    the retry watchdog, store-commit failures, transient capacity errors,
+    a crashing telemetry sink) with retries, a per-bucket circuit breaker
+    and degraded fallbacks armed.  Then two focused phases: breaker
+    open -> degraded stale serving -> half-open probe -> recovery, and a
+    kill-and-restore round trip through the automatic checkpointer where
+    the newest snapshot is torn (truncated ``arrays.npz``) and startup
+    recovery must fall back to the previous durable step.
+
+    ``--chaos --smoke`` asserts the acceptance contract: goodput under
+    faults >= 0.8x the fault-free run, no permanently-pending future,
+    every non-degraded result bit-identical to its fault-free partition
+    with zero internally-disconnected communities, degraded results
+    explicitly flagged (``quality='degraded'``, ``guarantee=False``),
+    the breaker re-closing after cooldown with a fresh full-quality
+    result, and post-restore warm updates resuming at the saved version.
+    """
+    import shutil
+    import tempfile
+
+    from repro.service import (
+        BreakerConfig, DegradedResult, FaultPlan, FaultSpec, RetryPolicy,
+        ServiceFrontend,
+    )
+
+    n = 24 if args.smoke else args.requests
+    workload = [(f"x{i}-{FAMILIES[i % 3]}", synth_graph(FAMILIES[i % 3],
+                                                        args.seed + i))
+                for i in range(n)]
+
+    # -- phase 1: fault-free reference run ---------------------------------
+    cfg = ServiceConfig(
+        detect=DetectOptions(louvain=LouvainConfig()),
+        batch_size=args.batch, max_delay_s=args.max_delay_ms / 1e3,
+        sub_batch=args.sub_batch)
+    fe = ServiceFrontend(cfg)
+    futs = [(gid, fe.submit_detect(gid, g)) for gid, g in workload]
+    fe.drain()
+    base = {}
+    for gid, fut in futs:
+        e = fut.result(timeout=120)
+        base[gid] = dict(C=np.asarray(e.C).copy(),
+                         n_communities=e.n_communities, q=e.q,
+                         n_disconnected=e.n_disconnected)
+    fe.close()
+    n_base = len(base)
+    print(f"baseline: {n_base}/{n} served fault-free")
+
+    # -- phase 2: the same workload under a deterministic fault plan -------
+    plan = FaultPlan({
+        "engine.detect": (FaultSpec(p=0.25, count=4),
+                          FaultSpec(p=0.2, count=2, error="capacity")),
+        "engine.detect.hang": FaultSpec(hang_s=5.0, count=1),
+        "store.commit": FaultSpec(p=1.0, count=2),
+        "telemetry.sink": FaultSpec(p=0.5, count=3),
+    }, seed=args.seed)
+    cfg = ServiceConfig(
+        detect=DetectOptions(louvain=LouvainConfig()),
+        batch_size=args.batch, max_delay_s=args.max_delay_ms / 1e3,
+        sub_batch=args.sub_batch, telemetry_enabled=True,
+        fault_plan=plan,
+        retry=RetryPolicy(max_attempts=3, backoff_s=0.01, watchdog_s=1.5),
+        breaker=BreakerConfig(failure_threshold=6, cooldown_s=0.3),
+        degrade_enabled=True)
+    fe = ServiceFrontend(cfg)
+    # fault-free compile prologue: chaos must not fire on XLA compiles (a
+    # cold compile would trip the watchdog), so the engine's fault hook is
+    # detached while the per-bucket executables warm up
+    fe.engine.faults = None
+    for i, fam in enumerate(FAMILIES):
+        fe.submit_detect(f"warm-{fam}", synth_graph(fam, 10_000 + i))
+    fe.drain()
+    fe.engine.faults = plan
+    fe.metrics.reset()
+
+    futs = [(gid, fe.submit_detect(gid, g)) for gid, g in workload]
+    fe.drain()
+    good = degraded = failed = mismatched = not_done = 0
+    for gid, fut in futs:
+        if not fut.done():
+            not_done += 1
+            continue
+        if fut.exception(timeout=5) is not None:
+            failed += 1
+            continue
+        r = fut.result()
+        if isinstance(r, DegradedResult):
+            degraded += 1
+            if args.smoke:
+                assert r.guarantee is False, r
+                assert r.stale or r.quality == "degraded", r
+            continue
+        good += 1
+        b = base[gid]
+        if (not np.array_equal(np.asarray(r.C), b["C"])
+                or r.n_disconnected != 0):
+            mismatched += 1
+    n_retries = fe.resilience.n_retries
+    n_splits = fe.resilience.n_batch_splits
+    n_sink_errors = fe.telemetry.n_sink_errors
+    print(f"chaos replay: {good} full-quality + {degraded} degraded + "
+          f"{failed} failed of {n} ({not_done} pending), "
+          f"{plan.injected_total()} faults injected "
+          f"{dict(plan.injected)}, {n_retries} retries, "
+          f"{n_splits} batch splits, {n_sink_errors} sink errors")
+    fe.close()
+    if args.smoke:
+        assert not_done == 0, f"{not_done} futures permanently pending"
+        assert good >= 0.8 * n_base, \
+            f"goodput under faults {good}/{n_base} below the 0.8 floor"
+        assert mismatched == 0, \
+            f"{mismatched} non-degraded results differ from fault-free run"
+        assert plan.injected_total() > 0, "fault plan never fired"
+        assert n_retries > 0, "no retry recorded under an injecting plan"
+        assert n_sink_errors > 0, "crashing sink never isolated"
+
+    # -- phase 3: breaker opens, sheds stale, probes half-open, recloses ---
+    g = synth_graph("ego_small", args.seed + 500)
+    thr = 3
+    plan3 = FaultPlan(
+        {"engine.detect": FaultSpec(p=1.0, count=thr, skip=1)}, seed=1)
+    cfg3 = ServiceConfig(
+        detect=DetectOptions(louvain=LouvainConfig()), batch_size=1,
+        max_delay_s=0.0, fault_plan=plan3,
+        retry=RetryPolicy(max_attempts=1),
+        breaker=BreakerConfig(failure_threshold=thr, cooldown_s=0.4),
+        degrade_enabled=True, degrade_modes=("stale",))
+    fe3 = ServiceFrontend(cfg3)
+    f0 = fe3.submit_detect("brk", g)
+    fe3.drain()
+    e0 = f0.result(timeout=120)          # skip=1: the seed detect is clean
+    stale_served = 0
+    for i in range(thr + 1):             # thr failures open the breaker,
+        fi = fe3.submit_detect("brk", g)  # the +1 is shed while open
+        fe3.drain()
+        ri = fi.result(timeout=120)
+        if isinstance(ri, DegradedResult) and ri.mode == "stale":
+            stale_served += 1
+    states_open = dict(fe3.resilience.board.states())
+    time.sleep(0.5)                      # past cooldown -> half-open probe
+    f1 = fe3.submit_detect("brk", g)     # fault count exhausted: probe OK
+    fe3.drain()
+    e1 = f1.result(timeout=120)
+    states_closed = dict(fe3.resilience.board.states())
+    n_opens = fe3.resilience.board.n_opens
+    print(f"breaker: {stale_served} stale-degraded while failing/open "
+          f"{states_open} -> after cooldown {states_closed} "
+          f"({n_opens} opens)")
+    fe3.close()
+    if args.smoke:
+        assert stale_served == thr + 1, \
+            f"expected {thr + 1} stale-degraded serves, got {stale_served}"
+        assert "open" in states_open.values(), states_open
+        assert set(states_closed.values()) == {"closed"}, states_closed
+        assert not isinstance(e1, DegradedResult), \
+            "post-recovery result still degraded"
+        assert np.array_equal(np.asarray(e1.C), np.asarray(e0.C)), \
+            "post-recovery partition differs from the healthy one"
+
+    # -- phase 4: kill-and-restore through the automatic checkpointer ------
+    ckdir = tempfile.mkdtemp(prefix="chaos-ckpt-")
+    try:
+        plan4 = FaultPlan(
+            {"checkpoint.io": FaultSpec(p=1.0, count=1, skip=1)}, seed=2)
+        cfg4 = ServiceConfig(
+            detect=DetectOptions(louvain=LouvainConfig()), batch_size=4,
+            fault_plan=plan4, autockpt_dir=ckdir, autockpt_period_s=999.0,
+            autockpt_recover=False)
+        fe4 = ServiceFrontend(cfg4)
+        gids = []
+        for i, fam in enumerate(FAMILIES):
+            gid = f"k{i}-{fam}"
+            gids.append(gid)
+            fe4.submit_detect(gid, synth_graph(fam, args.seed + 40 + i))
+        fe4.drain()
+        fu = fe4.submit_update(gids[0], synth_updates(
+            fe4.store.get(gids[0]), args.seed + 99))
+        fe4.drain()
+        fu.result(timeout=120)
+        fe4.autockpt.snapshot(force=True)         # durable step (skip=1)
+        saved = {gid: (fe4.store.get(gid).version,
+                       np.asarray(fe4.store.get(gid).C).copy())
+                 for gid in gids}
+        fu = fe4.submit_update(gids[1], synth_updates(
+            fe4.store.get(gids[1]), args.seed + 123))
+        fe4.drain()
+        fu.result(timeout=120)
+        fe4.autockpt.snapshot(force=True)         # torn: arrays.npz cut
+        n_torn = fe4.autockpt.n_torn
+        fe4.autockpt.close(flush=False)           # simulated crash
+        fe4.telemetry.close()
+
+        cfg5 = ServiceConfig(
+            detect=DetectOptions(louvain=LouvainConfig()), batch_size=4,
+            autockpt_dir=ckdir, autockpt_period_s=999.0)
+        fe5 = ServiceFrontend(cfg5)
+        restored = fe5.restored_step
+        skipped = fe5.autockpt.n_corrupt_skipped
+        entries_ok = all(
+            fe5.store.get(gid) is not None
+            and fe5.store.get(gid).version == saved[gid][0]
+            and np.array_equal(np.asarray(fe5.store.get(gid).C),
+                               saved[gid][1])
+            for gid in gids)
+        fu = fe5.submit_update(gids[0], synth_updates(
+            fe5.store.get(gids[0]), args.seed + 7))
+        fe5.drain()
+        r = fu.result(timeout=120)
+        print(f"restore: {n_torn} torn snapshot skipped "
+              f"({skipped} corrupt steps), resumed at step {restored}, "
+              f"entries intact={entries_ok}, warm update -> "
+              f"v{r.version} disc={r.n_disconnected}")
+        fe5.close()
+        if args.smoke:
+            assert n_torn == 1, "checkpoint.io fault never tore a snapshot"
+            assert restored is not None and skipped >= 1, (restored, skipped)
+            assert entries_ok, "restored entries differ from the saved step"
+            assert r.version == saved[gids[0]][0] + 1, \
+                f"warm update resumed at v{r.version}, " \
+                f"want v{saved[gids[0]][0] + 1}"
+            assert r.n_disconnected == 0
+    finally:
+        shutil.rmtree(ckdir, ignore_errors=True)
+
+    report = dict(n=n, good=good, degraded=degraded, failed=failed,
+                  n_retries=n_retries, n_injected=plan.injected_total(),
+                  n_opens=n_opens, restored_step=restored)
+    if args.smoke:
+        print(f"CHAOS SMOKE OK ({good}/{n} full-quality under "
+              f"{report['n_injected']} injected faults, {degraded} "
+              f"degraded, {n_retries} retries, breaker recovered, "
+              f"kill-and-restore resumed at step {restored})")
+    return report
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -913,6 +1164,11 @@ def main(argv=None):
                          "forced-host mesh: bit-identical parity vs the "
                          "single-device driver + live halo-telemetry "
                          "scrape (re-execs with XLA_FLAGS if needed)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="resilience driver: deterministic fault injection "
+                         "with retries/breaker/degraded fallbacks vs a "
+                         "fault-free reference run, plus breaker recovery "
+                         "and a kill-and-restore checkpoint round trip")
     ap.add_argument("--compact-window", type=int, default=4,
                     help="deferred-compaction threshold for --stream "
                          "(0 = compact immediately)")
@@ -950,6 +1206,11 @@ def main(argv=None):
 
     if args.sharded:
         return main_sharded(args)
+
+    if args.chaos:
+        if args.smoke:
+            args.requests = 24
+        return main_chaos(args)
 
     if args.replay:
         if args.smoke:

@@ -1,0 +1,67 @@
+"""Fault-tolerance layer for the serving path (PR 9).
+
+* :mod:`repro.resilience.faults`   — deterministic, seedable
+  :class:`FaultPlan` injected at the service's real seams;
+* :mod:`repro.resilience.policy`   — :class:`RetryPolicy` with
+  exponential backoff + jitter, watchdog timeouts and wall-clock
+  budgets honoring admission deadlines;
+* :mod:`repro.resilience.breaker`  — per-bucket circuit breaker with
+  half-open probing;
+* :mod:`repro.resilience.degrade`  — degraded tier: stale last-committed
+  partitions and the LPA fast path, both flagged as NOT carrying the
+  zero-internally-disconnected guarantee;
+* :mod:`repro.resilience.autockpt` — background automatic
+  checkpointing, evicted-but-warm write-back and corrupt-tolerant
+  startup recovery;
+* :mod:`repro.resilience.manager`  — the front end's single handle on
+  all of the above.
+
+Installed via the resilience knobs on
+:class:`repro.service.ServiceConfig`; see the README "Resilience &
+failure handling" section.
+"""
+from repro.resilience.autockpt import AutoCheckpointer
+from repro.resilience.breaker import (
+    BreakerBoard,
+    BreakerConfig,
+    BreakerOpen,
+    CircuitBreaker,
+)
+from repro.resilience.degrade import DegradedResult, lpa_result, stale_result
+from repro.resilience.faults import (
+    FaultError,
+    FaultPlan,
+    FaultSpec,
+    FaultySink,
+    TransientCapacityError,
+)
+from repro.resilience.manager import ResilienceManager
+from repro.resilience.policy import (
+    DeadlineExceeded,
+    DispatchTimeout,
+    RetryPolicy,
+    call_with_timeout,
+    run_with_policy,
+)
+
+__all__ = [
+    "AutoCheckpointer",
+    "BreakerBoard",
+    "BreakerConfig",
+    "BreakerOpen",
+    "CircuitBreaker",
+    "DeadlineExceeded",
+    "DegradedResult",
+    "DispatchTimeout",
+    "FaultError",
+    "FaultPlan",
+    "FaultSpec",
+    "FaultySink",
+    "ResilienceManager",
+    "RetryPolicy",
+    "TransientCapacityError",
+    "call_with_timeout",
+    "lpa_result",
+    "run_with_policy",
+    "stale_result",
+]

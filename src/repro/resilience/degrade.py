@@ -1,0 +1,84 @@
+"""Degraded-tier results served while a bucket's breaker is open (or a
+batch has exhausted its retries).
+
+Two modes, tried in the order configured by
+``ServiceConfig(degrade_modes=...)``:
+
+* ``"stale"`` — the last *committed* partition from the result store,
+  marked ``stale=True`` with its age in ``staleness_s``.  The partition
+  did carry the zero-internally-disconnected guarantee when committed,
+  but it no longer reflects the current graph.
+* ``"lpa"``   — a fresh label-propagation fast path
+  (:func:`repro.core.lpa.lpa_run`), flagged ``quality='degraded'``.
+  LPA can and does produce internally-disconnected communities — that
+  is exactly the failure mode the paper's refinement fixes.
+
+Either way the result is a :class:`DegradedResult`, never a
+:class:`StoreEntry`: ``guarantee`` is always ``False``, degraded output
+is never committed back to the store, and callers can (and the chaos
+driver does) separate it from full-quality results by type.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.lpa import lpa_run
+from repro.core.modularity import modularity
+
+
+@dataclasses.dataclass
+class DegradedResult:
+    """A reduced-quality answer, explicitly NOT carrying the paper's
+    zero-internally-disconnected guarantee (``guarantee=False``)."""
+
+    graph_id: str
+    C: np.ndarray                 # labels over the padded node axis
+    n_communities: int
+    q: float                      # modularity of the served partition
+    mode: str                     # "stale" | "lpa"
+    quality: str                  # "stale" | "degraded"
+    stale: bool
+    staleness_s: float            # age of the served partition (0 if fresh)
+    version: int = 0              # store version served (stale mode only)
+    n_disconnected: Optional[int] = None  # None = not evaluated (lpa)
+    guarantee: bool = False
+
+
+def stale_result(graph_id: str, entry, *, now: float) -> DegradedResult:
+    """Serve the last committed partition from a store entry."""
+    return DegradedResult(
+        graph_id=graph_id,
+        C=np.asarray(entry.C),
+        n_communities=int(entry.n_communities),
+        q=float(entry.q),
+        mode="stale",
+        quality="stale",
+        stale=True,
+        staleness_s=max(float(now) - float(entry.t_stored), 0.0),
+        version=int(entry.version),
+        n_disconnected=int(entry.n_disconnected),
+    )
+
+
+def lpa_result(graph_id: str, graph, *, max_iters: int = 50
+               ) -> DegradedResult:
+    """Compute a fresh LPA fast-path partition for ``graph``."""
+    labels, _ = lpa_run(graph, max_iters=max_iters)
+    C = np.asarray(labels, dtype=np.int32)
+    mask = np.asarray(graph.node_mask())
+    n_comms = int(C[mask].max()) + 1 if bool(mask.any()) else 0
+    q = float(modularity(graph.src, graph.dst, graph.w, labels, graph.nv))
+    return DegradedResult(
+        graph_id=graph_id,
+        C=C,
+        n_communities=n_comms,
+        q=q,
+        mode="lpa",
+        quality="degraded",
+        stale=False,
+        staleness_s=0.0,
+        n_disconnected=None,
+    )

@@ -49,8 +49,19 @@ Observability: every request carries a per-phase trace
 exporter_port=...)`` attaches aggregation sinks plus a Prometheus-text
 ``/metrics`` endpoint — see :mod:`repro.telemetry` and the README
 "Observability" section.
+
+Resilience (PR 9, :mod:`repro.resilience`): ``ServiceConfig`` installs
+a deterministic :class:`FaultPlan`, a :class:`RetryPolicy` (backoff +
+watchdog + split-in-half batch retry), a per-bucket circuit breaker
+shedding to flagged degraded tiers (:class:`DegradedResult`), and
+background automatic checkpointing with corrupt-tolerant startup
+recovery — see the README "Resilience & failure handling" section.
 """
 from repro.core.dynamic import CapacityError, GraphUpdate
+from repro.resilience import (
+    BreakerConfig, BreakerOpen, DeadlineExceeded, DegradedResult,
+    FaultPlan, FaultSpec, RetryPolicy,
+)
 from repro.service.admission import (
     AdmissionController, DEFAULT_TENANT, PendingRequest, QueueFull,
     ServiceConfig,
@@ -78,21 +89,28 @@ __all__ = [
     "AdmissionController",
     "AsyncCommunityService",
     "BatchedLouvainEngine",
+    "BreakerConfig",
+    "BreakerOpen",
     "Bucket",
     "CapacityError",
     "CapacityExceeded",
     "CommunityService",
     "DEFAULT_BUCKETS",
     "DEFAULT_TENANT",
+    "DeadlineExceeded",
+    "DegradedResult",
     "DetectResult",
     "DetectionFuture",
     "DispatchInfo",
+    "FaultPlan",
+    "FaultSpec",
     "GraphUpdate",
     "LifecycleEvent",
     "PendingRequest",
     "QueueFull",
     "ReplayConfig",
     "ResultStore",
+    "RetryPolicy",
     "ServiceConfig",
     "ServiceFrontend",
     "ServiceMetrics",

@@ -153,6 +153,40 @@ class ServiceConfig:
     timeline_max_rows: int = 256
     timeline_max_communities: int = 4096
     compact_window: int = 0
+    # Resilience (:mod:`repro.resilience`) — all off by default, so an
+    # unconfigured service runs the exact pre-PR-9 code paths:
+    #   fault_plan:      deterministic chaos injected at the real seams
+    #                    (engine dispatch raise/hang, store commit,
+    #                    checkpoint IO, telemetry sink, transient
+    #                    capacity); None = no injection.
+    #   retry:           RetryPolicy wrapped around engine dispatch and
+    #                    store commits (attempts, backoff + jitter,
+    #                    watchdog timeout, wall-clock budget honoring
+    #                    admission deadlines); None = single attempt,
+    #                    no watchdog thread.
+    #   breaker:         per-bucket circuit BreakerConfig; an OPEN bucket
+    #                    sheds to the degraded tier (or fails fast).
+    #   degrade_enabled: serve stale/LPA degraded results (flagged, NOT
+    #                    carrying the zero-disconnected guarantee) when a
+    #                    batch exhausts retries or its breaker is open.
+    #   degrade_modes:   order of degraded tiers to try ("stale", "lpa").
+    #   degrade_tenants: tenants opted in (None = all tenants).
+    #   autockpt_dir:    enable background automatic checkpointing into
+    #                    this directory (periodic + dirty-threshold
+    #                    snapshots, evicted-warm write-back, startup
+    #                    recovery); None = caller-driven only.
+    fault_plan: Optional[object] = None
+    retry: Optional[object] = None
+    breaker: Optional[object] = None
+    degrade_enabled: bool = False
+    degrade_modes: Tuple[str, ...] = ("stale", "lpa")
+    degrade_tenants: Optional[Tuple[str, ...]] = None
+    autockpt_dir: Optional[str] = None
+    autockpt_period_s: float = 30.0
+    autockpt_dirty: int = 0
+    autockpt_keep: int = 3
+    autockpt_writeback: int = 64
+    autockpt_recover: bool = True
     # deprecated flat detection knobs (PR<=7 spelling) — folded into
     # ``detect`` by __post_init__ through the one-warning shim; read back
     # via the compatibility properties installed after the class body
@@ -202,6 +236,26 @@ class ServiceConfig:
             if getattr(self, knob) < 1:
                 raise ValueError(
                     f"{knob} must be >= 1, got {getattr(self, knob)}")
+        bad = [m for m in self.degrade_modes if m not in ("stale", "lpa")]
+        if bad:
+            raise ValueError(
+                f"degrade_modes must be drawn from ('stale', 'lpa'), got "
+                f"{bad}")
+        if not self.degrade_modes:
+            raise ValueError("degrade_modes must not be empty")
+        if self.autockpt_period_s <= 0:
+            raise ValueError(
+                f"autockpt_period_s must be > 0, got {self.autockpt_period_s}")
+        if self.autockpt_dirty < 0:
+            raise ValueError(
+                f"autockpt_dirty must be >= 0, got {self.autockpt_dirty}")
+        if self.autockpt_keep < 1:
+            raise ValueError(
+                f"autockpt_keep must be >= 1, got {self.autockpt_keep}")
+        if self.autockpt_writeback < 0:
+            raise ValueError(
+                f"autockpt_writeback must be >= 0, got "
+                f"{self.autockpt_writeback}")
         object.__setattr__(self, "buckets", tuple(sorted(self.buckets)))
 
 

@@ -127,6 +127,7 @@ class BatchedLouvainEngine:
                  sub_batch: Optional[int] = None,
                  telemetry: Optional[Telemetry] = None,
                  profile_dir: Optional[str] = None,
+                 faults=None,
                  dense_max_nv: Optional[int] = None,
                  dense_small_nv: Optional[int] = None,
                  dense_min_density: Optional[float] = None,
@@ -150,6 +151,10 @@ class BatchedLouvainEngine:
           profile_dir: when set, every dispatch runs inside
             ``jax.profiler.trace(profile_dir)`` for on-device deep dives
             (TensorBoard-viewable; expensive — opt-in only).
+          faults: optional :class:`repro.resilience.faults.FaultPlan`
+            consulted at dispatch entry (``engine.detect[.hang]`` /
+            ``engine.update[.hang]`` seams).  Warm-up pre-compiles
+            bypass it — injected chaos must not fire during startup.
           dense_max_nv / dense_small_nv / dense_min_density / seg_impl /
             seg_block_m: DEPRECATED flat spellings of the DetectOptions
             fields; folded through the shim (one warning per process).
@@ -177,6 +182,7 @@ class BatchedLouvainEngine:
         self.seg_impl = self.options.seg_impl
         self.telemetry = telemetry or Telemetry()
         self.profile_dir = profile_dir
+        self.faults = faults
         self.n_compile_hits = 0
         self.n_compile_misses = 0
         self.last_detect_info: Optional[DispatchInfo] = None
@@ -315,29 +321,42 @@ class BatchedLouvainEngine:
         n = 0
         pad = filler(bucket)
         tiles = 1
-        while True:
-            key = self._detect_key(bucket, tiles)
-            if key not in self._compiled:
-                self.detect_batch([pad] * (tiles * self.sub_batch))
-                n += 1
-            # cover the rounded-up rung too: a full batch of max_batch
-            # dispatches at the next power of two, not at max_batch
-            if tiles * self.sub_batch >= max(max_batch, self.sub_batch):
-                break
-            tiles *= 2
+        # warm-up dispatches bypass any installed fault plan: injected
+        # chaos is for live traffic, not startup pre-compiles
+        faults, self.faults = self.faults, None
+        try:
+            while True:
+                key = self._detect_key(bucket, tiles)
+                if key not in self._compiled:
+                    self.detect_batch([pad] * (tiles * self.sub_batch))
+                    n += 1
+                # cover the rounded-up rung too: a full batch of max_batch
+                # dispatches at the next power of two, not at max_batch
+                if tiles * self.sub_batch >= max(max_batch, self.sub_batch):
+                    break
+                tiles *= 2
+        finally:
+            self.faults = faults
         return n
 
     # -- execution --------------------------------------------------------
-    def detect_batch(self, graphs: Sequence[Graph]) -> list[DetectResult]:
+    def detect_batch(self, graphs: Sequence[Graph], *,
+                     fault_ids: Optional[Sequence[str]] = None
+                     ) -> list[DetectResult]:
         """Detect communities for a homogeneous (same-bucket) batch with
         one jitted call.
 
         The stack is shaped [n_tiles, sub_batch, ...]; the tail tile is
         padded with filler graphs whose results are dropped.
+        ``fault_ids`` (the batch's graph ids) scope any installed fault
+        plan's per-graph poison specs to this dispatch.
         """
         graphs = list(graphs)
         if not graphs:
             return []
+        if self.faults is not None:
+            self.faults.perturb("engine.detect.hang", ids=fault_ids)
+            self.faults.perturb("engine.detect", ids=fault_ids)
         t_start = time.perf_counter()
         bucket = bucket_of(graphs[0])
         b = self.sub_batch
@@ -436,7 +455,9 @@ class BatchedLouvainEngine:
 
     # -- batched warm updates ---------------------------------------------
     def update_batch(self, items: Sequence[UpdateItem], *, tau: float = 1e-3,
-                     max_iters: int = 10) -> list[UpdateResult]:
+                     max_iters: int = 10,
+                     fault_ids: Optional[Sequence[str]] = None
+                     ) -> list[UpdateResult]:
         """Run a homogeneous (same-bucket) batch of delta-screened warm
         updates with one jitted call.
 
@@ -453,6 +474,9 @@ class BatchedLouvainEngine:
         items = list(items)
         if not items:
             return []
+        if self.faults is not None:
+            self.faults.perturb("engine.update.hang", ids=fault_ids)
+            self.faults.perturb("engine.update", ids=fault_ids)
         t_start = time.perf_counter()
         bucket = bucket_of(items[0][0])
         b = self.sub_batch
@@ -518,14 +542,19 @@ class BatchedLouvainEngine:
         (mirror of :meth:`warm` for detections)."""
         n = 0
         tiles = 1
-        while True:
-            key = self._update_key(bucket, tiles, tau, max_iters)
-            if key not in self._compiled:
-                self.update_batch(
-                    [self._filler_update(bucket)] * (tiles * self.sub_batch),
-                    tau=tau, max_iters=max_iters)
-                n += 1
-            if tiles * self.sub_batch >= max(max_batch, self.sub_batch):
-                break
-            tiles *= 2
+        faults, self.faults = self.faults, None  # see warm()
+        try:
+            while True:
+                key = self._update_key(bucket, tiles, tau, max_iters)
+                if key not in self._compiled:
+                    self.update_batch(
+                        [self._filler_update(bucket)]
+                        * (tiles * self.sub_batch),
+                        tau=tau, max_iters=max_iters)
+                    n += 1
+                if tiles * self.sub_batch >= max(max_batch, self.sub_batch):
+                    break
+                tiles *= 2
+        finally:
+            self.faults = faults
         return n

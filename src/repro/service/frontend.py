@@ -54,6 +54,11 @@ from repro.core.dynamic import (
     merge_edge_deltas, rebuild_with_vertex_ops,
 )
 from repro.graph.container import Graph, from_coo
+from repro.resilience.autockpt import AutoCheckpointer
+from repro.resilience.breaker import BreakerOpen
+from repro.resilience.faults import FaultySink
+from repro.resilience.manager import ResilienceManager
+from repro.resilience.policy import DeadlineExceeded
 from repro.service.admission import (
     DEFAULT_TENANT, AdmissionController, PendingRequest, QueueFull,
     ServiceConfig,
@@ -171,7 +176,8 @@ class ServiceFrontend:
                                             port=c.exporter_port)
         self.engine = BatchedLouvainEngine(
             options=c.detect, sub_batch=c.sub_batch,
-            telemetry=self.telemetry, profile_dir=c.profile_dir)
+            telemetry=self.telemetry, profile_dir=c.profile_dir,
+            faults=c.fault_plan)
         self.admission = AdmissionController(
             c.buckets, batch_size=c.batch_size, max_delay_s=c.max_delay_s,
             max_pending_per_tenant=c.max_pending_per_tenant,
@@ -196,8 +202,34 @@ class ServiceFrontend:
             clock=self.clock,
             compact_window=c.compact_window,
             on_commit=(self._on_store_commit
-                       if self.timelines is not None else None))
+                       if (c.timeline_enabled or c.autockpt_dir is not None)
+                       else None),
+            on_evict=(self._on_store_evict
+                      if c.autockpt_dir is not None else None))
         self.metrics = ServiceMetrics(telemetry=self.telemetry)
+        # resilience: fault plan / retry policy / breaker board / degraded
+        # tier behind one manager with zero-overhead fast paths when off
+        self.resilience = ResilienceManager(
+            c, telemetry=self.telemetry, metrics=self.metrics,
+            clock=self.clock)
+        if c.fault_plan is not None and \
+                "telemetry.sink" in c.fault_plan.seams:
+            self.telemetry.register(FaultySink(c.fault_plan))
+        # automatic checkpointing + startup recovery (ROADMAP carried
+        # item): recover the newest readable snapshot BEFORE the
+        # background thread starts writing new ones
+        self.autockpt: Optional[AutoCheckpointer] = None
+        self.restored_step: Optional[int] = None
+        if c.autockpt_dir is not None:
+            self.autockpt = AutoCheckpointer(
+                self, ckpt_dir=c.autockpt_dir,
+                period_s=c.autockpt_period_s,
+                dirty_threshold=c.autockpt_dirty,
+                keep=c.autockpt_keep, writeback=c.autockpt_writeback,
+                faults=c.fault_plan, telemetry=self.telemetry)
+            if c.autockpt_recover:
+                self.restored_step = self.autockpt.recover()
+            self.autockpt.start()
         # monotonic request ids: never reuses after a dispatch (the old
         # n_detect + pending() scheme collided once requests were served)
         self._seq = itertools.count()
@@ -221,6 +253,13 @@ class ServiceFrontend:
         ``exempt_bound`` is for internal continuations that must not be
         droppable (see :meth:`submit_update`'s rebucket path)."""
         t0 = self.clock()
+        # an already-expired deadline fails fast at the front door: the
+        # work's future could never be used, so don't repad or queue it
+        if deadline_s is not None and float(deadline_s) <= 0.0:
+            self.metrics.deadline_reject(tenant)
+            raise DeadlineExceeded(
+                f"deadline_s={deadline_s} already expired at submit for "
+                f"{graph_id!r}")
         # advisory bound pre-check: the authoritative (locked) check is in
         # admission.submit, but overload is exactly when rejections fire,
         # and a rejected request should not pay the bucket repad first
@@ -334,8 +373,21 @@ class ServiceFrontend:
 
     # -- temporal tracking -------------------------------------------------
     def _on_store_commit(self, graph_id: str, entry, plan) -> None:
-        """ResultStore commit hook (fires outside the store lock)."""
-        self.timelines.observe_commit(graph_id, entry, plan)
+        """ResultStore commit hook (fires outside the store lock):
+        timelines snapshot the partition, the auto-checkpointer counts it
+        toward the dirty threshold."""
+        if self.timelines is not None:
+            self.timelines.observe_commit(graph_id, entry, plan)
+        ck = getattr(self, "autockpt", None)
+        if ck is not None:
+            ck.note_commit(graph_id)
+
+    def _on_store_evict(self, graph_id: str, entry) -> None:
+        """ResultStore LRU-eviction hook: buffer the still-warm entry for
+        write-back into the next automatic snapshot."""
+        ck = getattr(self, "autockpt", None)
+        if ck is not None:
+            ck.note_evicted(graph_id, entry)
 
     def _require_timelines(self) -> TimelineManager:
         if self.timelines is None:
@@ -505,43 +557,139 @@ class ServiceFrontend:
     def execute(self, batches: List[Batch]) -> int:
         """Run composed batches through the engine, store results, resolve
         futures.  An engine failure fails that batch's futures (counted)
-        and the remaining batches still run — the dispatcher survives."""
+        and the remaining batches still run — the dispatcher survives.
+        With resilience configured, failures route through retry /
+        split-in-half / breaker / degraded-tier handling first (see
+        :meth:`_execute_detects`)."""
         served = 0
         for kind, bucket, reqs in batches:
             if kind == "update":
                 served += self._execute_updates(bucket, reqs)
+            else:
+                served += self._execute_detects(bucket, reqs)
+        return served
+
+    # Compose-time deadline slack: a request's own deadline is what FORCES
+    # the flush that dispatches it, so at compose time ``now`` is always a
+    # poll tick or two past the deadline — that request must still be
+    # served.  Only requests overdue by more than this grace (they sat in
+    # queue while other batches dispatched) fast-fail.
+    DEADLINE_COMPOSE_GRACE_S = 0.25
+
+    def _expire_overdue(self, reqs):
+        """Compose-time deadline check: fail futures whose deadline has
+        long passed instead of dispatching work nobody can use.  A small
+        grace window exempts the deadline-triggered flush itself."""
+        now = self.clock()
+        live = []
+        for r in reqs:
+            if (r.deadline is not None
+                    and now >= r.deadline + self.DEADLINE_COMPOSE_GRACE_S):
+                self.metrics.deadline_reject(r.tenant)
+                r.future.set_exception(DeadlineExceeded(
+                    f"{r.req_id}: deadline passed "
+                    f"{now - r.deadline:.4f}s before dispatch"))
+            else:
+                live.append(r)
+        return live
+
+    def _batch_deadline(self, reqs) -> Optional[float]:
+        """Absolute retry bound for a batch: the latest member deadline
+        (while any member could still use the result, retrying is worth
+        it); None when any member is deadline-less."""
+        deadlines = [r.deadline for r in reqs]
+        if any(d is None for d in deadlines):
+            return None
+        return max(deadlines)
+
+    def _shed(self, bucket: Bucket, reqs, exc: BaseException) -> int:
+        """Final failure handling for detect requests: serve the degraded
+        tier to opted-in tenants, fail the rest with ``exc``."""
+        served = 0
+        now = self.clock()
+        for r in reqs:
+            dr = self.resilience.degraded(
+                r.graph_id, r.graph, self.store, now=now, tenant=r.tenant)
+            if dr is None:
+                self.metrics.fail(r.tenant)
+                r.future.set_exception(exc)
                 continue
+            self.metrics.observe("detect", now - r.t_submit, now,
+                                 tenant=r.tenant)
+            tr = r.future.trace if r.future is not None else None
+            if tr is not None:
+                tr.mark("resolve", now, self.clock())
+                self.telemetry.trace(tr)
+            r.future.set_result(dr)
+            served += 1
+        return served
+
+    def _detect_failed(self, bucket: Bucket, reqs,
+                       exc: BaseException) -> int:
+        """A batch dispatch failed after retries.  With resilience on,
+        split it in half and re-run each half independently — a single
+        poison graph ends up failing (or degrading) alone instead of
+        poisoning its whole composed batch's futures."""
+        if len(reqs) > 1 and self.resilience.enabled:
+            self.resilience.note_split()
+            mid = len(reqs) // 2
+            return (self._execute_detects(bucket, reqs[:mid])
+                    + self._execute_detects(bucket, reqs[mid:]))
+        return self._shed(bucket, reqs, exc)
+
+    def _execute_detects(self, bucket: Bucket, reqs) -> int:
+        """Dispatch one composed detect batch with the full resilience
+        stack: expired-deadline fast-fail, breaker shed, retried dispatch
+        (watchdog-bounded), split-in-half on failure, per-request store
+        commit under the commit seam, degraded-tier fallback."""
+        reqs = self._expire_overdue(reqs)
+        if not reqs:
+            return 0
+        res_mgr = self.resilience
+        if not res_mgr.allow(bucket):
+            return self._shed(bucket, reqs, BreakerOpen(
+                f"bucket {bucket.n_cap}x{bucket.m_cap} breaker is open"))
+        try:
+            results = res_mgr.dispatch(
+                "detect", bucket,
+                lambda: self.engine.detect_batch(
+                    [r.graph for r in reqs],
+                    fault_ids=[r.graph_id for r in reqs]),
+                deadline=self._batch_deadline(reqs))
+        except Exception as e:
+            return self._detect_failed(bucket, reqs, e)
+        served = 0
+        info = self.engine.last_detect_info
+        now = self.clock()
+        for req, res in zip(reqs, results):
+            tr = req.future.trace if req.future is not None else None
+            if tr is not None and info is not None:
+                _mark_engine_spans(tr, info)
+            t_s0 = self.clock()
             try:
-                results = self.engine.detect_batch([r.graph for r in reqs])
-            except Exception as e:
-                for r in reqs:
-                    self.metrics.fail(r.tenant)
-                    r.future.set_exception(e)
-                continue
-            info = self.engine.last_detect_info
-            now = self.clock()
-            for req, res in zip(reqs, results):
-                tr = req.future.trace if req.future is not None else None
-                if tr is not None and info is not None:
-                    _mark_engine_spans(tr, info)
-                t_s0 = self.clock()
-                entry = self.store.put(
+                entry = res_mgr.commit(partial(
+                    self.store.put,
                     req.graph_id, req.graph, res.C,
                     n_communities=res.n_communities,
                     n_disconnected=res.n_disconnected, q=res.q,
-                )
-                t_s1 = self.clock()
-                self.metrics.observe("detect", now - req.t_submit, now,
-                                     tenant=req.tenant)
-                self.metrics.edges_processed += float(live_edges(req.graph))
-                if tr is not None:
-                    tr.mark("store-commit", t_s0, t_s1)
-                    # resolve closes the trace just before the future
-                    # lands so a woken caller always sees a full span set
-                    tr.mark("resolve", t_s1, self.clock())
-                    self.telemetry.trace(tr)
-                req.future.set_result(entry)
-                served += 1
+                ))
+            except Exception as e:
+                # commit failed after retries: this one request degrades
+                # (stale = the previous committed entry) or fails alone
+                served += self._shed(bucket, [req], e)
+                continue
+            t_s1 = self.clock()
+            self.metrics.observe("detect", now - req.t_submit, now,
+                                 tenant=req.tenant)
+            self.metrics.edges_processed += float(live_edges(req.graph))
+            if tr is not None:
+                tr.mark("store-commit", t_s0, t_s1)
+                # resolve closes the trace just before the future
+                # lands so a woken caller always sees a full span set
+                tr.mark("resolve", t_s1, self.clock())
+                self.telemetry.trace(tr)
+            req.future.set_result(entry)
+            served += 1
         return served
 
     def _execute_updates(self, bucket: Bucket, ureqs) -> int:
@@ -607,11 +755,14 @@ class ServiceFrontend:
         for i, p in enumerate(plans):
             groups.setdefault(p.bucket, []).append(i)
         served = 0
-        for idxs in groups.values():
+        for grp_bucket, idxs in groups.items():
             try:
-                results = self.engine.update_batch(
-                    [(plans[i].graph, plans[i].C_prev, plans[i].touched)
-                     for i in idxs])
+                results = self.resilience.dispatch(
+                    "update", grp_bucket,
+                    lambda idxs=idxs: self.engine.update_batch(
+                        [(plans[i].graph, plans[i].C_prev,
+                          plans[i].touched) for i in idxs],
+                        fault_ids=[plans[i].graph_id for i in idxs]))
             except Exception as e:
                 for i in idxs:
                     for r in plan_reqs[i]:
@@ -628,9 +779,18 @@ class ServiceFrontend:
             for i, res in zip(idxs, results):
                 plan = plans[i]
                 t_s0 = self.clock()
-                entry = self.store.commit_update(
-                    plan, C=res.C, n_communities=res.n_communities,
-                    n_disconnected=res.n_disconnected, q=res.q)
+                try:
+                    entry = self.resilience.commit(partial(
+                        self.store.commit_update,
+                        plan, C=res.C, n_communities=res.n_communities,
+                        n_disconnected=res.n_disconnected, q=res.q))
+                except Exception as e:
+                    # a failed commit fails THIS plan's futures only; the
+                    # rest of the batch still resolves
+                    for r in plan_reqs[i]:
+                        self.metrics.fail(r.tenant)
+                        r.future.set_exception(e)
+                    continue
                 t_s1 = self.clock()
                 if entry is None:
                     # the entry moved on (evicted/re-detected) while the
@@ -692,9 +852,13 @@ class ServiceFrontend:
             return out
 
     def close(self):
-        """Shut down the telemetry side: stop the exporter's HTTP thread
-        and close every registered sink (flushes the JSONL log).  The
-        serving structures stay usable — this only detaches observers."""
+        """Shut down the background side: stop the auto-checkpointer
+        (taking one final flush snapshot), stop the exporter's HTTP
+        thread and close every registered sink (flushes the JSONL log).
+        The serving structures stay usable — this only detaches
+        observers."""
+        if self.autockpt is not None:
+            self.autockpt.close()
         if self.exporter is not None:
             self.exporter.close()
             self.exporter = None

@@ -93,6 +93,10 @@ class ServiceMetrics:
         self.n_vertex_added = 0          # vertices claimed by updates
         self.n_vertex_removed = 0        # vertices tombstoned by updates
         self.edges_processed = 0.0       # directed edges through the engine
+        self.n_deadline_rejects = 0      # futures failed DeadlineExceeded
+        self.n_retries = 0               # dispatch/commit attempts retried
+        self.n_batch_splits = 0          # failed batches split-in-half
+        self.n_degraded = 0              # requests served by degraded tier
         self.t_first: Optional[float] = None
         self.t_last: Optional[float] = None
         self.tenants: Dict[str, TenantMetrics] = {}
@@ -136,6 +140,14 @@ class ServiceMetrics:
             self.telemetry.counter("requests_rejected", 1,
                                    {"tenant": tenant})
 
+    def deadline_reject(self, tenant: str = "default"):
+        """An already-expired-deadline request failed fast (distinct from
+        queue rejections: the work was never dispatched)."""
+        self.n_deadline_rejects += 1
+        if self.telemetry.enabled:
+            self.telemetry.counter("deadline_rejects", 1,
+                                   {"tenant": tenant})
+
     def fail(self, tenant: str = "default"):
         self.n_failed += 1
         self.tenant(tenant).n_failed += 1
@@ -157,6 +169,10 @@ class ServiceMetrics:
             n_rejected=self.n_rejected,
             n_failed=self.n_failed,
             n_update_batches=self.n_update_batches,
+            n_deadline_rejects=self.n_deadline_rejects,
+            n_retries=self.n_retries,
+            n_batch_splits=self.n_batch_splits,
+            n_degraded=self.n_degraded,
             n_deletions=self.n_deletions,
             n_vertex_added=self.n_vertex_added,
             n_vertex_removed=self.n_vertex_removed,

@@ -147,7 +147,7 @@ class ResultStore:
     def __init__(self, *, options: Optional[DetectOptions] = None,
                  max_entries: Optional[int] = None,
                  ttl_s: Optional[float] = None, clock=None,
-                 compact_window: int = 0, on_commit=None,
+                 compact_window: int = 0, on_commit=None, on_evict=None,
                  dense_max_nv: Optional[int] = None,
                  dense_small_nv: Optional[int] = None,
                  dense_min_density: Optional[float] = None,
@@ -192,6 +192,14 @@ class ResultStore:
         # Exceptions are swallowed + counted (the store must not die for
         # a subscriber).
         self.on_commit = on_commit
+        # eviction hook: called as on_evict(graph_id, entry) for entries
+        # dropped by LRU pressure (still-warm state the auto-checkpointer
+        # writes back into snapshots).  TTL expiries do NOT fire it —
+        # an expired entry aged out on purpose.  Fired right after the
+        # evicting put's lock scope; on the commit_update -> put nesting
+        # the outer RLock is still held, so the hook must not call back
+        # into the store.  Exceptions are swallowed + counted.
+        self.on_evict = on_evict
         self.n_warm_updates = 0
         self.n_invalidations = 0
         self.n_evicted = 0
@@ -222,6 +230,7 @@ class ResultStore:
     def put(self, graph_id: str, graph: Graph, C: np.ndarray, *,
             n_communities: int, n_disconnected: int, q: float,
             deferred=None, _notify: bool = True) -> StoreEntry:
+        evicted = []
         with self._lock:
             version = self._versions.get(graph_id, 0) + 1
             self._versions[graph_id] = version
@@ -237,8 +246,15 @@ class ResultStore:
             self._entries.move_to_end(graph_id)
             if self.max_entries is not None:
                 while len(self._entries) > self.max_entries:
-                    self._entries.popitem(last=False)
+                    evicted.append(self._entries.popitem(last=False))
                     self.n_evicted += 1
+        if self.on_evict is not None:
+            for gid_e, entry_e in evicted:
+                try:
+                    self.on_evict(gid_e, entry_e)
+                except Exception as e:  # noqa: BLE001 — subscriber fault
+                    self.n_commit_hook_errors += 1
+                    self.last_hook_error = repr(e)
         # a direct put IS a fresh-detect publish; warm commits route the
         # plan through commit_update's own _fire (also outside the lock)
         if _notify:

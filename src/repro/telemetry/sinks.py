@@ -15,7 +15,8 @@ subclasses receive them (``on_counter`` / ``on_gauge`` /
 Write a custom sink by subclassing :class:`MetricSink` and overriding
 any subset of the hooks (see ``examples/telemetry_sinks.py``).  Sink
 errors are isolated: a raising sink never breaks the serving path (the
-first error per sink is recorded on ``hub.sink_errors``).
+first error per sink is recorded on ``hub.sink_errors``, bounded at
+``Telemetry.max_sink_errors`` with a drop counter).
 
 The hub is cheap when nothing listens: every emit method early-outs on
 an empty sink tuple, so a telemetry-disabled service pays one attribute
@@ -25,6 +26,7 @@ from __future__ import annotations
 
 import json
 import threading
+from collections import OrderedDict
 from typing import Dict, Optional, TextIO, Tuple
 
 from repro.telemetry.histogram import StreamingHistogram
@@ -63,12 +65,23 @@ class MetricSink:
 
 
 class Telemetry:
-    """The hub: emit-side API for the service, registry for sinks."""
+    """The hub: emit-side API for the service, registry for sinks.
+
+    Sink exceptions never break serving: ``_guard`` records the first
+    error per sink in ``sink_errors``, bounded at ``max_sink_errors``
+    entries (oldest dropped, counted in ``n_sink_errors_dropped``) so a
+    long-lived service churning through failing sinks cannot grow the
+    record without bound; ``n_sink_errors`` counts every guarded raise.
+    """
+
+    max_sink_errors = 16
 
     def __init__(self):
         self._sinks: Tuple[MetricSink, ...] = ()
         self._lock = threading.Lock()
-        self.sink_errors: Dict[int, BaseException] = {}
+        self.sink_errors: "OrderedDict[int, BaseException]" = OrderedDict()
+        self.n_sink_errors = 0
+        self.n_sink_errors_dropped = 0
 
     # -- registry ---------------------------------------------------------
     def register(self, sink: MetricSink) -> MetricSink:
@@ -124,7 +137,13 @@ class Telemetry:
         try:
             fn(*args)
         except Exception as e:          # sink bugs never break serving
-            self.sink_errors.setdefault(id(sink), e)
+            with self._lock:
+                self.n_sink_errors += 1
+                if id(sink) not in self.sink_errors:
+                    self.sink_errors[id(sink)] = e
+                    while len(self.sink_errors) > self.max_sink_errors:
+                        self.sink_errors.popitem(last=False)
+                        self.n_sink_errors_dropped += 1
 
 
 class InMemorySink(MetricSink):

@@ -27,19 +27,41 @@ from typing import Optional
 import numpy as np
 
 from repro.checkpoint.store import (
-    latest_step, load_checkpoint_arrays, save_checkpoint,
+    CheckpointCorrupt, latest_step, load_checkpoint_arrays, save_checkpoint,
 )
 from repro.graph.container import Graph
 
 _KIND = "timeline-service"
 
 
+def _entry_arrays(arrays, graphs_meta, gi, gid, entry, *, evicted=False):
+    g = entry.graph
+    arrays[f"graph{gi}.src"] = np.asarray(g.src, np.int32)
+    arrays[f"graph{gi}.dst"] = np.asarray(g.dst, np.int32)
+    arrays[f"graph{gi}.w"] = np.asarray(g.w, np.float32)
+    arrays[f"graph{gi}.C"] = np.asarray(entry.C, np.int32)
+    arrays[f"graph{gi}.deferred"] = np.asarray(entry.deferred, np.int64)
+    meta = dict(
+        index=gi, graph_id=gid,
+        n_nodes=int(g.n_nodes), n_cap=int(g.n_cap), m_cap=int(g.m_cap),
+        n_communities=int(entry.n_communities),
+        n_disconnected=int(entry.n_disconnected),
+        q=float(entry.q), version=int(entry.version))
+    if evicted:
+        meta["evicted"] = True
+    graphs_meta.append(meta)
+
+
 def save_service_checkpoint(frontend, ckpt_dir: str, *,
-                            step: Optional[int] = None) -> int:
+                            step: Optional[int] = None,
+                            extra_entries=None) -> int:
     """Write one atomic checkpoint of ``frontend``'s store + timelines.
 
     ``step`` defaults to ``latest_step + 1`` (0 for a fresh dir).
-    Returns the step written.
+    ``extra_entries`` (gid -> StoreEntry) are evicted-but-warm entries to
+    write back alongside the resident ones (the auto-checkpointer's
+    eviction buffer); resident entries win on gid collision.  Returns the
+    step written.
     """
     if step is None:
         prev = latest_step(ckpt_dir)
@@ -47,22 +69,20 @@ def save_service_checkpoint(frontend, ckpt_dir: str, *,
     arrays = {}
     graphs_meta = []
     store = frontend.store
-    for gi, gid in enumerate(store.graph_ids()):
+    gi = 0
+    written = set()
+    for gid in store.graph_ids():
         entry = store.get(gid)
         if entry is None:  # evicted between listing and get
             continue
-        g = entry.graph
-        arrays[f"graph{gi}.src"] = np.asarray(g.src, np.int32)
-        arrays[f"graph{gi}.dst"] = np.asarray(g.dst, np.int32)
-        arrays[f"graph{gi}.w"] = np.asarray(g.w, np.float32)
-        arrays[f"graph{gi}.C"] = np.asarray(entry.C, np.int32)
-        arrays[f"graph{gi}.deferred"] = np.asarray(entry.deferred, np.int64)
-        graphs_meta.append(dict(
-            index=gi, graph_id=gid,
-            n_nodes=int(g.n_nodes), n_cap=int(g.n_cap), m_cap=int(g.m_cap),
-            n_communities=int(entry.n_communities),
-            n_disconnected=int(entry.n_disconnected),
-            q=float(entry.q), version=int(entry.version)))
+        _entry_arrays(arrays, graphs_meta, gi, gid, entry)
+        written.add(gid)
+        gi += 1
+    for gid, entry in (extra_entries or {}).items():
+        if gid in written:
+            continue
+        _entry_arrays(arrays, graphs_meta, gi, gid, entry, evicted=True)
+        gi += 1
     tl_meta = {}
     tl = getattr(frontend, "timelines", None)
     if tl is not None:
@@ -78,6 +98,14 @@ def restore_service_checkpoint(frontend, ckpt_dir: str, *,
                                step: Optional[int] = None) -> Optional[int]:
     """Restore store entries + timeline state from a checkpoint.
 
+    Decode happens build-then-apply: every graph and array is read (and
+    validated) before the first store mutation, so a torn/partial
+    checkpoint raises :class:`CheckpointCorrupt` without half-restoring
+    the service — the caller (startup recovery) falls back to the
+    previous snapshot.  Entries saved from the eviction write-back
+    buffer are applied before resident ones, leaving residents
+    most-recently-used if the restore overflows the store's LRU cap.
+
     Returns the restored step, or ``None`` when no checkpoint exists.
     """
     arrays, extra, step = load_checkpoint_arrays(ckpt_dir, step=step)
@@ -86,25 +114,35 @@ def restore_service_checkpoint(frontend, ckpt_dir: str, *,
     if extra.get("kind") != _KIND:
         raise ValueError(
             f"not a {_KIND} checkpoint: kind={extra.get('kind')!r}")
+    try:
+        items = []
+        order = sorted(extra["graphs"],
+                       key=lambda m: 0 if m.get("evicted") else 1)
+        for gm in order:
+            gi, gid = gm["index"], gm["graph_id"]
+            g = Graph(
+                src=arrays[f"graph{gi}.src"].astype(np.int32),
+                dst=arrays[f"graph{gi}.dst"].astype(np.int32),
+                w=arrays[f"graph{gi}.w"].astype(np.float32),
+                n_nodes=np.int32(gm["n_nodes"]),
+                n_cap=int(gm["n_cap"]), m_cap=int(gm["m_cap"]))
+            items.append((gid, g, arrays[f"graph{gi}.C"].astype(np.int32),
+                          gm, arrays[f"graph{gi}.deferred"]))
+        tl_arrays = {k[len("tl."):]: v for k, v in arrays.items()
+                     if k.startswith("tl.")}
+    except KeyError as e:
+        raise CheckpointCorrupt(
+            f"service checkpoint step {step} is missing key {e}") from e
     store = frontend.store
-    for gm in extra["graphs"]:
-        gi, gid = gm["index"], gm["graph_id"]
-        g = Graph(
-            src=arrays[f"graph{gi}.src"].astype(np.int32),
-            dst=arrays[f"graph{gi}.dst"].astype(np.int32),
-            w=arrays[f"graph{gi}.w"].astype(np.float32),
-            n_nodes=np.int32(gm["n_nodes"]),
-            n_cap=int(gm["n_cap"]), m_cap=int(gm["m_cap"]))
+    for gid, g, C, gm, deferred in items:
         store.restore_entry(
-            gid, g, arrays[f"graph{gi}.C"].astype(np.int32),
+            gid, g, C,
             n_communities=gm["n_communities"],
             n_disconnected=gm["n_disconnected"],
             q=gm["q"], version=gm["version"],
-            deferred=arrays[f"graph{gi}.deferred"])
+            deferred=deferred)
     tl = getattr(frontend, "timelines", None)
     tl_meta = extra.get("timeline") or {}
     if tl is not None and tl_meta:
-        tl_arrays = {k[len("tl."):]: v for k, v in arrays.items()
-                     if k.startswith("tl.")}
         tl.load_state(tl_arrays, tl_meta)
     return step

@@ -1,0 +1,508 @@
+"""Resilience subsystem: deterministic fault injection, retry/backoff/
+watchdog policies, the per-bucket circuit breaker with degraded
+fallbacks, deadline fast-fail, poison-batch split semantics, corrupt
+checkpoint recovery and the background auto-checkpointer."""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.graph import ring_of_cliques, sbm_graph
+from repro.resilience import (
+    BreakerConfig, BreakerOpen, CircuitBreaker, DeadlineExceeded,
+    DegradedResult, DispatchTimeout, FaultError, FaultPlan, FaultSpec,
+    RetryPolicy, TransientCapacityError, run_with_policy,
+)
+from repro.resilience.breaker import BreakerBoard
+from repro.resilience.degrade import lpa_result, stale_result
+from repro.service import Bucket, ServiceConfig, ServiceFrontend, StoreEntry
+
+pytestmark = [pytest.mark.service, pytest.mark.resilience]
+
+BUCKETS = (Bucket(64, 512),)
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _ego(seed, n=30):
+    return sbm_graph(n_nodes=n, n_blocks=3, p_in=0.4, p_out=0.04,
+                     seed=seed)[0]
+
+
+def _frontend(**kw):
+    kw.setdefault("buckets", BUCKETS)
+    kw.setdefault("batch_size", 4)
+    kw.setdefault("max_delay_s", 0.0)
+    return ServiceFrontend(ServiceConfig(**kw))
+
+
+# ---------------------------------------------------------------------------
+# fault plan: determinism, triggers, scoping
+# ---------------------------------------------------------------------------
+
+def _fire_pattern(plan, seam, n):
+    out = []
+    for _ in range(n):
+        try:
+            plan.perturb(seam)
+            out.append(False)
+        except FaultError:
+            out.append(True)
+    return out
+
+
+def test_fault_plan_deterministic_and_resettable():
+    mk = lambda: FaultPlan({"engine.detect": FaultSpec(p=0.5)}, seed=42)
+    a = _fire_pattern(mk(), "engine.detect", 40)
+    b = _fire_pattern(mk(), "engine.detect", 40)
+    assert a == b and True in a and False in a
+    plan = mk()
+    first = _fire_pattern(plan, "engine.detect", 40)
+    plan.reset()                          # fresh, identical run
+    assert _fire_pattern(plan, "engine.detect", 40) == first
+    assert plan.injected["engine.detect"] == sum(first)
+
+
+def test_fault_spec_skip_count_and_validation():
+    plan = FaultPlan({"s": FaultSpec(p=1.0, skip=2, count=3)})
+    got = _fire_pattern(plan, "s", 8)
+    assert got == [False, False, True, True, True, False, False, False]
+    assert plan.injected_total() == 3
+    with pytest.raises(ValueError):
+        FaultSpec(p=1.5)
+    with pytest.raises(ValueError):
+        FaultSpec(count=-1)
+    with pytest.raises(ValueError):
+        FaultSpec(error="nonsense")
+    # unknown seams and empty plans are inert
+    plan.perturb("unknown.seam")
+
+
+def test_fault_graph_id_scoping_and_capacity():
+    plan = FaultPlan({
+        "engine.detect": FaultSpec(p=1.0, graph_ids=("poison",)),
+        "cap": FaultSpec(p=1.0, error="capacity"),
+    })
+    plan.perturb("engine.detect", ids=["clean-1", "clean-2"])
+    plan.perturb("engine.detect", ids=None)   # unknown ids: never fires
+    with pytest.raises(FaultError):
+        plan.perturb("engine.detect", ids=["clean-1", "poison"])
+    with pytest.raises(TransientCapacityError):
+        plan.perturb("cap")
+
+
+def test_fault_hang_sleeps_instead_of_raising():
+    plan = FaultPlan({"h": FaultSpec(hang_s=0.05, count=1)})
+    t0 = time.perf_counter()
+    plan.perturb("h")                          # sleeps, does not raise
+    assert time.perf_counter() - t0 >= 0.04
+    plan.perturb("h")                          # count exhausted: instant
+    assert plan.injected["h"] == 1
+
+
+# ---------------------------------------------------------------------------
+# retry policy: backoff, budgets, watchdog
+# ---------------------------------------------------------------------------
+
+def test_retry_policy_delay_and_retryable():
+    pol = RetryPolicy(max_attempts=4, backoff_s=0.1, backoff_factor=2.0,
+                      jitter=0.5)
+    assert pol.delay_s(1, u=0.0) == pytest.approx(0.1)
+    assert pol.delay_s(2, u=0.0) == pytest.approx(0.2)
+    assert pol.delay_s(1, u=1.0) == pytest.approx(0.1 * 1.5)
+    assert pol.retryable(RuntimeError("x"))
+    assert pol.retryable(TransientCapacityError("full"))
+    assert not pol.retryable(ValueError("bad input"))
+    assert not pol.retryable(DeadlineExceeded("late"))
+
+
+def test_run_with_policy_retries_then_succeeds():
+    clock, sleeps, calls = FakeClock(), [], []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    pol = RetryPolicy(max_attempts=3, backoff_s=0.1, jitter=0.0)
+    out = run_with_policy(flaky, pol, clock=clock, sleep=sleeps.append)
+    assert out == "ok" and len(calls) == 3
+    assert sleeps == pytest.approx([0.1, 0.2])
+
+
+def test_run_with_policy_non_retryable_raises_immediately():
+    calls = []
+
+    def bad():
+        calls.append(1)
+        raise ValueError("poison")
+
+    with pytest.raises(ValueError):
+        run_with_policy(bad, RetryPolicy(max_attempts=5), sleep=lambda s: 0)
+    assert len(calls) == 1
+
+
+def test_run_with_policy_budget_and_deadline():
+    clock = FakeClock()
+
+    def failing():
+        clock.advance(0.3)
+        raise RuntimeError("slow failure")
+
+    pol = RetryPolicy(max_attempts=10, backoff_s=0.0, budget_s=0.5)
+    with pytest.raises(RuntimeError):     # budget exhausts mid-retry: the
+        run_with_policy(failing, pol, clock=clock, sleep=lambda s: 0)
+
+    # an admission deadline earlier than the budget wins
+    clock = FakeClock(t=10.0)
+    with pytest.raises(DeadlineExceeded):
+        run_with_policy(lambda: "never", RetryPolicy(max_attempts=2),
+                        clock=clock, deadline=9.0)
+
+
+def test_watchdog_bounds_hung_dispatch():
+    pol = RetryPolicy(max_attempts=1, watchdog_s=0.05)
+    t0 = time.perf_counter()
+    with pytest.raises(DispatchTimeout):
+        run_with_policy(lambda: time.sleep(2.0), pol)
+    assert time.perf_counter() - t0 < 1.0
+    assert run_with_policy(lambda: "fast", pol) == "fast"
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker FSM
+# ---------------------------------------------------------------------------
+
+def test_breaker_opens_half_opens_recloses():
+    clock = FakeClock()
+    br = CircuitBreaker(BreakerConfig(failure_threshold=3, cooldown_s=1.0),
+                        clock=clock)
+    assert br.state == "closed" and br.allow()
+    for _ in range(3):
+        br.record_failure()
+    assert br.state == "open" and not br.allow() and br.n_opens == 1
+    clock.advance(1.5)
+    assert br.allow()                     # half-open admits the probe
+    assert br.state == "half-open"
+    assert not br.allow()                 # only half_open_probes=1 admitted
+    br.record_success()
+    assert br.state == "closed" and br.allow()
+
+
+def test_breaker_probe_failure_reopens():
+    clock = FakeClock()
+    br = CircuitBreaker(BreakerConfig(failure_threshold=1, cooldown_s=1.0),
+                        clock=clock)
+    br.record_failure()
+    clock.advance(1.5)
+    assert br.allow()
+    br.record_failure()                   # failed probe: straight back open
+    assert br.state == "open" and br.n_opens == 2
+
+
+def test_breaker_latency_counts_as_failure():
+    clock = FakeClock()
+    br = CircuitBreaker(
+        BreakerConfig(failure_threshold=2, cooldown_s=1.0,
+                      latency_threshold_s=0.5), clock=clock)
+    br.record_success(latency_s=0.1)      # fast: resets nothing
+    br.record_success(latency_s=2.0)      # slow success = failure
+    br.record_success(latency_s=2.0)
+    assert br.state == "open"
+
+
+def test_breaker_board_states_and_success_resets_streak():
+    clock = FakeClock()
+    board = BreakerBoard(BreakerConfig(failure_threshold=2), clock=clock)
+    b = Bucket(64, 512)
+    board.record_failure(b)
+    board.record_success(b)               # streak broken
+    board.record_failure(b)
+    assert board.states() == {"64x512": "closed"}
+    board.record_failure(b)
+    assert board.states() == {"64x512": "open"} and board.n_opens == 1
+
+
+# ---------------------------------------------------------------------------
+# degraded tiers never carry the guarantee
+# ---------------------------------------------------------------------------
+
+def test_degraded_results_are_flagged():
+    fe = _frontend()
+    try:
+        fut = fe.submit_detect("g", _ego(3))
+        fe.drain()
+        entry = fut.result(timeout=60)
+    finally:
+        fe.close()
+    st = stale_result("g", entry, now=entry.t_stored + 7.5)
+    assert st.stale and st.staleness_s == pytest.approx(7.5)
+    assert st.quality == "stale" and st.guarantee is False
+    assert np.array_equal(st.C, np.asarray(entry.C))
+
+    lp = lpa_result("g", ring_of_cliques(n_cliques=4, clique_size=5))
+    assert lp.mode == "lpa" and not lp.stale
+    assert lp.quality == "degraded" and lp.guarantee is False
+    assert lp.n_communities >= 1 and lp.n_disconnected is None
+
+
+# ---------------------------------------------------------------------------
+# deadline fast-fail (submit + compose time)
+# ---------------------------------------------------------------------------
+
+def test_deadline_fast_fail_at_submit():
+    fe = _frontend()
+    try:
+        with pytest.raises(DeadlineExceeded):
+            fe.submit_detect("late", _ego(1), deadline_s=0.0)
+        with pytest.raises(DeadlineExceeded):
+            fe.submit_detect("later", _ego(1), deadline_s=-1.0)
+        assert fe.metrics.n_deadline_rejects == 2
+        assert fe.pending() == 0          # nothing enqueued
+    finally:
+        fe.close()
+
+
+def test_deadline_fast_fail_at_compose():
+    clock = FakeClock(t=100.0)
+    fe = ServiceFrontend(ServiceConfig(buckets=BUCKETS, batch_size=4,
+                                       max_delay_s=0.0), clock=clock)
+    try:
+        fut = fe.submit_detect("d", _ego(2), deadline_s=0.5)
+        live = fe.submit_detect("live", _ego(3))
+        clock.advance(1.0)                # deadline passes while queued
+        fe.drain()
+        assert isinstance(fut.exception(timeout=5), DeadlineExceeded)
+        assert fe.metrics.n_deadline_rejects == 1
+        assert isinstance(live.result(timeout=60), StoreEntry)
+    finally:
+        fe.close()
+
+
+# ---------------------------------------------------------------------------
+# batch failure semantics: split-in-half isolates the poison graph
+# ---------------------------------------------------------------------------
+
+def test_poison_graph_fails_alone_after_split():
+    # healthy reference run: same graphs, no faults
+    graphs = {f"t{i}": _ego(20 + i) for i in range(3)}
+    fe = _frontend()
+    try:
+        futs = {gid: fe.submit_detect(gid, g, tenant=gid)
+                for gid, g in graphs.items()}
+        fe.drain()
+        healthy = {gid: np.asarray(f.result(timeout=60).C).copy()
+                   for gid, f in futs.items()}
+    finally:
+        fe.close()
+
+    plan = FaultPlan({"engine.detect":
+                      FaultSpec(p=1.0, count=99, graph_ids=("poison",))})
+    fe = _frontend(fault_plan=plan,
+                   retry=RetryPolicy(max_attempts=2, backoff_s=0.0))
+    try:
+        futs = {gid: fe.submit_detect(gid, g, tenant=gid)
+                for gid, g in graphs.items()}
+        bad = fe.submit_detect("poison", _ego(99), tenant="chaos-tenant")
+        fe.drain()
+        # the poisoned member fails alone...
+        assert isinstance(bad.exception(timeout=5), FaultError)
+        # ...and every unrelated tenant gets the exact healthy partition
+        for gid, f in futs.items():
+            got = f.result(timeout=60)
+            assert isinstance(got, StoreEntry), (gid, got)
+            assert np.array_equal(np.asarray(got.C), healthy[gid]), gid
+            assert got.n_disconnected == 0
+        assert fe.resilience.n_batch_splits >= 1
+        assert plan.injected["engine.detect"] >= 1
+        assert fe.store.get("poison") is None   # never committed
+    finally:
+        fe.close()
+
+
+def test_breaker_open_sheds_to_stale_then_recovers():
+    g = _ego(7)
+    plan = FaultPlan({"engine.detect": FaultSpec(p=1.0, count=2, skip=1)})
+    fe = _frontend(fault_plan=plan, retry=RetryPolicy(max_attempts=1),
+                   breaker=BreakerConfig(failure_threshold=2,
+                                         cooldown_s=0.2),
+                   degrade_enabled=True, degrade_modes=("stale",))
+    try:
+        f0 = fe.submit_detect("g", g)
+        fe.drain()
+        e0 = f0.result(timeout=60)
+        assert isinstance(e0, StoreEntry)
+        for _ in range(2):                # open the breaker
+            fi = fe.submit_detect("g", g)
+            fe.drain()
+            ri = fi.result(timeout=60)
+            assert isinstance(ri, DegradedResult) and ri.mode == "stale"
+        assert "open" in fe.resilience.board.states().values()
+        time.sleep(0.3)                   # past cooldown; faults exhausted
+        f1 = fe.submit_detect("g", g)
+        fe.drain()
+        e1 = f1.result(timeout=60)
+        assert isinstance(e1, StoreEntry)
+        assert np.array_equal(np.asarray(e1.C), np.asarray(e0.C))
+        assert set(fe.resilience.board.states().values()) == {"closed"}
+        assert fe.metrics.n_degraded == 2
+    finally:
+        fe.close()
+
+
+def test_degrade_requires_tenant_opt_in():
+    plan = FaultPlan({"engine.detect": FaultSpec(p=1.0)})
+    fe = _frontend(fault_plan=plan, retry=RetryPolicy(max_attempts=1),
+                   degrade_enabled=True, degrade_modes=("lpa",),
+                   degrade_tenants=("premium",))
+    try:
+        fa = fe.submit_detect("a", _ego(4), tenant="premium")
+        fb = fe.submit_detect("b", _ego(5), tenant="strict")
+        fe.drain()
+        assert isinstance(fa.result(timeout=60), DegradedResult)
+        assert isinstance(fb.exception(timeout=5), FaultError)
+    finally:
+        fe.close()
+
+
+# ---------------------------------------------------------------------------
+# corrupt checkpoints + automatic checkpointing
+# ---------------------------------------------------------------------------
+
+def _truncate_npz(ckpt_dir, step):
+    path = os.path.join(ckpt_dir, f"step-{step:010d}", "arrays.npz")
+    with open(path, "rb") as f:
+        raw = f.read()
+    with open(path, "wb") as f:
+        f.write(raw[: len(raw) // 2])
+
+
+def test_truncated_npz_raises_checkpoint_corrupt(tmp_path):
+    from repro.checkpoint.store import (
+        CheckpointCorrupt, restore_checkpoint, save_checkpoint,
+    )
+    tree = {"w": np.arange(1000, dtype=np.float32)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    _truncate_npz(str(tmp_path), 1)
+    with pytest.raises(CheckpointCorrupt):
+        restore_checkpoint(str(tmp_path), tree, step=1)
+
+
+def test_recover_falls_back_to_previous_good_snapshot(tmp_path):
+    ckdir = str(tmp_path / "auto")
+    fe = _frontend(autockpt_dir=ckdir, autockpt_period_s=999.0,
+                   autockpt_recover=False)
+    try:
+        f = fe.submit_detect("g", _ego(11))
+        fe.drain()
+        e0 = f.result(timeout=60)
+        good = fe.autockpt.snapshot(force=True)
+        fu = fe.submit_update("g", _upd(e0, 3))
+        fe.drain()
+        fu.result(timeout=60)
+        torn = fe.autockpt.snapshot(force=True)
+        _truncate_npz(ckdir, torn)        # the newest snapshot is torn
+        fe.autockpt.close(flush=False)    # crash: no final flush
+    finally:
+        fe.telemetry.close()
+
+    fe2 = _frontend(autockpt_dir=ckdir, autockpt_period_s=999.0)
+    try:
+        assert fe2.restored_step == good
+        assert fe2.autockpt.n_corrupt_skipped == 1
+        ent = fe2.store.get("g")
+        assert ent is not None and ent.version == e0.version
+        assert np.array_equal(np.asarray(ent.C), np.asarray(e0.C))
+    finally:
+        fe2.close()
+
+
+def _upd(entry, seed, n_edges=3):
+    rng = np.random.default_rng(seed)
+    n = int(entry.graph.n_nodes)
+    u = rng.integers(0, n, n_edges)
+    v = rng.integers(0, n, n_edges)
+    keep = u != v
+    return u[keep], v[keep], np.ones(int(keep.sum()), np.float32)
+
+
+def test_autockpt_dirty_threshold_triggers_background_snapshot(tmp_path):
+    fe = _frontend(autockpt_dir=str(tmp_path), autockpt_period_s=999.0,
+                   autockpt_dirty=1)
+    try:
+        f = fe.submit_detect("g", _ego(12))
+        fe.drain()
+        f.result(timeout=60)
+        deadline = time.perf_counter() + 10.0
+        while (fe.autockpt.n_snapshots == 0
+               and time.perf_counter() < deadline):
+            time.sleep(0.02)
+        assert fe.autockpt.n_snapshots >= 1, fe.autockpt.last_error
+        assert fe.autockpt.age_s() < 60.0
+    finally:
+        fe.close()
+
+
+def test_autockpt_writes_back_evicted_entries(tmp_path):
+    ckdir = str(tmp_path / "wb")
+    fe = _frontend(autockpt_dir=ckdir, autockpt_period_s=999.0,
+                   autockpt_recover=False, store_max_entries=2)
+    try:
+        futs = [fe.submit_detect(f"g{i}", _ego(30 + i)) for i in range(3)]
+        fe.drain()
+        for f in futs:
+            f.result(timeout=60)
+        assert fe.store.get("g0") is None     # LRU-evicted, still warm
+        want = np.asarray(futs[0].result().C).copy()
+        fe.autockpt.snapshot(force=True)
+        assert fe.autockpt.n_written_back >= 1
+    finally:
+        fe.close()
+
+    fe2 = _frontend(autockpt_dir=ckdir, autockpt_period_s=999.0)
+    try:
+        ent = fe2.store.get("g0")             # restored from write-back
+        assert ent is not None
+        assert np.array_equal(np.asarray(ent.C), want)
+        # residents were applied after write-backs: they outrank the
+        # evicted entry in the restored LRU
+        assert fe2.store.get("g1") is not None
+        assert fe2.store.get("g2") is not None
+    finally:
+        fe2.close()
+
+
+# ---------------------------------------------------------------------------
+# telemetry hub: crashing sinks are isolated and the error map is bounded
+# ---------------------------------------------------------------------------
+
+def test_sink_error_map_is_bounded():
+    from repro.telemetry.sinks import MetricSink, Telemetry
+
+    class Boom(MetricSink):
+        def on_counter(self, name, value, labels):
+            raise RuntimeError("sink bug")
+
+    tel = Telemetry()
+    tel.max_sink_errors = 4
+    sinks = [tel.register(Boom()) for _ in range(10)]
+    for _ in range(3):
+        tel.counter("x", 1)
+    assert tel.n_sink_errors == 30
+    assert len(tel.sink_errors) == 4          # capped, oldest evicted
+    # every insertion beyond the cap is an eviction: 10 distinct sinks
+    # churn through a 4-slot map, so drops strictly exceed cap overflow
+    assert tel.n_sink_errors_dropped >= 6
+    tel.close()
