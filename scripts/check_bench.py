@@ -11,8 +11,12 @@ paired sweep metric from ``benchmarks/bench_kernels.py``, parses the
 CSV/marker output into a metrics snapshot, compares against the committed
 snapshot ``benchmarks/BENCH_service.json``, and fails when any
 higher-is-better metric regressed more than ``--tolerance`` (default
-20%).  On success the snapshot is rewritten with the new numbers —
-committing it advances the recorded trajectory.
+20%).  The quality-tier markers from bench section 10 face a separate
+ABSOLUTE gate (``quality_gate``): max-quality modularity >= standard,
+standard within 2% of max-quality, zero internally-disconnected
+communities for both contract-bearing tiers.  On success the snapshot
+is rewritten with the new numbers — committing it advances the
+recorded trajectory.
 
 Only the speedup metrics are gated: they are paired ratios (numerator
 and denominator measured adjacent), robust to the shared-CPU noise of
@@ -67,6 +71,20 @@ INFORMATIONAL = {
     # speedup — parity (bit-identical partitions) is asserted in-bench
     "speedup_sharded_2dev": "sharded_2dev_speedup",
     "sharded_parity": "sharded_parity",
+    # quality-tier portfolio (bench section 10): modularity and
+    # disconnected counts are gated ABSOLUTELY by quality_gate() below
+    # (structural relations between tiers, not wall-clock trends); the
+    # per-tier latencies are trend data — tier cost ordering is
+    # hardware-dependent and the fast tier's product is its contract
+    "tier_modularity_fast": "tier_modularity_fast",
+    "tier_modularity_standard": "tier_modularity_standard",
+    "tier_modularity_maxq": "tier_modularity_maxq",
+    "tier_disconnected_fast": "tier_disconnected_fast",
+    "tier_disconnected_standard": "tier_disconnected_standard",
+    "tier_disconnected_maxq": "tier_disconnected_maxq",
+    "tier_latency_ms_fast": "tier_latency_ms_fast",
+    "tier_latency_ms_standard": "tier_latency_ms_standard",
+    "tier_latency_ms_maxq": "tier_latency_ms_maxq",
 }
 # CSV rows whose derived field leads with "<x> graphs/s"; recorded in the
 # snapshot for trend visibility, NOT gated (absolute wall-clock collapses
@@ -142,6 +160,39 @@ def check(metrics: dict, baseline: dict, tolerance: float) -> list[str]:
     return failures
 
 
+def quality_gate(metrics: dict) -> list[str]:
+    """Portfolio quality axis (bench section 10), gated ABSOLUTELY.
+
+    Unlike the speedup floors these are structural relations between
+    deterministic quantities, so they compare against fixed bars rather
+    than the snapshot: max-quality's best-of-two selection makes its
+    modularity >= standard's by construction, standard must stay within
+    2% of max-quality (the refine tier buys a small, bounded margin —
+    if standard falls further behind, its pipeline regressed), and both
+    contract-bearing tiers must report zero internally-disconnected
+    communities (the paper invariant the portfolio sells).
+    """
+    failures = []
+    q_std = metrics["tier_modularity_standard"]
+    q_max = metrics["tier_modularity_maxq"]
+    if q_max < q_std - 1e-9:
+        failures.append(
+            f"max-quality modularity {q_max:.4f} < standard {q_std:.4f}"
+            " (best-of-two selection broken)")
+    if q_std < 0.98 * q_max:
+        failures.append(
+            f"standard modularity {q_std:.4f} < 98% of max-quality "
+            f"{q_max:.4f} (standard pipeline regressed)")
+    for name in ("tier_disconnected_standard", "tier_disconnected_maxq"):
+        if metrics[name] != 0.0:
+            failures.append(
+                f"{name} = {metrics[name]:g}, contract promises 0")
+    for name, val in sorted(metrics.items()):
+        if name.startswith("tier_"):
+            print(f"quality-gate {name}: {val:.4f}")
+    return failures
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--from-file", type=pathlib.Path, default=None,
@@ -156,6 +207,10 @@ def main(argv=None):
     out = (args.from_file.read_text() if args.from_file
            else run_bench())
     metrics = parse_metrics(out)
+
+    qfail = quality_gate(metrics)
+    if qfail:
+        sys.exit("bench quality gate FAILED:\n  " + "\n  ".join(qfail))
 
     if args.snapshot.exists():
         baseline = json.loads(args.snapshot.read_text())

@@ -6,7 +6,7 @@
 # Tiers:
 #   tier1  — the full pytest suite (ROADMAP's tier-1 verify).  Fast-ish,
 #            deterministic; runs on every push/PR (.github/workflows/ci.yml).
-#   smoke  — the seven serve_communities end-to-end smokes: the sync pump
+#   smoke  — the eight serve_communities end-to-end smokes: the sync pump
 #            driver, the async multi-tenant driver, the fully-dynamic
 #            churn driver (edge deletions AND vertex additions/removals
 #            through the batched warm path, with the vertex round-trip /
@@ -25,7 +25,12 @@
 #            circuit breaker and degraded fallbacks vs a fault-free
 #            reference run: goodput floor, bit-identical non-degraded
 #            results, breaker recovery and a kill-and-restore automatic
-#            checkpoint round trip).  Also in the GitHub workflow.
+#            checkpoint round trip), and the tiers driver (three tenants
+#            pinned to the fast/standard/max-quality portfolio tiers
+#            over the same graphs: per-tier QualityContract asserts,
+#            max-quality modularity >= standard, deadline auto-routing,
+#            tier-labeled counters scraped from the live Prometheus
+#            exporter).  Also in the GitHub workflow.
 #   bench  — acceptance benchmarks + regression check: scripts/check_bench.py
 #            runs benchmarks/bench_service.py + bench_kernels.py, enforces
 #            the speedup bars, writes benchmarks/BENCH_service.json and
@@ -62,6 +67,8 @@ run_smoke() {
   python -m repro.launch.serve_communities --sharded --smoke
   echo "== chaos (fault injection + retry/degrade + kill-and-restore) smoke =="
   python -m repro.launch.serve_communities --chaos --smoke
+  echo "== tiers (SLO-tiered algorithm portfolio) smoke =="
+  python -m repro.launch.serve_communities --tiers --smoke
 }
 
 run_bench() {

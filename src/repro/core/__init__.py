@@ -9,7 +9,10 @@ from repro.core.detect import (
     disconnected_communities, disconnected_communities_impl,
 )
 from repro.core.modularity import modularity
-from repro.core.lpa import lpa_run
+from repro.core.lpa import lpa, lpa_run
+from repro.core.portfolio import (
+    ALGORITHMS, QualityContract, contract_for, tier_config,
+)
 from repro.core.dynamic import (
     CapacityError, GraphUpdate, apply_vertex_updates, update_communities,
 )
@@ -19,11 +22,15 @@ from repro.core.dynamic import (
 from repro.core.api import Detection, DetectOptions, detect
 
 __all__ = [
+    "ALGORITHMS",
     "CapacityError",
     "Detection",
     "DetectOptions",
     "GraphUpdate",
     "LouvainConfig",
+    "QualityContract",
+    "contract_for",
+    "tier_config",
     "apply_vertex_updates",
     "detect",
     "louvain",
@@ -35,6 +42,7 @@ __all__ = [
     "disconnected_communities",
     "disconnected_communities_impl",
     "modularity",
+    "lpa",
     "lpa_run",
     "update_communities",
 ]

@@ -33,9 +33,8 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.detect import disconnected_communities
 from repro.core.louvain import LouvainConfig
-from repro.core.modularity import modularity
+from repro.core.portfolio import ALGORITHMS, QualityContract, contract_for
 
 _SCANS = ("auto", "sort", "dense")
 _SEG_IMPLS = ("auto", "xla", "pallas", "scatter")
@@ -105,6 +104,11 @@ class DetectOptions:
     (subsets of) this record via :meth:`cache_key`.
 
     Fields:
+      algorithm: 'fast' | 'standard' | 'max-quality' — which portfolio
+                tier runs (core/portfolio.py): pure LPA, GSP-Louvain
+                (the paper; default), or the Leiden-style refine mode.
+                Folded into every cache key, so the batched engine
+                compiles/batches each tier separately.
       louvain:  the algorithm config (passes, tolerance ladder, split
                 mode — the refinement policy lives here as ``split=``).
       scan:     'auto' | 'sort' | 'dense' — community-scan layout; 'auto'
@@ -120,6 +124,7 @@ class DetectOptions:
                 (core/distributed.py; bit-identical partitions).
     """
 
+    algorithm: str = "standard"
     louvain: LouvainConfig = LouvainConfig()
     scan: str = "auto"
     seg_impl: str = "auto"
@@ -130,6 +135,10 @@ class DetectOptions:
     mesh: Any = None
 
     def __post_init__(self):
+        if self.algorithm not in ALGORITHMS:
+            raise ValueError(
+                f"algorithm must be one of {ALGORITHMS}, "
+                f"got {self.algorithm!r}")
         if self.scan not in _SCANS:
             raise ValueError(f"scan must be one of {_SCANS}, got {self.scan!r}")
         if self.seg_impl not in _SEG_IMPLS:
@@ -173,15 +182,27 @@ class DetectOptions:
         return jax.sharding.Mesh(np.array(devs[:n]), ("data",))
 
     # -- cache keying ------------------------------------------------------
-    def cache_key(self, *parts, scan: Optional[str] = None,
+    def cache_key(self, *parts, algorithm: Optional[str] = None,
+                  scan: Optional[str] = None,
                   block_m: Optional[int] = None) -> tuple:
         """THE compile-cache key: shape/phase ``parts`` + the backend
-        identity.  ``scan``/``block_m`` override with per-bucket resolved
+        identity (algorithm tier included, so the engine batches and
+        compiles each tier separately).  ``algorithm``/``scan``/
+        ``block_m`` override with per-request / per-bucket resolved
         values (engine buckets resolve 'auto' and autotune blocks)."""
         return (*parts,
+                self.algorithm if algorithm is None else algorithm,
                 self.scan if scan is None else scan,
                 self.seg_impl,
                 self.block_m if block_m is None else block_m)
+
+    def result_key(self, algorithm: Optional[str] = None) -> tuple:
+        """Hashable identity of *what produced a stored partition*: the
+        tier + full LouvainConfig + backend identity.  The result store
+        stamps this on every entry and refuses warm updates whose current
+        key mismatches (continuing a partition computed under different
+        options silently corrupts it — re-detect instead)."""
+        return self.cache_key(self.louvain, algorithm=algorithm)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -193,41 +214,25 @@ class Detection:
     n_disconnected: int        # paper invariant: 0 for every sp-*/refine run
     modularity: float
     stats: dict                # driver stats (passes, li_total, ...)
+    contract: Optional[QualityContract] = None  # tier guarantee flags
 
 
 def detect(graph, *, options: Optional[DetectOptions] = None,
            telemetry=None, **legacy) -> Detection:
-    """Run GSP-Louvain detection on one graph — the unified entry point.
+    """Run community detection on one graph — the unified entry point.
 
-    Single-device by default; ``options.mesh`` routes through the sharded
-    driver (bit-identical partition).  Legacy flat keywords (``cfg=``,
-    ``scan=``, ``seg_impl=``, ``block_m=``, ``mesh=``, ``dense_*=``) fold
-    through the deprecation shim.
+    ``options.algorithm`` selects the portfolio tier ('fast' LPA /
+    'standard' GSP-Louvain / 'max-quality' Leiden-style refine —
+    core/portfolio.py); the returned :class:`Detection` carries the
+    tier's :class:`QualityContract`.  Single-device by default;
+    ``options.mesh`` routes through the sharded driver (bit-identical
+    partition; standard/max-quality only).  Legacy flat keywords
+    (``cfg=``, ``scan=``, ``seg_impl=``, ``block_m=``, ``mesh=``,
+    ``dense_*=``) fold through the deprecation shim.
 
     Returns a :class:`Detection`; ``labels`` includes ghost/padding slots
     (mask with ``graph.node_mask()`` downstream, as before).
     """
     opts = fold_legacy_kwargs(options, legacy, where="detect()")
-    mesh = opts.resolved_mesh()
-    from repro.core.louvain import louvain
-    if mesh is not None:
-        from repro.core.distributed import louvain_sharded
-        C, stats = louvain_sharded(graph, opts.louvain, mesh=mesh,
-                                   seg_impl=opts.seg_impl,
-                                   block_m=opts.block_m,
-                                   telemetry=telemetry)
-    else:
-        scan = opts.resolved_scan(graph.nv, graph.m_cap)
-        C, stats = louvain(graph, options=opts.replace(mesh=None, scan=scan))
-    det = disconnected_communities(
-        graph.src, graph.dst, graph.w, C, graph.n_nodes,
-        seg_impl=opts.resolved_seg_impl(), block_m=opts.block_m)
-    q = modularity(graph.src, graph.dst, graph.w, C,
-                   seg_impl=opts.resolved_seg_impl(), block_m=opts.block_m)
-    return Detection(
-        labels=C,
-        n_communities=int(stats["n_communities"]),
-        n_disconnected=int(det["n_disconnected"]),
-        modularity=float(q),
-        stats=dict(stats),
-    )
+    from repro.core.portfolio import run_detection
+    return run_detection(graph, opts, telemetry=telemetry)

@@ -257,11 +257,18 @@ def louvain(g: Graph, cfg: LouvainConfig | None = None, *, options=None,
             opts = opts.replace(louvain=cfg)
     if mesh is not None:
         opts = opts.replace(mesh=mesh)
+    if opts.resolved_mesh() is not None and (
+            axis is not None or owned is not None):
+        raise ValueError(
+            "louvain(mesh=...) is incompatible with axis=/owned=")
+    if opts.algorithm != "standard":
+        # non-default portfolio tiers ('fast' LPA / 'max-quality' refine)
+        # route through the shared dispatch — one switch for every caller
+        from repro.core.portfolio import partition
+        return partition(g, opts, axis=axis, owned=owned,
+                         telemetry=telemetry)
     mesh = opts.resolved_mesh()
     if mesh is not None:
-        if axis is not None or owned is not None:
-            raise ValueError(
-                "louvain(mesh=...) is incompatible with axis=/owned=")
         if opts.scan == "dense":
             raise ValueError("scan='dense' is single-device only")
         from repro.core.distributed import louvain_sharded

@@ -92,3 +92,13 @@ def lpa_run(g, *, max_iters: int = 50, seg_impl: str = "auto",
     out = jax.lax.while_loop(cond, body, init)
     labels, _ = seg.renumber(out.C, g.node_mask(), nv)
     return labels, out.it
+
+
+def lpa(g, *, options=None, telemetry=None):
+    """Public LPA driver through the portfolio dispatch (the 'fast' tier):
+    ``(C, stats)`` with the tier-uniform stats shape.  Pass ``options=``
+    for backend knobs; the algorithm field is forced to 'fast'."""
+    from repro.core.api import DetectOptions
+    from repro.core.portfolio import partition
+    opts = (options or DetectOptions()).replace(algorithm="fast")
+    return partition(g, opts, telemetry=telemetry)

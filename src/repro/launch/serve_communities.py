@@ -74,6 +74,20 @@ landing in three buckets, plus warm edge updates):
   zero internally-disconnected communities, flagged degraded results,
   breaker recovery, and warm updates resuming at the restored version.
 
+* ``--tiers``: the SLO-tier driver — three tenants pinned to the three
+  portfolio tiers (``fast`` / ``standard`` / ``max-quality``) via
+  ``ServiceConfig.tenant_tiers`` submit the SAME graphs through the
+  async service, so per-tier quality and latency are directly
+  comparable, plus deadline-driven auto-selection
+  (``deadline_tiers``) and an explicit ``algorithm=`` pin that
+  overrides the tenant mapping.  ``--tiers --smoke`` asserts the
+  acceptance contract: every entry is stamped with its requested tier,
+  zero internally-disconnected communities for standard AND
+  max-quality, max-quality modularity >= standard on every shared
+  graph, the fast tier under a latency bound, tight deadlines landing
+  on fast / loose on the default, and a live ``/metrics`` scrape
+  carrying tier-labeled served + compile counters.
+
   PYTHONPATH=src python -m repro.launch.serve_communities --smoke
   PYTHONPATH=src python -m repro.launch.serve_communities --async --smoke
   PYTHONPATH=src python -m repro.launch.serve_communities --churn --smoke
@@ -81,6 +95,7 @@ landing in three buckets, plus warm edge updates):
   PYTHONPATH=src python -m repro.launch.serve_communities --stream --smoke
   PYTHONPATH=src python -m repro.launch.serve_communities --sharded --smoke
   PYTHONPATH=src python -m repro.launch.serve_communities --chaos --smoke
+  PYTHONPATH=src python -m repro.launch.serve_communities --tiers --smoke
   PYTHONPATH=src python -m repro.launch.serve_communities \
       --async --tenants 4 --requests 200 --max-pending 12 --batch 16
 """
@@ -758,6 +773,132 @@ async def main_stream_async(args):
 
 
 # ---------------------------------------------------------------------------
+# tiers driver: SLO-tiered portfolio — per-request quality/latency contracts
+# ---------------------------------------------------------------------------
+
+async def main_tiers_async(args):
+    """Three tenants pinned to the three portfolio tiers submit the SAME
+    graphs through the async service; per-tier contracts are checked on
+    the stamped store entries and the live Prometheus scrape."""
+    import urllib.request
+
+    from repro.core.portfolio import contract_for
+    from repro.telemetry.prometheus import metric_names, parse_prometheus
+
+    n_each = 6 if args.smoke else max(6, args.requests // 3)
+    tiers = {"speed": "fast", "std": "standard", "quality": "max-quality"}
+    config = ServiceConfig(
+        detect=DetectOptions(louvain=LouvainConfig()),
+        batch_size=args.batch, max_delay_s=args.max_delay_ms / 1e3,
+        sub_batch=args.sub_batch,
+        tenant_tiers=tuple(tiers.items()),
+        deadline_tiers=(("fast", 0.02), ("standard", 0.5)),
+        telemetry_enabled=True, exporter_port=0,
+    )
+    async with AsyncCommunityService(config) as svc:
+        # compile prologue: one detect per (family, tier) so reported
+        # latencies reflect the steady state, not XLA compilation
+        for i, fam in enumerate(FAMILIES):
+            for tname in tiers:
+                await svc.submit_detect(
+                    f"warm-{tname}-{fam}", synth_graph(fam, 10_000 + i),
+                    tenant=tname)
+        await svc.drain()
+        for fam in FAMILIES:
+            # pre-compile the dispatch-width ladder for EVERY configured
+            # tier on this bucket (engine.algorithms covers the three)
+            e = svc.result(f"warm-std-{fam}")
+            svc.engine.warm(e.bucket, svc.config.batch_size)
+        svc.metrics.reset()
+
+        t0 = time.perf_counter()
+        futs = []
+        for i in range(n_each):
+            fam = FAMILIES[i % len(FAMILIES)]
+            g = synth_graph(fam, args.seed + i)
+            for tname in tiers:        # the SAME graph at every tier
+                futs.append((tname, i, await svc.submit_detect(
+                    f"{tname}-g{i}-{fam}", g, tenant=tname)))
+        await svc.drain()
+        entries = {}
+        for tname, i, fut in futs:
+            entries[(tname, i)] = await fut
+        dt = time.perf_counter() - t0
+
+        # deadline auto-selection for an unpinned tenant: a tight
+        # deadline lands on the fast tier, a loose one on the default
+        f_tight = await svc.submit_detect(
+            "anon-tight", synth_graph("ego_small", args.seed + 777),
+            tenant="anon", deadline_s=0.02)
+        f_loose = await svc.submit_detect(
+            "anon-loose", synth_graph("ego_small", args.seed + 778),
+            tenant="anon", deadline_s=30.0)
+        # an explicit algorithm pin overrides the tenant mapping
+        f_pin = await svc.submit_detect(
+            "pin-maxq", synth_graph("ego_small", args.seed + 779),
+            tenant="speed", algorithm="max-quality")
+        await svc.drain()
+        e_tight, e_loose, e_pin = await f_tight, await f_loose, await f_pin
+
+        rep = svc.metrics.report()
+        url = svc.frontend.exporter.url
+        body = urllib.request.urlopen(url, timeout=10).read().decode()
+    parsed = parse_prometheus(body)
+    names = metric_names(parsed)
+
+    per_tier = {}
+    print(f"{'tier':<12}{'tenant':<9}{'mean q':>9}{'disc':>6}{'p50_ms':>9}")
+    for tname, tier in tiers.items():
+        es = [entries[(tname, i)] for i in range(n_each)]
+        row = dict(
+            q=float(np.mean([e.q for e in es])),
+            n_disconnected=int(sum(e.n_disconnected for e in es)),
+            p50_ms=rep["tenants"][tname]["p50_ms"])
+        per_tier[tier] = row
+        print(f"{tier:<12}{tname:<9}{row['q']:>9.4f}"
+              f"{row['n_disconnected']:>6}{row['p50_ms']:>9.1f}")
+    print(f"{3 * n_each} tiered detects in {dt:.1f}s; deadline routing: "
+          f"tight->{e_tight.algorithm} loose->{e_loose.algorithm} "
+          f"pin->{e_pin.algorithm}")
+    print(f"scraped {url}: {len(parsed)} samples, "
+          f"{len(names)} metric families")
+
+    if args.smoke:
+        for tname, tier in tiers.items():
+            for i in range(n_each):
+                e = entries[(tname, i)]
+                assert e.algorithm == tier, (tname, i, e.algorithm)
+                c = contract_for(e.algorithm)
+                if tier != "fast":
+                    # the paper's invariant, per the tier contract
+                    assert c.zero_disconnected and e.n_disconnected == 0, \
+                        (tier, i, e.n_disconnected)
+        # best-of-two makes this structural, not merely empirical
+        for i in range(n_each):
+            q_max = entries[("quality", i)].q
+            q_std = entries[("std", i)].q
+            assert q_max >= q_std - 1e-9, (i, q_max, q_std)
+        assert e_tight.algorithm == "fast", e_tight.algorithm
+        assert e_loose.algorithm == "standard", e_loose.algorithm
+        assert e_pin.algorithm == "max-quality", e_pin.algorithm
+        # the fast tier must actually be fast in steady state
+        assert per_tier["fast"]["p50_ms"] <= 500.0, per_tier["fast"]
+        # tier-labeled counters survive the live render -> HTTP -> parse
+        assert "repro_detect_served_tier_total" in names, sorted(names)[:20]
+        served_tiers = {dict(lk).get("tier") for name, lk in parsed
+                        if name == "repro_detect_served_tier_total"}
+        assert set(tiers.values()) <= served_tiers, served_tiers
+        compile_tiers = {dict(lk).get("tier") for name, lk in parsed
+                         if name == "repro_engine_compile_total"}
+        assert set(tiers.values()) <= compile_tiers, compile_tiers
+        print(f"TIERS SMOKE OK ({3 * n_each} tiered detects, "
+              f"q_max {per_tier['max-quality']['q']:.4f} >= "
+              f"q_std {per_tier['standard']['q']:.4f}, "
+              f"fast p50 {per_tier['fast']['p50_ms']:.1f} ms)")
+    return per_tier
+
+
+# ---------------------------------------------------------------------------
 
 def main_sharded(args):
     """Sharded single-graph detection end-to-end on a 2-device forced-host
@@ -1169,6 +1310,11 @@ def main(argv=None):
                          "with retries/breaker/degraded fallbacks vs a "
                          "fault-free reference run, plus breaker recovery "
                          "and a kill-and-restore checkpoint round trip")
+    ap.add_argument("--tiers", action="store_true",
+                    help="SLO-tier driver: three tenants pinned to the "
+                         "fast/standard/max-quality portfolio tiers over "
+                         "the same graphs, deadline auto-selection, and "
+                         "tier-labeled telemetry (async service)")
     ap.add_argument("--compact-window", type=int, default=4,
                     help="deferred-compaction threshold for --stream "
                          "(0 = compact immediately)")
@@ -1203,6 +1349,9 @@ def main(argv=None):
         args.update_frac = 0.35
         if not args.async_:
             args.requests = 36
+
+    if args.tiers:
+        return asyncio.run(main_tiers_async(args))
 
     if args.sharded:
         return main_sharded(args)

@@ -6,12 +6,17 @@ Two modes, tried in the order configured by
 
 * ``"stale"`` — the last *committed* partition from the result store,
   marked ``stale=True`` with its age in ``staleness_s``.  The partition
-  did carry the zero-internally-disconnected guarantee when committed,
-  but it no longer reflects the current graph.
-* ``"lpa"``   — a fresh label-propagation fast path
-  (:func:`repro.core.lpa.lpa_run`), flagged ``quality='degraded'``.
-  LPA can and does produce internally-disconnected communities — that
-  is exactly the failure mode the paper's refinement fixes.
+  carries the :class:`repro.core.portfolio.QualityContract` of the tier
+  that produced it, but it no longer reflects the current graph.
+* ``"lpa"``   — the portfolio's **fast tier**
+  (:func:`repro.core.portfolio.run_detection` with
+  ``algorithm='fast'``), flagged ``quality='degraded'``.  This is the
+  SAME code path a request pinned to the fast tier takes, so LPA-under-
+  breaker and LPA-as-requested-tier are bit-identical on the same graph
+  and share one contract shape.  LPA can and does produce
+  internally-disconnected communities — exactly the failure mode the
+  paper's refinement fixes — and ``n_disconnected`` reports the measured
+  count instead of pretending otherwise.
 
 Either way the result is a :class:`DegradedResult`, never a
 :class:`StoreEntry`: ``guarantee`` is always ``False``, degraded output
@@ -25,14 +30,16 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.lpa import lpa_run
-from repro.core.modularity import modularity
+from repro.core.portfolio import QualityContract, contract_for
 
 
 @dataclasses.dataclass
 class DegradedResult:
     """A reduced-quality answer, explicitly NOT carrying the paper's
-    zero-internally-disconnected guarantee (``guarantee=False``)."""
+    zero-internally-disconnected guarantee (``guarantee=False``).
+    ``contract`` records the producing tier's flags — the stale mode
+    keeps the committed entry's contract (true when committed, now
+    stale), the lpa mode carries the fast tier's all-False contract."""
 
     graph_id: str
     C: np.ndarray                 # labels over the padded node axis
@@ -43,8 +50,9 @@ class DegradedResult:
     stale: bool
     staleness_s: float            # age of the served partition (0 if fresh)
     version: int = 0              # store version served (stale mode only)
-    n_disconnected: Optional[int] = None  # None = not evaluated (lpa)
+    n_disconnected: Optional[int] = None  # None = unknown (legacy entries)
     guarantee: bool = False
+    contract: Optional[QualityContract] = None
 
 
 def stale_result(graph_id: str, entry, *, now: float) -> DegradedResult:
@@ -60,25 +68,33 @@ def stale_result(graph_id: str, entry, *, now: float) -> DegradedResult:
         staleness_s=max(float(now) - float(entry.t_stored), 0.0),
         version=int(entry.version),
         n_disconnected=int(entry.n_disconnected),
+        contract=contract_for(getattr(entry, "algorithm", "standard")),
     )
 
 
-def lpa_result(graph_id: str, graph, *, max_iters: int = 50
-               ) -> DegradedResult:
-    """Compute a fresh LPA fast-path partition for ``graph``."""
-    labels, _ = lpa_run(graph, max_iters=max_iters)
-    C = np.asarray(labels, dtype=np.int32)
-    mask = np.asarray(graph.node_mask())
-    n_comms = int(C[mask].max()) + 1 if bool(mask.any()) else 0
-    q = float(modularity(graph.src, graph.dst, graph.w, labels, graph.nv))
+def lpa_result(graph_id: str, graph, *, options=None,
+               telemetry=None) -> DegradedResult:
+    """Compute a fresh fast-tier partition for ``graph`` through the
+    portfolio dispatch — one code path with requested-tier LPA.
+
+    ``options``: the service's :class:`repro.core.api.DetectOptions`
+    (backend knobs carry over; the algorithm is forced to ``'fast'`` and
+    the mesh is dropped — the degraded path runs single-device on the
+    compute thread).
+    """
+    from repro.core.api import DetectOptions
+    from repro.core.portfolio import run_detection
+    opts = (options or DetectOptions()).replace(algorithm="fast", mesh=None)
+    det = run_detection(graph, opts, telemetry=telemetry)
     return DegradedResult(
         graph_id=graph_id,
-        C=C,
-        n_communities=n_comms,
-        q=q,
+        C=np.asarray(det.labels, dtype=np.int32),
+        n_communities=int(det.n_communities),
+        q=float(det.modularity),
         mode="lpa",
         quality="degraded",
         stale=False,
         staleness_s=0.0,
-        n_disconnected=None,
+        n_disconnected=int(det.n_disconnected),
+        contract=det.contract,
     )

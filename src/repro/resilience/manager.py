@@ -31,6 +31,10 @@ class ResilienceManager:
                       if config.breaker is not None else None)
         self.degrade_enabled = bool(config.degrade_enabled)
         self.degrade_modes = tuple(config.degrade_modes)
+        # the service's DetectOptions: the degraded lpa mode runs the
+        # portfolio's fast tier under the SAME backend knobs as a
+        # requested fast-tier detect (one code path, bit-identical)
+        self.detect_options = config.detect
         self._degrade_tenants = (None if config.degrade_tenants is None
                                  else frozenset(config.degrade_tenants))
         seed = getattr(self.plan, "seed", 0) if self.plan is not None else 0
@@ -139,7 +143,9 @@ class ResilienceManager:
                 dr = stale_result(graph_id, entry, now=now)
             else:
                 try:
-                    dr = lpa_result(graph_id, graph)
+                    dr = lpa_result(graph_id, graph,
+                                    options=self.detect_options,
+                                    telemetry=self.telemetry)
                 except Exception:       # fast path must not fail the shed
                     continue
             self.n_degraded += 1

@@ -50,6 +50,19 @@ exporter_port=...)`` attaches aggregation sinks plus a Prometheus-text
 ``/metrics`` endpoint — see :mod:`repro.telemetry` and the README
 "Observability" section.
 
+Quality tiers (PR 10, :mod:`repro.core.portfolio`): every request
+resolves to one of three algorithm tiers — ``fast`` (LPA, no
+connectivity guarantee), ``standard`` (GSP-Louvain, the default), or
+``max-quality`` (Leiden-style refinement, best-of-two against standard)
+— via an explicit ``algorithm=`` pin, a ``ServiceConfig.tenant_tiers``
+mapping, or ``deadline_tiers`` auto-selection from the request deadline.
+Admission groups batches per ``(bucket, tier)`` so composed batches stay
+tier-homogeneous, the engine compiles/batches each tier separately, and
+every result carries the producing tier's
+:class:`~repro.core.portfolio.QualityContract`.  The store stamps each
+entry with its producing tier's options key and refuses cross-tier warm
+updates (:class:`OptionsMismatch` — the caller re-detects instead).
+
 Resilience (PR 9, :mod:`repro.resilience`): ``ServiceConfig`` installs
 a deterministic :class:`FaultPlan`, a :class:`RetryPolicy` (backoff +
 watchdog + split-in-half batch retry), a per-bucket circuit breaker
@@ -79,7 +92,7 @@ from repro.service.metrics import ServiceMetrics, TenantMetrics
 from repro.service.replay import ReplayConfig, run_replay, sweep_rates
 from repro.service.service import CommunityService
 from repro.service.store import (
-    CapacityExceeded, ResultStore, StoreEntry, UpdatePlan,
+    CapacityExceeded, OptionsMismatch, ResultStore, StoreEntry, UpdatePlan,
 )
 from repro.timeline import (
     LifecycleEvent, TimelineManager, WindowedIngest,
@@ -106,6 +119,7 @@ __all__ = [
     "FaultSpec",
     "GraphUpdate",
     "LifecycleEvent",
+    "OptionsMismatch",
     "PendingRequest",
     "QueueFull",
     "ReplayConfig",

@@ -33,8 +33,12 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core import LouvainConfig
 from repro.core.api import DetectOptions, fold_legacy_kwargs
+from repro.core.portfolio import contract_for
 from repro.graph.container import Graph
 from repro.service.buckets import Bucket, DEFAULT_BUCKETS
+
+# a DRR composition group: same-bucket, same-tier requests batch together
+Group = Tuple[Bucket, str]
 
 
 DEFAULT_TENANT = "default"
@@ -187,6 +191,15 @@ class ServiceConfig:
     autockpt_keep: int = 3
     autockpt_writeback: int = 64
     autockpt_recover: bool = True
+    # SLO tiers (core/portfolio.py) — which portfolio tier serves a
+    # request.  Per-request ``algorithm=`` wins; else the tenant's
+    # declared tier (``tenant_tiers``); else, when the request carries a
+    # deadline, the first ``deadline_tiers`` (tier, bound_s) pair with
+    # deadline <= bound (pairs sorted ascending: tight deadlines buy the
+    # cheap tier); else ``detect.algorithm``.  ``warm()`` pre-compiles
+    # every tier reachable through this config (``serve_algorithms``).
+    tenant_tiers: Tuple[Tuple[str, str], ...] = ()
+    deadline_tiers: Tuple[Tuple[str, float], ...] = ()
     # deprecated flat detection knobs (PR<=7 spelling) — folded into
     # ``detect`` by __post_init__ through the one-warning shim; read back
     # via the compatibility properties installed after the class body
@@ -256,7 +269,44 @@ class ServiceConfig:
             raise ValueError(
                 f"autockpt_writeback must be >= 0, got "
                 f"{self.autockpt_writeback}")
+        for tenant, tier in self.tenant_tiers:
+            contract_for(tier)  # raises on unknown tier names
+        prev = 0.0
+        for tier, bound in self.deadline_tiers:
+            contract_for(tier)
+            if bound <= prev:
+                raise ValueError(
+                    "deadline_tiers bounds must be > 0 and strictly "
+                    f"ascending, got {self.deadline_tiers}")
+            prev = bound
         object.__setattr__(self, "buckets", tuple(sorted(self.buckets)))
+
+    # -- tier selection ----------------------------------------------------
+    def tier_for(self, tenant: Optional[str] = None,
+                 deadline_s: Optional[float] = None,
+                 algorithm: Optional[str] = None) -> str:
+        """Resolve the portfolio tier for one request: explicit
+        ``algorithm`` > tenant pin > deadline auto-select > default."""
+        if algorithm is not None:
+            contract_for(algorithm)
+            return algorithm
+        for t, tier in self.tenant_tiers:
+            if t == tenant:
+                return tier
+        if deadline_s is not None:
+            for tier, bound in self.deadline_tiers:
+                if deadline_s <= bound:
+                    return tier
+        return self.detect.algorithm
+
+    @property
+    def serve_algorithms(self) -> Tuple[str, ...]:
+        """Every tier reachable through this config (ordered, deduped) —
+        what the engine pre-compiles at ``warm()``."""
+        tiers = [self.detect.algorithm]
+        tiers += [tier for _, tier in self.tenant_tiers]
+        tiers += [tier for tier, _ in self.deadline_tiers]
+        return tuple(dict.fromkeys(tiers))
 
 
 # Backward-compatible reads: PR<=7 code addressed the flat knobs directly
@@ -287,11 +337,20 @@ class PendingRequest:
     priority: int                # higher dispatches earlier within tenant
     t_submit: float
     deadline: Optional[float]    # absolute clock time forcing a flush
+    algorithm: str = "standard"  # portfolio tier (batches compose per tier)
     future: object = None        # DetectionFuture (set by the frontend)
+
+    @property
+    def group(self) -> Group:
+        return (self.bucket, self.algorithm)
 
 
 class AdmissionController:
-    """Bounded per-tenant queues + weighted-DRR bucket-batch composition."""
+    """Bounded per-tenant queues + weighted-DRR batch composition.
+
+    Batches compose per :data:`Group` — (bucket, algorithm tier) — so a
+    dispatch is always homogeneous in both shape and compile key: the
+    engine compiles one executable per (bucket, batch rung, tier)."""
 
     def __init__(self, buckets=DEFAULT_BUCKETS, *, batch_size: int = 32,
                  max_delay_s: float = 0.05, max_pending_per_tenant: int = 64,
@@ -305,12 +364,12 @@ class AdmissionController:
         self.max_pending_per_tenant = int(max_pending_per_tenant)
         self.clock = clock or time.perf_counter
         self._weights: Dict[str, float] = dict(weights or {})
-        # bucket -> tenant -> heap of (-priority, seq, req)
-        self._queues: Dict[Bucket, Dict[str, list]] = {
-            b: {} for b in self.buckets}
+        # (bucket, tier) -> tenant -> heap of (-priority, seq, req);
+        # groups materialize lazily (3 tiers x ladder is the ceiling)
+        self._queues: Dict[Group, Dict[str, list]] = {}
         self._pending_by_tenant: Dict[str, int] = {}
-        self._deficit: Dict[Tuple[Bucket, str], float] = {}
-        self._rr: Dict[Bucket, int] = {b: 0 for b in self.buckets}
+        self._deficit: Dict[Tuple[Group, str], float] = {}
+        self._rr: Dict[Group, int] = {}
         self._order: List[str] = []       # stable first-seen tenant order
         self._known = set()               # O(1) membership for _order
         self._seq = itertools.count()     # FIFO tiebreak within a priority
@@ -342,7 +401,10 @@ class AdmissionController:
             if req.tenant not in self._known:
                 self._known.add(req.tenant)
                 self._order.append(req.tenant)
-            q = self._queues[req.bucket].setdefault(req.tenant, [])
+            if req.bucket not in self.buckets:
+                raise ValueError(f"unknown bucket {req.bucket}")
+            q = self._queues.setdefault(req.group, {}).setdefault(
+                req.tenant, [])
             heapq.heappush(q, (-req.priority, next(self._seq), req))
             self._pending_by_tenant[req.tenant] = n + 1
 
@@ -357,32 +419,56 @@ class AdmissionController:
             return list(self._order)
 
     # -- dispatch decisions -----------------------------------------------
+    def _group_ready(self, group: Group, now: float, force: bool) -> bool:
+        """Caller holds the lock."""
+        reqs = [item[2] for q in self._queues.get(group, {}).values()
+                for item in q]
+        if not reqs:
+            return False
+        if force or len(reqs) >= self.batch_size:
+            return True
+        t_oldest = min(r.t_submit for r in reqs)
+        d_min = min((r.deadline for r in reqs
+                     if r.deadline is not None), default=None)
+        return (now - t_oldest >= self.max_delay_s
+                or (d_min is not None and now >= d_min))
+
+    def ready_groups(self, now: Optional[float] = None, *,
+                     force: bool = False) -> List[Group]:
+        """(bucket, tier) groups with a full batch, a stale oldest
+        request, a passed deadline, or anything at all under ``force``."""
+        now = self.clock() if now is None else now
+        with self._lock:
+            return [g for g in sorted(self._queues)
+                    if self._group_ready(g, now, force)]
+
     def ready_buckets(self, now: Optional[float] = None, *,
                       force: bool = False) -> List[Bucket]:
-        """Buckets with a full batch, a stale oldest request, a passed
-        deadline, or anything at all under ``force``."""
-        now = self.clock() if now is None else now
-        out = []
-        with self._lock:
-            for b in self.buckets:
-                reqs = [item[2] for q in self._queues[b].values()
-                        for item in q]
-                if not reqs:
-                    continue
-                if force or len(reqs) >= self.batch_size:
-                    out.append(b)
-                    continue
-                t_oldest = min(r.t_submit for r in reqs)
-                d_min = min((r.deadline for r in reqs
-                             if r.deadline is not None), default=None)
-                if (now - t_oldest >= self.max_delay_s
-                        or (d_min is not None and now >= d_min)):
-                    out.append(b)
-        return out
+        """Buckets with at least one ready (bucket, tier) group — the
+        pre-tier spelling; batch composition is per group either way."""
+        seen: List[Bucket] = []
+        for b, _ in self.ready_groups(now, force=force):
+            if b not in seen:
+                seen.append(b)
+        return seen
 
-    def compose(self, bucket: Bucket, *,
+    def _pick_group(self, bucket: Bucket) -> Optional[Group]:
+        """The bucket's nonempty group holding the oldest queued request
+        (caller holds the lock) — legacy compose(bucket) entry."""
+        best, best_t = None, None
+        for g, queues in self._queues.items():
+            if g[0] != bucket:
+                continue
+            ts = [item[2].t_submit for q in queues.values() for item in q]
+            if ts and (best_t is None or min(ts) < best_t):
+                best, best_t = g, min(ts)
+        return best
+
+    def compose(self, bucket: Bucket, *, algorithm: Optional[str] = None,
                 max_n: Optional[int] = None) -> List[PendingRequest]:
-        """Pop up to ``max_n`` requests for ``bucket`` by weighted DRR.
+        """Pop up to ``max_n`` requests for one (bucket, tier) group by
+        weighted DRR.  ``algorithm=None`` serves the bucket's group with
+        the oldest queued request — batches stay single-tier either way.
 
         Each cycle over tenants with queued work credits ``weight(t)``
         deficit and serves requests against it; an emptied queue forfeits
@@ -392,10 +478,16 @@ class AdmissionController:
         max_n = self.batch_size if max_n is None else max_n
         batch: List[PendingRequest] = []
         with self._lock:
-            queues = self._queues[bucket]
+            if algorithm is None:
+                group = self._pick_group(bucket)
+                if group is None:
+                    return batch
+            else:
+                group = (bucket, algorithm)
+            queues = self._queues.get(group, {})
             if self._order:
-                start = self._rr[bucket] % len(self._order)
-                self._rr[bucket] = start + 1
+                start = self._rr.get(group, 0) % len(self._order)
+                self._rr[group] = start + 1
                 order = (self._order[start:] + self._order[:start])
             else:
                 order = []
@@ -406,7 +498,7 @@ class AdmissionController:
                     q = queues.get(t)
                     if not q:
                         continue
-                    key = (bucket, t)
+                    key = (group, t)
                     self._deficit[key] = (self._deficit.get(key, 0.0)
                                           + self.weight(t))
                     while q and self._deficit[key] >= 1.0 and len(batch) < max_n:
@@ -429,10 +521,10 @@ class AdmissionController:
         awaiting a dispatcher that no longer runs."""
         with self._lock:
             out: List[PendingRequest] = []
-            for b in self.buckets:
-                for q in self._queues[b].values():
+            for queues in self._queues.values():
+                for q in queues.values():
                     out.extend(item[2] for item in q)
-                self._queues[b].clear()
+            self._queues.clear()
             self._pending_by_tenant.clear()
             self._deficit.clear()
             self._order.clear()
@@ -452,6 +544,6 @@ class AdmissionController:
         except ValueError:
             pass
         self._pending_by_tenant.pop(tenant, None)
-        for b in self.buckets:
-            self._deficit.pop((b, tenant), None)
-            self._queues[b].pop(tenant, None)
+        for g in list(self._queues):
+            self._deficit.pop((g, tenant), None)
+            self._queues[g].pop(tenant, None)

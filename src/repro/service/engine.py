@@ -46,9 +46,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
-    LouvainConfig, disconnected_communities_impl, louvain_impl, modularity,
+    LouvainConfig, QualityContract, contract_for,
+    disconnected_communities_impl, modularity,
 )
 from repro.core.api import DetectOptions, fold_legacy_kwargs
+from repro.core.portfolio import partition_impl, tier_config
 from repro.core.dynamic import warm_update_impl
 from repro.graph.container import Graph, stack_graphs
 from repro.kernels import ops
@@ -69,6 +71,8 @@ class DetectResult:
     q: float                     # modularity of the returned partition
     sweeps: int = 0              # local-move sweeps summed over passes
     split_moved: int = 0         # vertices the split pass relabelled
+    algorithm: str = "standard"  # portfolio tier that produced this result
+    contract: Optional[QualityContract] = None  # the tier's guarantees
 
 
 @dataclasses.dataclass
@@ -107,6 +111,7 @@ class DispatchInfo:
     t_call0: float               # jitted call begins
     t_call1: float               # jitted call returned (async dispatch)
     t_sync: float                # device->host conversion finished
+    algorithm: str = "standard"  # portfolio tier the batch ran
 
     @property
     def fill(self) -> float:
@@ -124,6 +129,7 @@ class BatchedLouvainEngine:
 
     def __init__(self, cfg: Optional[LouvainConfig] = None, *,
                  options: Optional[DetectOptions] = None,
+                 algorithms: Optional[Tuple[str, ...]] = None,
                  sub_batch: Optional[int] = None,
                  telemetry: Optional[Telemetry] = None,
                  profile_dir: Optional[str] = None,
@@ -139,10 +145,16 @@ class BatchedLouvainEngine:
             Convenience positional for ``options.louvain`` — pass one or
             the other, not both.
           options: the :class:`repro.core.DetectOptions` record selecting
-            scan strategy, dense crossover, segment-reduction backend,
-            Pallas block and (for :meth:`detect_sharded`) the device mesh.
-            Compile keys derive from it via
-            :meth:`DetectOptions.cache_key`.
+            the default portfolio tier (``algorithm``), scan strategy,
+            dense crossover, segment-reduction backend, Pallas block and
+            (for :meth:`detect_sharded`) the device mesh.  Compile keys
+            derive from it via :meth:`DetectOptions.cache_key` — the
+            algorithm is part of every key, so each tier compiles and
+            batches separately.
+          algorithms: every portfolio tier this engine serves (``warm()``
+            pre-compiles each); None = just ``options.algorithm``.
+            Per-dispatch tiers outside this set still work — they just
+            compile lazily on first use.
           sub_batch: dispatch width; None = auto (cache-sized on CPU, wide
             on accelerators).
           telemetry: optional hub for compile-cache hit/miss counters,
@@ -176,6 +188,11 @@ class BatchedLouvainEngine:
         # kernels and the autotuner must agree on for this engine's lifetime
         self.options = opts.replace(seg_impl=ops.resolve_impl(opts.seg_impl))
         self.cfg = self.options.louvain
+        if algorithms is None:
+            algorithms = (self.options.algorithm,)
+        for a in algorithms:
+            contract_for(a)  # validates tier names
+        self.algorithms = tuple(dict.fromkeys(algorithms))  # dedup, ordered
         if sub_batch is None:
             sub_batch = 1 if jax.default_backend() == "cpu" else 8
         self.sub_batch = max(1, int(sub_batch))
@@ -195,7 +212,8 @@ class BatchedLouvainEngine:
             return contextlib.nullcontext()
         return jax.profiler.trace(self.profile_dir)
 
-    def _note_compile(self, kind: str, bucket: Bucket, hit: bool):
+    def _note_compile(self, kind: str, bucket: Bucket, hit: bool,
+                      algorithm: str = "standard"):
         if hit:
             self.n_compile_hits += 1
         else:
@@ -203,14 +221,15 @@ class BatchedLouvainEngine:
         self.telemetry.counter(
             "engine_compile", 1,
             {"kind": kind, "bucket": f"{bucket.n_cap}x{bucket.m_cap}",
-             "result": "hit" if hit else "miss"})
+             "tier": algorithm, "result": "hit" if hit else "miss"})
 
     def _note_dispatch(self, info: DispatchInfo, flat: dict, n: int):
         """Emit algorithm counters + fill gauge for a finished batch."""
         tel = self.telemetry
         if not tel.enabled:
             return
-        bl = {"bucket": f"{info.bucket.n_cap}x{info.bucket.m_cap}"}
+        bl = {"bucket": f"{info.bucket.n_cap}x{info.bucket.m_cap}",
+              "tier": info.algorithm}
         tel.gauge("batch_fill_factor", info.fill, bl)
         if info.kind == "detect":
             tel.counter("louvain_passes",
@@ -244,9 +263,9 @@ class BatchedLouvainEngine:
             self._seg_blocks[bucket] = blk
         return blk
 
-    def _one(self, g: Graph, scan: str, block_m: int):
-        C, stats = louvain_impl(g, self.cfg, scan=scan,
-                                seg_impl=self.seg_impl, block_m=block_m)
+    def _one(self, g: Graph, scan: str, block_m: int, algorithm: str):
+        C, stats = partition_impl(g, algorithm, self.cfg, scan=scan,
+                                  seg_impl=self.seg_impl, block_m=block_m)
         det = disconnected_communities_impl(
             g.src, g.dst, g.w, C, g.n_nodes,
             impl="dense" if scan == "dense" else "coo",
@@ -265,22 +284,33 @@ class BatchedLouvainEngine:
             q=q,
         )
 
-    def _detect_key(self, bucket: Bucket, n_tiles: int):
+    def _resolve_algorithm(self, algorithm: Optional[str]) -> str:
+        if algorithm is None:
+            return self.options.algorithm
+        contract_for(algorithm)  # validates
+        return algorithm
+
+    def _detect_key(self, bucket: Bucket, n_tiles: int,
+                    algorithm: Optional[str] = None):
         return self.options.cache_key(
             bucket, n_tiles, self.sub_batch,
+            algorithm=self._resolve_algorithm(algorithm),
             scan=self.scan_for(bucket), block_m=self.seg_block_for(bucket))
 
-    def compiled_fn(self, bucket: Bucket, n_tiles: int):
-        """The jitted executable for (bucket, n_tiles x sub_batch): a
-        ``lax.map`` of the vmapped per-graph pipeline over tiles — one
-        compile per (bucket, batch, config, seg-backend), replayed for the
-        bucket's whole lifetime."""
+    def compiled_fn(self, bucket: Bucket, n_tiles: int,
+                    algorithm: Optional[str] = None):
+        """The jitted executable for (bucket, n_tiles x sub_batch, tier):
+        a ``lax.map`` of the vmapped per-graph pipeline over tiles — one
+        compile per (bucket, batch, tier, config, seg-backend), replayed
+        for the bucket's whole lifetime."""
         scan = self.scan_for(bucket)
-        key = self._detect_key(bucket, n_tiles)
+        alg = self._resolve_algorithm(algorithm)
+        key = self._detect_key(bucket, n_tiles, alg)
         fn = self._compiled.get(key)
         if fn is None:
             tile = jax.vmap(partial(self._one, scan=scan,
-                                    block_m=self.seg_block_for(bucket)))
+                                    block_m=self.seg_block_for(bucket),
+                                    algorithm=alg))
             fn = jax.jit(lambda gt: jax.lax.map(tile, gt))
             self._compiled[key] = fn
         return fn
@@ -313,40 +343,51 @@ class BatchedLouvainEngine:
     def cache_keys(self):
         return list(self._compiled)
 
-    def warm(self, bucket: Bucket, max_batch: int) -> int:
+    def warm(self, bucket: Bucket, max_batch: int, *,
+             algorithms: Optional[Sequence[str]] = None) -> int:
         """Pre-compile the pow2 tile-count ladder for a bucket (1..max
-        batch); returns the number of executables compiled.  Long-running
-        services call this at startup so steady-state latency never pays
-        XLA compilation."""
+        batch) for every configured tier (``algorithms`` overrides
+        ``self.algorithms``); returns the number of executables compiled.
+        Long-running services call this at startup so steady-state latency
+        never pays XLA compilation."""
         n = 0
         pad = filler(bucket)
-        tiles = 1
         # warm-up dispatches bypass any installed fault plan: injected
         # chaos is for live traffic, not startup pre-compiles
         faults, self.faults = self.faults, None
         try:
-            while True:
-                key = self._detect_key(bucket, tiles)
-                if key not in self._compiled:
-                    self.detect_batch([pad] * (tiles * self.sub_batch))
-                    n += 1
-                # cover the rounded-up rung too: a full batch of max_batch
-                # dispatches at the next power of two, not at max_batch
-                if tiles * self.sub_batch >= max(max_batch, self.sub_batch):
-                    break
-                tiles *= 2
+            for alg in (algorithms if algorithms is not None
+                        else self.algorithms):
+                tiles = 1
+                while True:
+                    key = self._detect_key(bucket, tiles, alg)
+                    if key not in self._compiled:
+                        self.detect_batch([pad] * (tiles * self.sub_batch),
+                                          algorithm=alg)
+                        n += 1
+                    # cover the rounded-up rung too: a full batch of
+                    # max_batch dispatches at the next power of two, not
+                    # at max_batch
+                    if tiles * self.sub_batch >= max(max_batch,
+                                                     self.sub_batch):
+                        break
+                    tiles *= 2
         finally:
             self.faults = faults
         return n
 
     # -- execution --------------------------------------------------------
     def detect_batch(self, graphs: Sequence[Graph], *,
+                     algorithm: Optional[str] = None,
                      fault_ids: Optional[Sequence[str]] = None
                      ) -> list[DetectResult]:
-        """Detect communities for a homogeneous (same-bucket) batch with
-        one jitted call.
+        """Detect communities for a homogeneous (same-bucket, same-tier)
+        batch with one jitted call.
 
-        The stack is shaped [n_tiles, sub_batch, ...]; the tail tile is
+        ``algorithm`` selects the portfolio tier for the whole batch
+        (None = the engine default); the DRR scheduler composes batches
+        per (bucket, tier), so mixed-tier batches never reach here.  The
+        stack is shaped [n_tiles, sub_batch, ...]; the tail tile is
         padded with filler graphs whose results are dropped.
         ``fault_ids`` (the batch's graph ids) scope any installed fault
         plan's per-graph poison specs to this dispatch.
@@ -354,6 +395,7 @@ class BatchedLouvainEngine:
         graphs = list(graphs)
         if not graphs:
             return []
+        alg = self._resolve_algorithm(algorithm)
         if self.faults is not None:
             self.faults.perturb("engine.detect.hang", ids=fault_ids)
             self.faults.perturb("engine.detect", ids=fault_ids)
@@ -376,8 +418,8 @@ class BatchedLouvainEngine:
             n_nodes=gb.n_nodes.reshape(n_tiles, b),
             n_cap=gb.n_cap, m_cap=gb.m_cap,
         )
-        hit = self._detect_key(bucket, n_tiles) in self._compiled
-        fn = self.compiled_fn(bucket, n_tiles)
+        hit = self._detect_key(bucket, n_tiles, alg) in self._compiled
+        fn = self.compiled_fn(bucket, n_tiles, alg)
         t_call0 = time.perf_counter()
         with self._profiled():
             out = fn(tiled)
@@ -388,10 +430,11 @@ class BatchedLouvainEngine:
         info = DispatchInfo(
             kind="detect", bucket=bucket, n=n, capacity=n_tiles * b,
             compile_hit=hit, t_start=t_start, t_call0=t_call0,
-            t_call1=t_call1, t_sync=t_sync)
+            t_call1=t_call1, t_sync=t_sync, algorithm=alg)
         self.last_detect_info = info
-        self._note_compile("detect", bucket, hit)
+        self._note_compile("detect", bucket, hit, alg)
         self._note_dispatch(info, flat, n)
+        contract = contract_for(alg)
         return [
             DetectResult(
                 C=flat["C"][i],
@@ -402,12 +445,15 @@ class BatchedLouvainEngine:
                 q=float(flat["q"][i]),
                 sweeps=int(flat["sweeps"][i]),
                 split_moved=int(flat["split_moved"][i]),
+                algorithm=alg,
+                contract=contract,
             )
             for i in range(n)
         ]
 
-    def detect_one(self, g: Graph) -> DetectResult:
-        return self.detect_batch([g])[0]
+    def detect_one(self, g: Graph, *,
+                   algorithm: Optional[str] = None) -> DetectResult:
+        return self.detect_batch([g], algorithm=algorithm)[0]
 
     def detect_sharded(self, g: Graph) -> DetectResult:
         """Single-graph detection sharded over ``options.mesh`` — the
@@ -425,22 +471,41 @@ class BatchedLouvainEngine:
             raise ValueError(
                 "detect_sharded requires a mesh: construct the engine with "
                 "options=DetectOptions(mesh=...)")
+        alg = self.options.algorithm
+        if alg == "fast":
+            raise ValueError(
+                "algorithm='fast' (LPA) is single-device only — "
+                "detect_sharded serves standard/max-quality")
         from repro.core.distributed import louvain_sharded
+        from repro.core.portfolio import _standard_config
         t_start = time.perf_counter()
         C, stats = louvain_sharded(
-            g, self.cfg, mesh=mesh, seg_impl=self.options.seg_impl,
+            g, tier_config(alg, self.cfg), mesh=mesh,
+            seg_impl=self.options.seg_impl,
             block_m=self.options.block_m, telemetry=self.telemetry)
+        q = modularity(g.src, g.dst, g.w, jnp.asarray(C),
+                       seg_impl=self.seg_impl, block_m=self.options.block_m)
+        if alg == "max-quality":
+            # same best-of-two selection as the single-device dispatch:
+            # the refined candidate above vs the plain GSP partition
+            C_s, st_s = louvain_sharded(
+                g, _standard_config(self.cfg), mesh=mesh,
+                seg_impl=self.options.seg_impl,
+                block_m=self.options.block_m, telemetry=self.telemetry)
+            q_s = modularity(g.src, g.dst, g.w, jnp.asarray(C_s),
+                             seg_impl=self.seg_impl,
+                             block_m=self.options.block_m)
+            if float(q_s) > float(q):
+                C, stats, q = C_s, st_s, q_s
         t_call1 = time.perf_counter()
         det = disconnected_communities_impl(
             g.src, g.dst, g.w, jnp.asarray(C), g.n_nodes,
             seg_impl=self.seg_impl, block_m=self.options.block_m)
-        q = modularity(g.src, g.dst, g.w, jnp.asarray(C),
-                       seg_impl=self.seg_impl, block_m=self.options.block_m)
         t_sync = time.perf_counter()
         info = DispatchInfo(
             kind="detect", bucket=bucket_of(g), n=1,
             capacity=1, compile_hit=True, t_start=t_start, t_call0=t_start,
-            t_call1=t_call1, t_sync=t_sync)
+            t_call1=t_call1, t_sync=t_sync, algorithm=alg)
         self.last_detect_info = info
         return DetectResult(
             C=np.asarray(C),
@@ -451,6 +516,8 @@ class BatchedLouvainEngine:
             q=float(q),
             sweeps=int(stats["li_total"]),
             split_moved=int(stats["split_moved"]),
+            algorithm=alg,
+            contract=contract_for(alg),
         )
 
     # -- batched warm updates ---------------------------------------------

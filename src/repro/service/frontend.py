@@ -66,7 +66,9 @@ from repro.service.admission import (
 from repro.service.buckets import Bucket, admit, live_edges
 from repro.service.engine import BatchedLouvainEngine, DispatchInfo
 from repro.service.metrics import ServiceMetrics
-from repro.service.store import CapacityExceeded, ResultStore
+from repro.service.store import (
+    CapacityExceeded, OptionsMismatch, ResultStore,
+)
 from repro.telemetry.prometheus import MetricsExporter
 from repro.telemetry.sinks import InMemorySink, JsonlSink, Telemetry
 from repro.telemetry.spans import RequestTrace
@@ -177,7 +179,7 @@ class ServiceFrontend:
         self.engine = BatchedLouvainEngine(
             options=c.detect, sub_batch=c.sub_batch,
             telemetry=self.telemetry, profile_dir=c.profile_dir,
-            faults=c.fault_plan)
+            faults=c.fault_plan, algorithms=c.serve_algorithms)
         self.admission = AdmissionController(
             c.buckets, batch_size=c.batch_size, max_delay_s=c.max_delay_s,
             max_pending_per_tenant=c.max_pending_per_tenant,
@@ -243,6 +245,7 @@ class ServiceFrontend:
     def submit_detect(self, graph_id: str, graph: Graph, *,
                       tenant: str = DEFAULT_TENANT, priority: int = 0,
                       deadline_s: Optional[float] = None,
+                      algorithm: Optional[str] = None,
                       count_reject: bool = True,
                       exempt_bound: bool = False) -> DetectionFuture:
         """Queue a detection; returns a future resolving to the store
@@ -250,9 +253,17 @@ class ServiceFrontend:
         :class:`QueueFull` at the tenant's bound (counted per tenant
         unless ``count_reject=False`` — the async await-until-slot path
         retries, and a blocked-then-served request is not a rejection).
+        ``algorithm`` pins the request to a portfolio tier; when None the
+        tier resolves through :meth:`ServiceConfig.tier_for` (tenant pin,
+        then deadline auto-select, then the config default).
         ``exempt_bound`` is for internal continuations that must not be
         droppable (see :meth:`submit_update`'s rebucket path)."""
         t0 = self.clock()
+        # resolve the quality tier up front: the tier is part of the
+        # request's batching identity (requests only compose with same-
+        # tier peers) and is stamped on the trace + the store entry
+        tier = self.config.tier_for(tenant=tenant, deadline_s=deadline_s,
+                                    algorithm=algorithm)
         # an already-expired deadline fails fast at the front door: the
         # work's future could never be used, so don't repad or queue it
         if deadline_s is not None and float(deadline_s) <= 0.0:
@@ -284,7 +295,7 @@ class ServiceFrontend:
             req_id=fut.req_id, tenant=tenant, graph_id=graph_id,
             graph=padded, bucket=bucket, priority=priority, t_submit=t0,
             deadline=None if deadline_s is None else t0 + float(deadline_s),
-            future=fut)
+            algorithm=tier, future=fut)
         try:
             with trace.span("admission"):
                 self.admission.submit(req, exempt_bound=exempt_bound)
@@ -334,13 +345,16 @@ class ServiceFrontend:
         n_vr0 = self.store.n_vertex_removed
         try:
             new = self.store.apply_update(graph_id, upd, trace=trace)
-        except CapacityExceeded:
+        except CapacityExceeded as ce:
             # Deferred compaction keeps the entry on a capacity overflow
             # (the store did NOT invalidate): a re-bucketing rebuild would
             # replay tombstone-space ids against a compacted graph, so the
             # overflow is surfaced instead — flush_compaction + retry, or
-            # grow the bucket ladder.
-            if self.config.compact_window:
+            # grow the bucket ladder.  A cross-tier OptionsMismatch is
+            # different: the store DID invalidate (before any fold), so
+            # the re-detect continuation is the only way forward.
+            if self.config.compact_window and \
+                    not isinstance(ce, OptionsMismatch):
                 raise
             # rebuild the updated graph at full precision and re-detect.
             # The old entry is already invalidated, so this continuation
@@ -495,9 +509,11 @@ class ServiceFrontend:
 
     # -- dispatch ---------------------------------------------------------
     def collect(self, *, force: bool = False) -> List[Batch]:
-        """Compose every ready bucket batch (weighted DRR across tenants)
-        plus every ready warm-update batch; loops until no bucket is
-        ready, so a backlog drains in batch-size-wide slices."""
+        """Compose every ready group batch — a group is (bucket, tier),
+        so each composed batch is homogeneous in its quality tier and
+        weighted DRR still arbitrates tenants within it — plus every
+        ready warm-update batch; loops until no group is ready, so a
+        backlog drains in batch-size-wide slices."""
         batches: List[Batch] = []
         if self.telemetry.enabled:
             for t in self.admission.tenants():
@@ -506,10 +522,10 @@ class ServiceFrontend:
                                      {"tenant": t})
         while True:
             got = 0
-            for bucket in self.admission.ready_buckets(self.clock(),
-                                                       force=force):
+            for bucket, alg in self.admission.ready_groups(self.clock(),
+                                                           force=force):
                 t_c0 = self.clock()
-                reqs = self.admission.compose(bucket)
+                reqs = self.admission.compose(bucket, algorithm=alg)
                 t_c1 = self.clock()
                 if reqs:
                     for r in reqs:
@@ -646,6 +662,9 @@ class ServiceFrontend:
         if not reqs:
             return 0
         res_mgr = self.resilience
+        # composed batches are tier-homogeneous (admission groups by
+        # (bucket, tier)), so the whole batch dispatches on one algorithm
+        alg = reqs[0].algorithm
         if not res_mgr.allow(bucket):
             return self._shed(bucket, reqs, BreakerOpen(
                 f"bucket {bucket.n_cap}x{bucket.m_cap} breaker is open"))
@@ -653,7 +672,7 @@ class ServiceFrontend:
             results = res_mgr.dispatch(
                 "detect", bucket,
                 lambda: self.engine.detect_batch(
-                    [r.graph for r in reqs],
+                    [r.graph for r in reqs], algorithm=alg,
                     fault_ids=[r.graph_id for r in reqs]),
                 deadline=self._batch_deadline(reqs))
         except Exception as e:
@@ -672,6 +691,7 @@ class ServiceFrontend:
                     req.graph_id, req.graph, res.C,
                     n_communities=res.n_communities,
                     n_disconnected=res.n_disconnected, q=res.q,
+                    algorithm=alg,
                 ))
             except Exception as e:
                 # commit failed after retries: this one request degrades
@@ -682,6 +702,10 @@ class ServiceFrontend:
             self.metrics.observe("detect", now - req.t_submit, now,
                                  tenant=req.tenant)
             self.metrics.edges_processed += float(live_edges(req.graph))
+            if self.telemetry.enabled:
+                self.telemetry.counter(
+                    "detect_served_tier", 1,
+                    {"tier": alg, "tenant": req.tenant})
             if tr is not None:
                 tr.mark("store-commit", t_s0, t_s1)
                 # resolve closes the trace just before the future
@@ -723,8 +747,11 @@ class ServiceFrontend:
                 # ids past the rebuilt vertex set) — that must fail these
                 # futures, not the whole dispatch.  Under deferred
                 # compaction there is no rebuild (the entry survived; see
-                # submit_update): the overflow fails these futures.
-                if self.config.compact_window:
+                # submit_update): the overflow fails these futures —
+                # except a cross-tier OptionsMismatch, whose entry the
+                # store already invalidated (re-detect is the only path).
+                if self.config.compact_window and \
+                        not isinstance(ce, OptionsMismatch):
                     for r in rs:
                         self.metrics.fail(r.tenant)
                         r.future.set_exception(ce)
@@ -1021,13 +1048,15 @@ class AsyncCommunityService:
     async def submit_detect(self, graph_id: str, graph: Graph, *,
                             tenant: str = DEFAULT_TENANT, priority: int = 0,
                             deadline_s: Optional[float] = None,
+                            algorithm: Optional[str] = None,
                             block: bool = True) -> DetectionFuture:
         loop = asyncio.get_running_loop()
         while True:
             try:
                 fut = self.frontend.submit_detect(
                     graph_id, graph, tenant=tenant, priority=priority,
-                    deadline_s=deadline_s, count_reject=not block)
+                    deadline_s=deadline_s, algorithm=algorithm,
+                    count_reject=not block)
             except QueueFull:
                 if not block:
                     raise

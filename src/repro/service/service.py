@@ -96,12 +96,15 @@ class CommunityService:
     # -- request entry points ---------------------------------------------
     def submit_detect(self, graph_id: str, graph: Graph, *,
                       tenant: str = DEFAULT_TENANT, priority: int = 0,
-                      deadline_s: Optional[float] = None) -> str:
+                      deadline_s: Optional[float] = None,
+                      algorithm: Optional[str] = None) -> str:
         """Queue a detection request; returns the (monotonic) request id.
+        ``algorithm`` pins a portfolio tier ('fast' | 'standard' |
+        'max-quality'); None resolves through the config's tier rules.
         Raises :class:`QueueFull` at the tenant's queue bound."""
         fut = self.frontend.submit_detect(
             graph_id, graph, tenant=tenant, priority=priority,
-            deadline_s=deadline_s)
+            deadline_s=deadline_s, algorithm=algorithm)
         return fut.req_id
 
     def submit_update(self, graph_id: str, updates, *,
@@ -119,10 +122,12 @@ class CommunityService:
             graph_id, updates, tenant=tenant).kind == "update"
 
     def detect(self, graph_id: str, graph: Graph, *,
-               tenant: str = DEFAULT_TENANT) -> DetectionFuture:
+               tenant: str = DEFAULT_TENANT,
+               algorithm: Optional[str] = None) -> DetectionFuture:
         """Futures variant of ``submit_detect`` for sync callers that want
         the handle; pump/drain still drives dispatch."""
-        return self.frontend.submit_detect(graph_id, graph, tenant=tenant)
+        return self.frontend.submit_detect(graph_id, graph, tenant=tenant,
+                                           algorithm=algorithm)
 
     # -- dispatch ---------------------------------------------------------
     def pump(self, *, force: bool = False) -> int:

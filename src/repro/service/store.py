@@ -100,6 +100,14 @@ class StoreEntry:
     # (edgeless own-label singletons) but not yet compacted away; sorted.
     # Each inflates n_communities by one until the flush subtracts it.
     deferred: np.ndarray = dataclasses.field(default_factory=_empty_ids)
+    # producing portfolio tier + the full options identity it was computed
+    # under (DetectOptions.result_key).  The warm path checks the key and
+    # refuses to continue a partition produced under a different tier or
+    # backend configuration (see OptionsMismatch) — silently refining a
+    # fast-tier partition with the standard warm path would hand out a
+    # result whose QualityContract lies about its provenance.
+    algorithm: str = "standard"
+    cache_key: Optional[tuple] = None
 
     @property
     def n_live_communities(self) -> int:
@@ -141,6 +149,14 @@ class UpdatePlan:
 class CapacityExceeded(Exception):
     """Update does not fit the entry's bucket (edge slots or vertex
     capacity); re-bucket + recompute."""
+
+
+class OptionsMismatch(CapacityExceeded):
+    """The stored partition was produced under a different options
+    identity (portfolio tier / backend key) than the store's warm path
+    runs under.  Warm-updating it would cross tiers, so the entry is
+    invalidated and the caller must re-detect the updated graph — the
+    same continuation as a capacity overflow, hence the subclassing."""
 
 
 class ResultStore:
@@ -229,7 +245,9 @@ class ResultStore:
     # -- basic CRUD -------------------------------------------------------
     def put(self, graph_id: str, graph: Graph, C: np.ndarray, *,
             n_communities: int, n_disconnected: int, q: float,
-            deferred=None, _notify: bool = True) -> StoreEntry:
+            algorithm: Optional[str] = None, deferred=None,
+            _notify: bool = True) -> StoreEntry:
+        alg = self.options.algorithm if algorithm is None else algorithm
         evicted = []
         with self._lock:
             version = self._versions.get(graph_id, 0) + 1
@@ -241,6 +259,8 @@ class ResultStore:
                 q=q, t_stored=self.clock(),
                 deferred=np.sort(np.asarray(
                     deferred if deferred is not None else (), np.int64)),
+                algorithm=alg,
+                cache_key=self.options.result_key(algorithm=alg),
             )
             self._entries[graph_id] = entry
             self._entries.move_to_end(graph_id)
@@ -263,7 +283,8 @@ class ResultStore:
 
     def restore_entry(self, graph_id: str, graph: Graph, C: np.ndarray, *,
                       n_communities: int, n_disconnected: int, q: float,
-                      version: int, deferred=None) -> StoreEntry:
+                      version: int, algorithm: Optional[str] = None,
+                      deferred=None) -> StoreEntry:
         """Checkpoint-restore write: land an entry at an exact version
         WITHOUT firing the commit hook (timeline state is restored
         separately — re-observing the restore would double-count)."""
@@ -271,8 +292,8 @@ class ResultStore:
             self._versions[graph_id] = int(version) - 1
             return self.put(
                 graph_id, graph, C, n_communities=n_communities,
-                n_disconnected=n_disconnected, q=q, deferred=deferred,
-                _notify=False)
+                n_disconnected=n_disconnected, q=q, algorithm=algorithm,
+                deferred=deferred, _notify=False)
 
     def get(self, graph_id: str) -> Optional[StoreEntry]:
         with self._lock:
@@ -357,6 +378,20 @@ class ResultStore:
         entry = self.get(graph_id)       # TTL-aware; refreshes recency
         if entry is None:
             raise KeyError(graph_id)
+        # cross-tier guard: the warm path always runs the store's own
+        # options identity; an entry stamped with a different key (e.g.
+        # produced by the fast or max-quality tier) must NOT be continued
+        # here.  Invalidate + raise so the caller re-detects the updated
+        # graph — the checked-before-fold ordering leaves the entry's
+        # arrays untouched.
+        warm_key = self.options.result_key()
+        if entry.cache_key is not None and entry.cache_key != warm_key:
+            self.invalidate(graph_id)
+            raise OptionsMismatch(
+                f"{graph_id!r}: stored partition was produced by tier "
+                f"{entry.algorithm!r} under a different options key than "
+                "the warm path; re-detect instead of a cross-tier warm "
+                "update")
         scan = self.options.resolved_scan(entry.graph.nv, entry.graph.m_cap)
         g = entry.graph
         C = np.asarray(entry.C, np.int32)
@@ -499,7 +534,8 @@ class ResultStore:
             entry = self.put(
                 plan.graph_id, plan.graph, np.asarray(C),
                 n_communities=n_communities, n_disconnected=n_disconnected,
-                q=q, deferred=plan.deferred_after, _notify=False,
+                q=q, algorithm=cur.algorithm, deferred=plan.deferred_after,
+                _notify=False,
             )
         self._fire(plan.graph_id, entry, plan)
         return entry
@@ -531,7 +567,7 @@ class ResultStore:
                 graph_id, g2, np.asarray(C2, np.int32),
                 n_communities=int(entry.n_communities) - int(dead.size),
                 n_disconnected=entry.n_disconnected, q=entry.q,
-                deferred=(), _notify=False)
+                algorithm=entry.algorithm, deferred=(), _notify=False)
             plan = UpdatePlan(
                 graph_id=graph_id, graph=g2,
                 C_prev=np.asarray(entry.C, np.int32),

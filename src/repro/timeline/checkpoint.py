@@ -46,7 +46,8 @@ def _entry_arrays(arrays, graphs_meta, gi, gid, entry, *, evicted=False):
         n_nodes=int(g.n_nodes), n_cap=int(g.n_cap), m_cap=int(g.m_cap),
         n_communities=int(entry.n_communities),
         n_disconnected=int(entry.n_disconnected),
-        q=float(entry.q), version=int(entry.version))
+        q=float(entry.q), version=int(entry.version),
+        algorithm=str(entry.algorithm))
     if evicted:
         meta["evicted"] = True
     graphs_meta.append(meta)
@@ -140,6 +141,7 @@ def restore_service_checkpoint(frontend, ckpt_dir: str, *,
             n_communities=gm["n_communities"],
             n_disconnected=gm["n_disconnected"],
             q=gm["q"], version=gm["version"],
+            algorithm=gm.get("algorithm"),
             deferred=deferred)
     tl = getattr(frontend, "timelines", None)
     tl_meta = extra.get("timeline") or {}

@@ -54,9 +54,13 @@ def test_options_hashable_and_replace():
 def test_cache_key_derivation():
     o = DetectOptions(louvain=CFG, seg_impl="xla", block_m=64)
     key = o.cache_key("bucket", 4, scan="sort")
-    assert key == ("bucket", 4, "sort", "xla", 64)
-    # per-bucket overrides win over the record's fields
-    assert o.cache_key(scan="dense", block_m=8) == ("dense", "xla", 8)
+    # the portfolio tier is part of the key: each tier compiles apart
+    assert key == ("bucket", 4, "standard", "sort", "xla", 64)
+    # per-bucket / per-request overrides win over the record's fields
+    assert o.cache_key(scan="dense", block_m=8) == \
+        ("standard", "dense", "xla", 8)
+    assert o.cache_key(algorithm="fast", scan="dense", block_m=8) == \
+        ("fast", "dense", "xla", 8)
 
 
 def test_resolved_scan_and_mesh():

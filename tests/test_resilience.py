@@ -251,11 +251,17 @@ def test_degraded_results_are_flagged():
     assert st.stale and st.staleness_s == pytest.approx(7.5)
     assert st.quality == "stale" and st.guarantee is False
     assert np.array_equal(st.C, np.asarray(entry.C))
+    # the stale contract is the PRODUCING tier's (true when committed)
+    assert st.contract is not None and st.contract.tier == "standard"
 
     lp = lpa_result("g", ring_of_cliques(n_cliques=4, clique_size=5))
     assert lp.mode == "lpa" and not lp.stale
     assert lp.quality == "degraded" and lp.guarantee is False
-    assert lp.n_communities >= 1 and lp.n_disconnected is None
+    # PR 10: the lpa mode runs the portfolio's fast tier, so
+    # n_disconnected is measured (not None) and the contract is fast's
+    assert lp.n_communities >= 1 and lp.n_disconnected is not None
+    assert lp.contract is not None and lp.contract.tier == "fast"
+    assert not lp.contract.zero_disconnected
 
 
 # ---------------------------------------------------------------------------
